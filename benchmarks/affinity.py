@@ -1,0 +1,58 @@
+"""Paper Table 2: thread-affinity / resource-sharing analogue.
+
+The paper's experiment: 48 threads packed onto 48/24/16/12 cores —
+packing threads divides per-thread cache and bandwidth, 1T/core wins
+by 3.3x.  TPU has no SMT; the corresponding resource-sharing axes are:
+
+  (a) edge-shards per chip (distributed BFS): fewer chips = more edges
+      per chip sharing one HBM pipe — we report the partition's
+      per-chip edge load and skew across device counts (the bandwidth-
+      sharing curve), plus
+
+  (b) VMEM population: kernel tile size vs working-set pressure —
+      more in-flight tiles share VMEM exactly like more threads share
+      L2.  Measured via the vectorized path's tile sweep.
+
+Output mirrors Table 2's shape: population factor -> throughput.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, graph, time_bfs
+from repro.core.bfs_distributed import partition_csr
+from repro.core.bfs_vectorized import run_bfs_vectorized
+from repro.kernels.frontier_expand import vmem_budget
+
+
+def main(scale: int = 13):
+    g = graph(scale)
+    print(f"# Table 2 analog (a): edge-shard load per chip, SCALE={scale}")
+    print("chips,mean_edges_per_chip,max_edges_per_chip,skew")
+    for chips in (4, 16, 64, 256):
+        if g.n_vertices < chips * 128:
+            continue
+        rows_sh, cs_sh = partition_csr(g, chips)
+        per = np.asarray(cs_sh)[:, -1]
+        skew = per.max() / max(per.mean(), 1)
+        print(f"{chips},{per.mean():.0f},{per.max()},{skew:.2f}")
+        emit(f"affinity.shard_skew.chips{chips}", 0.0, f"{skew:.3f}")
+
+    print(f"# Table 2 analog (b): VMEM population (tile sweep)")
+    rng = np.random.default_rng(3)
+    deg = np.asarray(g.degrees())
+    roots = rng.choice(np.nonzero(deg > 0)[0], size=2, replace=False)
+    v_pad = g.n_vertices_padded
+    w = v_pad // 32
+    for tile in (512, 1024, 4096, 16384):
+        sec = time_bfs(
+            lambda c, r, t=tile: run_bfs_vectorized(c, r, tile=t),
+            g, roots)
+        vmem = vmem_budget(w, v_pad, tile)
+        teps = g.n_edges / 2 / sec
+        emit(f"affinity.tile{tile}", sec * 1e6,
+             f"{teps:.3e}_teps_vmem{vmem//1024}KiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 10 (a-c): simd vs non-simd TEPS across graph scales.
+
+Measures harmonic-mean TEPS for the non-simd (Alg. 2) and simd
+(Alg. 3 + kernels) builds across SCALE factors, the §6.1 comparison.
+The paper's x-axis (thread count) has no CPU-container analogue, so
+the measured section sweeps SCALE, and the *distributed* scaling curve
+(the multi-chip analogue of more threads) is projected from the
+dry-run roofline artifacts of the distributed BFS (collective term vs
+edge-stream term per chip count), printed when artifacts exist.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, graph
+from repro.core.bfs_parallel import run_bfs
+from repro.core.bfs_vectorized import run_bfs_vectorized
+from repro.core.stats import run_harness
+import jax
+
+
+def main(scales=(12, 13, 14), n_roots: int = 4):
+    print(f"# Fig. 10 analog: scales={scales}")
+    out = {}
+    for scale in scales:
+        g = graph(scale)
+        for name, fn in [
+            ("nonsimd", lambda c, r: run_bfs(c, r, algorithm="nonsimd")),
+            ("simd", lambda c, r: run_bfs(c, r, algorithm="simd")),
+            ("vectorized", run_bfs_vectorized),
+        ]:
+            h = run_harness(g, fn, jax.random.PRNGKey(scale),
+                            n_roots=n_roots)
+            out[(scale, name)] = h.hmean_teps
+            emit(f"bfs_scaling.scale{scale}.{name}",
+                 h.mean_seconds * 1e6, f"{h.hmean_teps:.3e}_hmean_teps")
+
+    # distributed projection from dry-run roofline (if available)
+    for gname in ("rmat-24", "rmat-27"):
+        for mesh, chips in (("single", 256), ("multi", 512)):
+            p = Path(f"results/dryrun/bfs-{gname}__graph500__{mesh}.json")
+            if not p.exists():
+                continue
+            r = json.loads(p.read_text())
+            if r["status"] != "ok":
+                continue
+            ro = r["roofline"]
+            t_layer = max(ro["t_memory_s"], ro["t_collective_s"],
+                          ro["t_compute_s"])
+            scale = int(gname.split("-")[1])
+            edges = (1 << scale) * 16
+            # while-loop bound uses max_layers; real diameter ~7
+            teps = edges / (t_layer / 64 * 7)
+            emit(f"bfs_scaling.projected.{gname}.{mesh}", 0.0,
+                 f"{teps:.3e}_teps_bound_{ro['bottleneck']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

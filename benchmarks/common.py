@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: graph cache, timing, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import csr as csr_mod
+from repro.core import rmat
+
+_GRAPH_CACHE: dict = {}
+
+
+def graph(scale: int, edgefactor: int = 16, seed: int = 2):
+    key = (scale, edgefactor, seed)
+    if key not in _GRAPH_CACHE:
+        _GRAPH_CACHE[key] = csr_mod.from_edges(
+            rmat.generate(jax.random.PRNGKey(seed), scale, edgefactor))
+    return _GRAPH_CACHE[key]
+
+
+def time_bfs(fn, csr, roots, warmup_root=None) -> float:
+    """Mean seconds per BFS over the given roots (after warmup)."""
+    jax.block_until_ready(
+        fn(csr, int(warmup_root if warmup_root is not None
+                    else roots[0])).parent)
+    t0 = time.perf_counter()
+    for r in roots:
+        jax.block_until_ready(fn(csr, int(r)).parent)
+    return (time.perf_counter() - t0) / len(roots)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The run.py contract: ``name,us_per_call,derived`` CSV."""
+    print(f"{name},{us_per_call:.1f},{derived}")

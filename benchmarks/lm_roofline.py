@@ -1,0 +1,39 @@
+"""Roofline summary benchmark: one line per dry-run cell.
+
+Reads results/dryrun artifacts (produced by repro.launch.dryrun) and
+emits the three roofline terms + bottleneck for every (arch x shape x
+mesh) cell — the harness-level table behind EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+
+def main(results_dir: str = "results/dryrun"):
+    d = Path(results_dir)
+    files = sorted(d.glob("*.json"))
+    if not files:
+        print("# no dry-run artifacts; run: python -m repro.launch.dryrun")
+        return
+    n_ok = 0
+    for f in files:
+        r = json.loads(f.read_text())
+        tag = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        if r["status"] != "ok":
+            emit(f"lm_roofline.{tag}", 0.0,
+                 "skip" if r["status"].startswith("skip") else "FAILED")
+            continue
+        n_ok += 1
+        ro = r["roofline"]
+        t_bound = max(ro["t_compute_s"], ro["t_memory_s"],
+                      ro["t_collective_s"])
+        emit(f"lm_roofline.{tag}", t_bound * 1e6,
+             f"{ro['bottleneck']}_mfu{ro['mfu_bound']*100:.1f}%")
+    print(f"# {n_ok} ok cells")
+
+
+if __name__ == "__main__":
+    main()

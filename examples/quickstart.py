@@ -1,0 +1,78 @@
+"""Quickstart: the paper's pipeline end to end on a laptop-size graph.
+
+Generates a Graph500 RMAT graph, runs all four BFS variants (serial
+oracle, Algorithm 2, Algorithm 3 + restoration, §4 vectorized with
+Pallas kernels, hybrid), validates every tree, and prints the TEPS
+comparison table the paper's Fig. 9/10 are built from.
+
+    PYTHONPATH=src python examples/quickstart.py [--scale 14]
+"""
+import argparse
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import csr as csr_mod
+from repro.core import rmat
+from repro.core.bfs_hybrid import run_bfs_hybrid
+from repro.core.bfs_parallel import parents_graph500, run_bfs
+from repro.core.bfs_serial import bfs_serial
+from repro.core.bfs_vectorized import run_bfs_vectorized
+from repro.core.stats import run_harness
+from repro.core.validate import validate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--roots", type=int, default=8)
+    args = ap.parse_args()
+
+    print(f"== Graph500 RMAT: SCALE={args.scale} "
+          f"edgefactor={args.edgefactor}")
+    t0 = time.perf_counter()
+    edges = rmat.generate(jax.random.PRNGKey(42), args.scale,
+                          args.edgefactor)
+    g = csr_mod.from_edges(edges)
+    print(f"   |V|={g.n_vertices:,} |E|={g.n_edges:,} "
+          f"(built in {time.perf_counter()-t0:.1f}s)")
+
+    root = 1
+    while int(g.out_degree(root)) == 0:
+        root += 1
+
+    print(f"== serial oracle (Algorithm 1), root={root}")
+    p_ref, d_ref = bfs_serial(np.asarray(g.rows), np.asarray(g.colstarts),
+                              g.n_vertices, root)
+    print(f"   reached {int((d_ref >= 0).sum()):,} vertices, "
+          f"depth {int(d_ref.max())}")
+
+    variants = {
+        "nonsimd (Alg. 2)": lambda c, r: run_bfs(c, r,
+                                                 algorithm="nonsimd"),
+        "bitmap+restoration (Alg. 3)": lambda c, r: run_bfs(
+            c, r, algorithm="simd"),
+        "vectorized kernels (§4)": run_bfs_vectorized,
+        "hybrid (beyond paper)": run_bfs_hybrid,
+    }
+    for name, fn in variants.items():
+        state = fn(g, root)
+        p = parents_graph500(state, g.n_vertices)
+        res = validate(g, p, root, reference_depth=d_ref)
+        assert res.ok, f"{name}: validation failed: {res}"
+        print(f"   [valid] {name}")
+
+    print(f"== TEPS harness ({args.roots} random roots, harmonic mean)")
+    for name, fn in variants.items():
+        h = run_harness(g, fn, jax.random.PRNGKey(7),
+                        n_roots=args.roots)
+        print(f"   {name:32s} {h.summary()}")
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

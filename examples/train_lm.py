@@ -1,0 +1,98 @@
+"""End-to-end training driver: train a ~100M-param LM with the full
+production stack — data pipeline, AdamW, checkpointing, fault-tolerant
+loop — on CPU.
+
+Default is a quick demonstration (~20M params, 30 steps).  The full
+assignment setting is reproduced with:
+
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+--arch accepts any assigned architecture id; the reduced config of
+that family is scaled to the preset size.
+"""
+import argparse
+import sys
+import time
+
+import jax
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import registry
+from repro.data.tokens import DataConfig, stream
+from repro.models import lm
+from repro.models.config import param_count
+from repro.runtime.fault import FailureInjector, train_loop
+from repro.train import optimizer as opt
+from repro.train.train_step import TrainConfig, make_train_step
+
+PRESETS = {
+    # name: (n_layers, d_model, n_heads, kv, d_ff, vocab)
+    "tiny": (2, 128, 4, 2, 512, 2048),
+    "20m": (6, 384, 6, 2, 1536, 8192),
+    "100m": (12, 768, 12, 4, 3072, 32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3")
+    ap.add_argument("--preset", default="tiny", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--inject-failure", type=int, default=None,
+                    help="simulate a node failure at this step")
+    args = ap.parse_args()
+
+    L, d, h, kv, ff, v = PRESETS[args.preset]
+    cfg = registry.get(args.arch, reduced=True).with_(
+        name=f"{args.arch}-{args.preset}", dtype="float32",
+        n_layers=L, d_model=d, n_heads=h,
+        n_kv_heads=min(kv, h), head_dim=d // h, d_ff=ff, vocab_size=v,
+        vocab_chunk=1024)
+    print(f"== {cfg.name}: ~{param_count(cfg)/1e6:.0f}M params "
+          f"({cfg.family} family)")
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainConfig(adamw=opt.AdamWConfig(
+        lr=args.lr, warmup_steps=min(20, args.steps // 5),
+        total_steps=args.steps))
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    dcfg = DataConfig(batch_size=args.batch, seq_len=args.seq)
+    ckpt = CheckpointManager(args.ckpt_dir, every=max(args.steps // 5, 1))
+    injector = (FailureInjector(at_steps=(args.inject_failure,))
+                if args.inject_failure else None)
+
+    t0 = time.perf_counter()
+    last_print = [0]
+
+    class PrintingStream:
+        def __call__(self, start):
+            for step, batch in stream(cfg, dcfg, start):
+                yield step, batch
+
+    def data_fn(start):
+        return stream(cfg, dcfg, start)
+
+    stats = train_loop(
+        train_step=step_fn, params=params, opt_state=opt.init(params),
+        data_stream_fn=data_fn, ckpt=ckpt, total_steps=args.steps,
+        injector=injector)
+
+    dt = time.perf_counter() - t0
+    first = sum(stats.losses[:3]) / max(len(stats.losses[:3]), 1)
+    last = sum(stats.losses[-3:]) / max(len(stats.losses[-3:]), 1)
+    tok_s = stats.steps * args.batch * args.seq / dt
+    print(f"== done: {stats.steps} steps in {dt:.1f}s "
+          f"({tok_s:,.0f} tok/s)")
+    print(f"   loss {first:.3f} -> {last:.3f}  "
+          f"restarts={stats.restarts} stragglers={stats.stragglers}")
+    assert last < first, "loss did not decrease"
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+"""repro: BFS vectorization (Xeon Phi, 2016) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+"""Assigned architecture configs (exact) + the paper's graph configs."""

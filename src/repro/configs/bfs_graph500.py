@@ -1,0 +1,29 @@
+"""The paper's own workload configs: Graph500 RMAT graphs (§5.2).
+
+SCALE 18/19/20 with edgefactor 16 are the paper's measured points
+(Fig. 10 a-c); larger scales size the multi-chip dry-runs.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GraphConfig:
+    name: str
+    scale: int
+    edgefactor: int = 16
+    n_roots: int = 64          # paper §5.3 experimental design
+
+    @property
+    def n_vertices(self) -> int:
+        return 1 << self.scale
+
+    @property
+    def n_edges_directed(self) -> int:
+        return 2 * self.n_vertices * self.edgefactor
+
+
+GRAPHS = {
+    f"rmat-{s}": GraphConfig(f"rmat-{s}", scale=s)
+    for s in (10, 12, 14, 16, 18, 19, 20, 22, 24, 27)
+}
+PAPER_GRAPHS = ("rmat-18", "rmat-19", "rmat-20")

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: race-tolerant, vectorized BFS.
+
+Layers:
+  bitmap         bit-array frontier/visited sets (§3.3.1)
+  rmat           Graph500 Kronecker generator (§5.2)
+  csr            padded CSR + alignment policy (§3.3.1, §4.2)
+  bfs_serial     Algorithm 1 oracle
+  bfs_parallel   Algorithms 2/3 (restoration process) in jnp
+  bfs_vectorized §4 SIMD pipeline backed by Pallas kernels
+  bfs_hybrid     beyond-paper direction-optimizing BFS
+  bfs_distributed shard_map multi-chip BFS
+  validate       Graph500 soft validator (§5.3)
+  stats          64-root TEPS harness (§5.3)
+"""
+from repro.core import bitmap, csr, rmat  # noqa: F401

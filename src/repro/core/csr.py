@@ -1,0 +1,122 @@
+"""Compressed Sparse Row graph representation — paper §3.3.1, Fig. 4.
+
+``rows`` holds the concatenated adjacency lists, ``colstarts[u]`` /
+``colstarts[u+1]`` delimit vertex ``u``'s neighbors.  Adjacency lists
+are sorted, which the validator exploits for binary-searched edge
+membership tests.
+
+Data alignment (paper §4.2): the Xeon Phi wants 64-byte boundaries and
+suffers peel/remainder loops when it doesn't get them.  The TPU
+analogue is 128-lane alignment.  We therefore
+
+* pad ``rows`` to a multiple of ``LANES`` (=128) with a **sentinel
+  vertex** ``V``;
+* size every vertex-indexed array (bitmaps, P) for
+  ``padded_vertex_count(V)`` vertices; and
+* pre-mark all padding vertices as *visited* at BFS init.
+
+Padding lanes then flow through the full gather-test-mask-scatter
+pipeline and always filter out — the masks replace the paper's peel and
+remainder special cases, with zero branches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core.rmat import EdgeList
+
+LANES = 128  # TPU vector lane count; the "64-byte boundary" analogue.
+
+
+def round_up(x: int, m: int) -> int:
+    return (int(x) + m - 1) // m * m
+
+
+def padded_vertex_count(n_vertices: int) -> int:
+    """Vertex-array size: V real vertices + sentinel V + lane padding."""
+    return round_up(n_vertices + 1, LANES)
+
+
+class Csr(NamedTuple):
+    rows: jax.Array        # (n_edges_padded,) int32, sentinel-padded
+    colstarts: jax.Array   # (n_vertices + 1,) int32
+    n_vertices: int        # real vertex count V (sentinel id == V)
+    n_edges: int           # real directed edge count (un-padded)
+
+    @property
+    def n_vertices_padded(self) -> int:
+        return padded_vertex_count(self.n_vertices)
+
+    @property
+    def n_edges_padded(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_vertices
+
+    def degrees(self) -> jax.Array:
+        return self.colstarts[1:] - self.colstarts[:-1]
+
+    def out_degree(self, u) -> jax.Array:
+        return self.colstarts[u + 1] - self.colstarts[u]
+
+
+@jax.jit
+def _sort_edges(src: jax.Array, dst: jax.Array):
+    """Lexicographic (src, dst) sort via two stable passes.
+
+    Avoids the int64 composite key (x64 is disabled; E < 2^31 and
+    V < 2^31 are framework invariants, asserted in from_edges).
+    """
+    order1 = jnp.argsort(dst, stable=True)
+    src1, dst1 = src[order1], dst[order1]
+    order2 = jnp.argsort(src1, stable=True)
+    return src1[order2], dst1[order2]
+
+
+def from_edges(edges: EdgeList) -> Csr:
+    """Build a padded CSR from a COO edge list (Graph500 kernel 2)."""
+    v = edges.n_vertices
+    assert v < 2**31 and edges.src.shape[0] < 2**31, \
+        "int32 representation requires V, E < 2^31 (enable x64 beyond)"
+    src, dst = _sort_edges(edges.src, edges.dst)
+    counts = jnp.bincount(src, length=v).astype(jnp.int32)
+    colstarts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts, dtype=jnp.int32)])
+    n_edges = int(src.shape[0])
+    pad = round_up(n_edges, LANES) - n_edges
+    rows = jnp.concatenate(
+        [dst.astype(jnp.int32),
+         jnp.full((pad,), v, dtype=jnp.int32)]) if pad else dst.astype(
+             jnp.int32)
+    return Csr(rows=rows, colstarts=colstarts, n_vertices=v,
+               n_edges=n_edges)
+
+
+def init_visited(csr: Csr) -> jax.Array:
+    """Visited bitmap with every padding vertex pre-marked.
+
+    This replaces the paper's peel/remainder loop handling: sentinel
+    lanes always test as 'already visited' and drop out of the masks.
+    """
+    v_pad = csr.n_vertices_padded
+    vis = bm.zeros(v_pad)
+    pad_ids = jnp.arange(csr.n_vertices, v_pad, dtype=jnp.int32)
+    return bm.set_bits_exact(vis, pad_ids)
+
+
+def traversed_edges(csr: Csr, reached: jax.Array) -> jax.Array:
+    """Graph500 edge count for TEPS: sum of reached vertices' degrees / 2.
+
+    ``reached`` is a (V,) bool mask of vertices in the BFS tree.
+    Division by two converts directed (symmetrized) edges to the
+    undirected count the Graph500 metric uses.
+    """
+    return (jnp.where(reached, csr.degrees(), 0)
+            .sum(dtype=jnp.int32) // 2)

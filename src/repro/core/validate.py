@@ -1,0 +1,132 @@
+"""Graph500-style BFS spanning-tree validator — paper §5.3.
+
+The paper uses the Graph500 'soft' validation: five checks that do not
+prove the tree is *the* BFS tree (there are many valid ones, thanks to
+the benign race of §3.2) but catch every real bug class:
+
+  1. the root is its own parent;
+  2. the parent pointers form a forest rooted at ``root`` (no cycles)
+     — established by pointer-doubling depth computation;
+  3. every tree edge (P[v], v) is an edge of the graph;
+  4. every graph edge spans at most one BFS level, and never connects
+     a reached vertex to an unreached one (component closure);
+  5. depths are consistent: d[v] == d[P[v]] + 1.
+
+An optional sixth, stricter check compares depths against the serial
+oracle (any valid BFS tree of the same graph shares its depth array).
+
+Vectorized jnp throughout — validation of a SCALE-20 graph is itself a
+data-parallel kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import Csr
+
+
+class Validation(NamedTuple):
+    ok: bool
+    root_ok: bool
+    no_cycles: bool
+    tree_edges_exist: bool
+    edge_levels_ok: bool
+    component_closed: bool
+    depths_consistent: bool
+    depth: jax.Array          # (V,) int32, -1 for unreached
+
+
+def compute_depths(parent: jax.Array, root: int, n_vertices: int):
+    """Pointer-doubling depths. Returns (depth, acyclic_ok).
+
+    Invariant: ``d[v] == dist(v -> ptr[v])`` along the parent chain.
+    Each round: ``d[v] += d[ptr[v]]; ptr[v] = ptr[ptr[v]]`` — the root
+    self-loop contributes 0, so the recurrence is self-stabilizing and
+    needs no conditionals.  After ceil(log2 V)+1 rounds every acyclic
+    chain has collapsed onto the root; survivors indicate a cycle (or a
+    reached vertex with an unreached parent — equally a corrupt tree).
+    """
+    parent = parent.astype(jnp.int32)
+    reached = parent >= 0
+    idx = jnp.arange(n_vertices, dtype=jnp.int32)
+    ptr = jnp.where(reached, parent, idx)   # unreached: self-loop
+    ptr = ptr.at[root].set(root)
+    d = jnp.where(reached & (idx != root), 1, 0).astype(jnp.int32)
+    rounds = max(1, math.ceil(math.log2(max(n_vertices, 2))) + 1)
+    for _ in range(rounds):
+        d = d + d[ptr]
+        ptr = ptr[ptr]
+    acyclic = bool(jnp.all(~reached | (ptr == root)))
+    depth = jnp.where(reached, d, -1)
+    return depth, acyclic
+
+
+def _tree_edge_exists(csr: Csr, parent: jax.Array) -> jax.Array:
+    """For each reached non-root v, binary-search v in adj(P[v])."""
+    v_ids = jnp.arange(csr.n_vertices, dtype=jnp.int32)
+    reached = parent >= 0
+    p = jnp.where(reached, parent, 0)
+    is_root = p == v_ids
+    lo = csr.colstarts[p]
+    hi = csr.colstarts[p + 1]
+    # rows are sorted per-vertex (csr.from_edges sorts by (src, dst))
+    def find(v, lo, hi):
+        # binary search v in rows[lo:hi]
+        def body(_, state):
+            l, h = state
+            mid = (l + h) // 2
+            val = csr.rows[jnp.clip(mid, 0, csr.rows.shape[0] - 1)]
+            go_right = val < v
+            return jnp.where(go_right, mid + 1, l), jnp.where(go_right, h, mid)
+        steps = max(1, math.ceil(math.log2(max(int(csr.n_edges), 2))) + 1)
+        l, h = jax.lax.fori_loop(0, steps, body, (lo, hi))
+        found = (l < hi) & (csr.rows[jnp.clip(l, 0, csr.rows.shape[0] - 1)]
+                            == v)
+        return found
+    found = jax.vmap(find)(v_ids, lo, hi)
+    return jnp.all(~reached | is_root | found)
+
+
+def validate(csr: Csr, parent_g500: jax.Array, root: int,
+             reference_depth=None) -> Validation:
+    """Run all soft checks on a Graph500-convention parent array."""
+    v = csr.n_vertices
+    parent = jnp.asarray(parent_g500)
+    reached = parent >= 0
+
+    root_ok = bool(parent[root] == root)
+    depth, acyclic = compute_depths(parent, root, v)
+
+    tree_edges = bool(_tree_edge_exists(csr, parent))
+
+    # per-edge checks over the (symmetrized) edge list implicit in CSR
+    e_pad = csr.rows.shape[0]
+    src = jnp.repeat(jnp.arange(v, dtype=jnp.int32), csr.degrees(),
+                     total_repeat_length=e_pad)
+    dst = csr.rows
+    real = jnp.arange(e_pad) < csr.n_edges
+    s_reach = reached[jnp.clip(src, 0, v - 1)]
+    d_reach = reached[jnp.clip(dst, 0, v - 1)]
+    closure = bool(jnp.all(~real | (s_reach == d_reach)))
+    ds = depth[jnp.clip(src, 0, v - 1)]
+    dd = depth[jnp.clip(dst, 0, v - 1)]
+    levels = bool(jnp.all(~(real & s_reach & d_reach)
+                          | (jnp.abs(ds - dd) <= 1)))
+
+    p_safe = jnp.where(reached, parent, 0)
+    dc = jnp.all(~reached
+                 | (jnp.arange(v) == root)
+                 | (depth == depth[p_safe] + 1))
+    depths_consistent = bool(dc)
+    if reference_depth is not None:
+        depths_consistent = depths_consistent and bool(
+            jnp.array_equal(depth, jnp.asarray(reference_depth)))
+
+    ok = (root_ok and acyclic and tree_edges and levels and closure
+          and depths_consistent)
+    return Validation(ok, root_ok, acyclic, tree_edges, levels, closure,
+                      depths_consistent, depth)

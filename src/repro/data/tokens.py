@@ -1,0 +1,67 @@
+"""Synthetic token data pipeline.
+
+Deterministic, host-sharded, restart-safe: batch ``i`` on host ``h`` is
+a pure function of (seed, step, host), so a restarted job regenerates
+exactly the stream it would have seen — the data-side half of
+fault-tolerant training (runtime/fault.py) and the straggler story
+(no host ever waits on a data feed).
+
+The "corpus" is a Zipf-like mixture with Markov structure so losses
+actually decrease during the example runs (pure uniform tokens have
+no learnable signal).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    batch_size: int = 8          # per-host batch
+    seq_len: int = 128
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+def _zipf_logits(vocab: int) -> jax.Array:
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    return -1.1 * jnp.log(ranks)
+
+
+def batch_at(cfg: ModelConfig, dcfg: DataConfig, step: int) -> dict:
+    """The (host, step)-indexed batch. Pure function — restart safe."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(dcfg.seed), step),
+        dcfg.host_id)
+    k1, k2, k3 = jax.random.split(key, 3)
+    b, t = dcfg.batch_size, dcfg.seq_len
+    base = jax.random.categorical(
+        k1, _zipf_logits(cfg.vocab_size), shape=(b, t + 1))
+    # Markov-ish structure: with p=0.5 the next token is a fixed
+    # function of the previous one (learnable bigram signal)
+    follow = (base * 31 + 7) % cfg.vocab_size
+    coin = jax.random.bernoulli(k2, 0.5, (b, t + 1))
+    toks = jnp.where(coin, jnp.roll(follow, 1, axis=1), base)
+    toks = toks.astype(jnp.int32)
+    out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.prefix_len:
+        out["prefix"] = 0.02 * jax.random.normal(
+            k3, (b, cfg.prefix_len, cfg.d_model))
+    if cfg.encoder_layers:
+        out["src_embeddings"] = 0.02 * jax.random.normal(
+            k3, (b, max(t // 4, 8), cfg.d_model))
+    return out
+
+
+def stream(cfg: ModelConfig, dcfg: DataConfig, start_step: int = 0):
+    """Infinite restartable iterator of (step, batch)."""
+    step = start_step
+    while True:
+        yield step, batch_at(cfg, dcfg, step)
+        step += 1

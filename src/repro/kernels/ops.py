@@ -1,0 +1,68 @@
+"""Jit'd public wrappers around the Pallas BFS kernels.
+
+Selects interpret mode automatically (CPU containers validate the
+kernel bodies in Python; real TPUs compile them), pads edge streams to
+tile multiples, and enforces the VMEM budget that makes the
+bitmap-in-VMEM design legal (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitmap_kernels, frontier_expand as fe
+from repro.kernels import restoration as rest
+
+VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core
+_VMEM_HEADROOM = 0.75          # leave room for pipeline double-buffers
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def expand(nbr, cand, valid, frontier, visited, out_init, p_init, *,
+           n_vertices: int, tile: int = fe.DEFAULT_TILE,
+           check_frontier: bool = False, interpret: bool | None = None):
+    """Pad + run the frontier-expansion kernel (top-down or bottom-up)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    budget = fe.vmem_budget(visited.shape[0], p_init.shape[0], tile)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"frontier_expand working set {budget/2**20:.1f} MiB exceeds "
+            f"VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py) or reduce the tile")
+    n = cand.shape[0]
+    pad = (-n) % tile
+    if pad:
+        z = jnp.zeros((pad,), jnp.int32)
+        nbr = jnp.concatenate([nbr, z])
+        cand = jnp.concatenate([cand, z])
+        valid = jnp.concatenate([valid.astype(jnp.int32), z])
+    return fe.frontier_expand(
+        nbr, cand, valid.astype(jnp.int32), frontier, visited, out_init,
+        p_init, n_vertices=n_vertices, tile=tile,
+        check_frontier=check_frontier, interpret=interpret)
+
+
+def restore(parent, *, n_vertices: int, tile: int = rest.DEFAULT_TILE,
+            interpret: bool | None = None):
+    """Run the restoration kernel; tile auto-shrinks to divide V_pad."""
+    if interpret is None:
+        interpret = _interpret_default()
+    v_pad = parent.shape[0]
+    t = min(tile, v_pad)
+    while v_pad % t:
+        t //= 2
+    t = max(t, 32)
+    return rest.restoration(parent, n_vertices=n_vertices, tile=t,
+                            interpret=interpret)
+
+
+def popcount(words, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return bitmap_kernels.popcount(words, interpret=interpret)

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+The kernels' contract is *tile-sequential, racy-within-tile*:
+
+* the edge stream is processed in tiles of ``tile`` slots, strictly in
+  order (the TPU grid is sequential on a core);
+* within a tile, all bitmap words are read at tile start (stale reads)
+  and scattered back with last-lane-wins on duplicate word indices —
+  the paper's bit race condition (§3.3.2);
+* across tiles, updates accumulate (tile *t+1* observes tile *t*).
+
+The oracles below implement exactly that contract with plain jnp (a
+``lax.scan`` over tiles), so interpret-mode kernels must match them
+bit-for-bit.  Algorithm-level correctness never depends on the racy
+details — the restoration process repairs any interleaving — but the
+kernels must do precisely what they claim, and these oracles pin that.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitmap import WORD_MASK, WORD_SHIFT
+
+
+def _gather(words: jax.Array, idx: jax.Array) -> jax.Array:
+    return words[jnp.clip(idx, 0, words.shape[0] - 1)]
+
+
+def expand_tile(nbr, cand, valid, frontier, visited, out, parent,
+                n_vertices: int, check_frontier: bool):
+    """One tile of the gather-test-mask-scatter pipeline (Listing 1).
+
+    nbr:   (T,) parent-side vertex (u top-down; the neighbor bottom-up)
+    cand:  (T,) candidate vertex v to discover
+    valid: (T,) int32/bool lane validity (peel/remainder masking)
+    Returns (out', parent').
+    """
+    v_pad = parent.shape[0]
+    word = cand >> WORD_SHIFT
+    bit = (cand & WORD_MASK).astype(jnp.uint32)
+    vis_words = _gather(visited, word)
+    out_words = _gather(out, word)
+    bits = jnp.uint32(1) << bit
+    undiscovered = ((vis_words | out_words) & bits) == 0
+    mask = valid.astype(bool) & undiscovered
+    if check_frontier:  # bottom-up: is the neighbor in the frontier?
+        nw = nbr >> WORD_SHIFT
+        nb = (nbr & WORD_MASK).astype(jnp.uint32)
+        in_frontier = (_gather(frontier, nw) & (jnp.uint32(1) << nb)) != 0
+        mask = mask & in_frontier
+    # P[v] = u - nodes (negative marking; benign duplicate-cand race)
+    p_idx = jnp.where(mask, cand, v_pad)
+    parent = parent.at[p_idx].set(nbr - n_vertices, mode="drop")
+    # racy word scatter: stale out_words | own bit, last lane wins
+    new_words = out_words | bits
+    w_idx = jnp.where(mask, word, out.shape[0])
+    out = out.at[w_idx].set(new_words, mode="drop")
+    return out, parent
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices", "tile",
+                                             "check_frontier"))
+def frontier_expand_ref(nbr, cand, valid, frontier, visited, out_init,
+                        p_init, *, n_vertices: int, tile: int,
+                        check_frontier: bool = False):
+    """Tile-sequential oracle for the frontier-expansion kernel."""
+    n_slots = cand.shape[0]
+    assert n_slots % tile == 0
+    n_tiles = n_slots // tile
+
+    def step(carry, t):
+        out, parent = carry
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, t * tile, tile)
+        out, parent = expand_tile(sl(nbr), sl(cand), sl(valid), frontier,
+                                  visited, out, parent, n_vertices,
+                                  check_frontier)
+        return (out, parent), None
+
+    (out, parent), _ = jax.lax.scan(
+        step, (out_init, p_init), jnp.arange(n_tiles, dtype=jnp.int32))
+    return out, parent
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices",))
+def restoration_ref(parent, *, n_vertices: int):
+    """Oracle for the restoration kernel (Alg. 3 lines 15-29).
+
+    Returns (parent_fixed, delta_bitmap): every vertex with P < 0 gets
+    its bit set in delta and its parent incremented by |V|.
+    """
+    marked = parent < 0
+    fixed = jnp.where(marked, parent + n_vertices, parent)
+    bits = marked.reshape(-1, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    delta = (bits * weights).sum(axis=1, dtype=jnp.uint32)
+    return fixed, delta
+
+
+@jax.jit
+def popcount_ref(words):
+    return jax.lax.population_count(words).astype(jnp.int32).sum()

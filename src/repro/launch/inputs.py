@@ -1,0 +1,83 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — exactly what
+``jax.jit(...).lower()`` needs for the dry-run.  ``concrete_batch``
+materializes small real batches for smoke tests/examples.
+
+Conventions per family:
+  dense/moe/ssm : tokens + labels (train) / token + standing state
+  vlm           : + "prefix" (B, 256, D) SigLIP-stub patch embeddings
+  audio enc-dec : + "src_embeddings" (B, S/4, D) frame embeddings
+                  (4x acoustic downsampling convention, stubbed)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import Shape
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+S = jax.ShapeDtypeStruct
+
+
+def _frames(seq_len: int) -> int:
+    return max(seq_len // 4, 8)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    batch = {"tokens": S((b, t), jnp.int32),
+             "labels": S((b, t), jnp.int32)}
+    if cfg.prefix_len:
+        batch["prefix"] = S((b, cfg.prefix_len, cfg.d_model),
+                            jnp.float32)
+    if cfg.encoder_layers:
+        batch["src_embeddings"] = S((b, _frames(t), cfg.d_model),
+                                    jnp.float32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """serve_step inputs: one new token + the standing cache/state.
+
+    The cache covers ``shape.seq_len`` already-generated context (the
+    ring buffer truncates to the SWA window when the arch has one).
+    """
+    b = shape.global_batch
+    params_shape = jax.eval_shape(
+        lambda k: lm.init_params(cfg, k), jax.random.PRNGKey(0))
+    states = jax.eval_shape(
+        lambda p: lm.init_decode_state(p, cfg, b, shape.seq_len),
+        params_shape)
+    d = {"tokens": S((b,), jnp.int32),
+         "position": S((b,), jnp.int32),
+         "states": states}
+    if cfg.encoder_layers:
+        d["memory"] = S((b, _frames(min(shape.seq_len, 16_384)),
+                         cfg.d_model), jnp.float32)
+    return d
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Concrete batches (smoke tests, examples)
+# ---------------------------------------------------------------------------
+
+def concrete_batch(cfg: ModelConfig, key, batch: int, seq: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (batch, seq + 1), 0, cfg.vocab_size)
+    out = {"tokens": tokens[:, :-1].astype(jnp.int32),
+           "labels": tokens[:, 1:].astype(jnp.int32)}
+    if cfg.prefix_len:
+        out["prefix"] = 0.02 * jax.random.normal(
+            k2, (batch, cfg.prefix_len, cfg.d_model))
+    if cfg.encoder_layers:
+        out["src_embeddings"] = 0.02 * jax.random.normal(
+            k3, (batch, _frames(seq), cfg.d_model))
+    return out

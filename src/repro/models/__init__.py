@@ -1,0 +1,1 @@
+"""LM substrate: pure-pytree models for the assigned architecture pool."""

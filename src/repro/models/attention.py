@@ -1,0 +1,201 @@
+"""GQA attention with memory-efficient (flash-style) chunking.
+
+Features driven by ModelConfig: grouped-query/multi-query KV heads,
+qk-norm (qwen3), sliding-window (h2o-danube), RoPE, cross-attention
+(seamless decoder), KV-cache decode.  The chunked running-softmax is
+what lets 32k-token prefill lower within HBM on the dry-run meshes —
+scores never materialize beyond (B, H, q_chunk, kv_chunk).
+
+Sharding: head axes are cut over "model"; batch over "data".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+NEG_INF = -1e30
+
+
+def init(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim()
+    h, k = cfg.n_heads, cfg.n_kv_heads
+    ks = cm.split_key(key, 4)
+    params = {
+        "wq": cm.dense_init(ks[0], d, (h, hd)),
+        "wk": cm.dense_init(ks[1], d, (k, hd)),
+        "wv": cm.dense_init(ks[2], d, (k, hd)),
+        "wo": {"w": cm.truncated_normal(ks[3], (h, hd, d),
+                                        (h * hd) ** -0.5)},
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = cm.rmsnorm_init(hd)
+        params["k_norm"] = cm.rmsnorm_init(hd)
+    return params
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions, rope: bool = True):
+    dt = x.dtype
+    q = cm.dense_apply(params["wq"], x, dt)           # (B,T,H,hd)
+    k = cm.dense_apply(params["wk"], x, dt)           # (B,T,K,hd)
+    v = cm.dense_apply(params["wv"], x, dt)
+    if cfg.qk_norm:
+        q = cm.rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+        k = cm.rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads: int):
+    """(B,S,K,hd) -> (B,S,H,hd) by group broadcast."""
+    b, s, kh, hd = k.shape
+    reps = n_heads // kh
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, reps, hd)) \
+        .reshape(b, s, n_heads, hd)
+
+
+def _chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
+                       window: int | None, q_chunk: int, kv_chunk: int):
+    """Running-softmax attention. q: (B,Tq,H,D); k,v: (B,Tk,H,D)."""
+    b, tq, h, d = q.shape
+    tk = k.shape[1]
+    scale = d ** -0.5
+    q_chunk = min(q_chunk, tq)
+    kv_chunk = min(kv_chunk, tk)
+    nq = -(-tq // q_chunk)
+    nk = -(-tk // kv_chunk)
+    # pad to chunk multiples (masked out via positions)
+    def pad_t(x, n, fill=0):
+        padlen = n - x.shape[1]
+        if padlen == 0:
+            return x
+        cfgpad = [(0, 0)] * x.ndim
+        cfgpad[1] = (0, padlen)
+        return jnp.pad(x, cfgpad, constant_values=fill)
+    q = pad_t(q, nq * q_chunk)
+    k = pad_t(k, nk * kv_chunk)
+    v = pad_t(v, nk * kv_chunk)
+    q_pos = pad_t(q_pos, nq * q_chunk, fill=-1)       # padded q: masked rows
+    kv_pos = pad_t(kv_pos, nk * kv_chunk, fill=2**30)  # padded kv: future
+
+    qc = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    kc = k.reshape(b, nk, kv_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, kv_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+    kp = kv_pos.reshape(b, nk, kv_chunk).transpose(1, 0, 2)
+
+    def one_q_chunk(args):
+        qi, qpi = args                                  # (B,H,Cq,D), (B,Cq)
+
+        def kv_step(carry, args_k):
+            m, l, acc = carry
+            ki, vi, kpi = args_k
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones_like(s, dtype=bool)
+            if causal:
+                mask &= qpi[:, None, :, None] >= kpi[:, None, None, :]
+            if window is not None:
+                mask &= (qpi[:, None, :, None] - kpi[:, None, None, :]
+                         < window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, qi.shape[2]), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, qi.shape[2]), jnp.float32)
+        a0 = jnp.zeros((b, h, qi.shape[2], d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kc, vc, kp))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(one_q_chunk, (qc, qp))           # (nq,B,H,Cq,D)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, nq * q_chunk, h, d)
+    return out[:, :tq].astype(v.dtype)
+
+
+def apply(params, cfg: ModelConfig, x, positions, *, causal: bool = True):
+    """Full-sequence attention (training / prefill). x: (B,T,D)."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = shard(q, "data", None, "model", None)
+    k = shard(k, "data", None, "model", None)
+    h = cfg.n_heads
+    k, v = _repeat_kv(k, h), _repeat_kv(v, h)
+    out = _chunked_attention(
+        q, k, v, positions, positions, causal=causal,
+        window=cfg.sliding_window, q_chunk=cfg.attn_q_chunk,
+        kv_chunk=cfg.attn_kv_chunk)
+    out = shard(out, "data", None, "model", None)
+    return cm.dense_apply_out(params["wo"], out, x.dtype)
+
+
+def cross_apply(params, cfg: ModelConfig, x, memory, positions):
+    """Cross-attention: queries from x, KV from encoder memory."""
+    dt = x.dtype
+    memory = memory.astype(dt)   # frontend stubs may feed fp32
+    q = cm.dense_apply(params["wq"], x, dt)
+    k = cm.dense_apply(params["wk"], memory, dt)
+    v = cm.dense_apply(params["wv"], memory, dt)
+    k, v = _repeat_kv(k, cfg.n_heads), _repeat_kv(v, cfg.n_heads)
+    mem_pos = jnp.broadcast_to(
+        jnp.arange(memory.shape[1], dtype=jnp.int32)[None],
+        memory.shape[:2])
+    out = _chunked_attention(
+        q, k, v, positions, mem_pos, causal=False, window=None,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    return cm.dense_apply_out(params["wo"], out, dt)
+
+
+# Decode path ----------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Ring-buffer KV cache; SWA caps it at the window size."""
+    length = min(max_len, cfg.sliding_window or max_len)
+    kd = (batch, length, cfg.n_kv_heads, cfg.resolved_head_dim())
+    return {"k": jnp.zeros(kd, dtype), "v": jnp.zeros(kd, dtype),
+            "pos": jnp.zeros((batch, length), jnp.int32) - 1}
+
+
+def decode_step(params, cfg: ModelConfig, cache, x, position):
+    """One-token decode. x: (B,1,D); position: (B,) absolute index.
+
+    Returns (cache', out (B,1,D)).  The cache is a ring buffer indexed
+    by position % length, so sliding-window archs hold only the window.
+    """
+    q, k_new, v_new = _project_qkv(
+        params, cfg, x, position[:, None])
+    length = cache["k"].shape[1]
+    slot = (position % length).astype(jnp.int32)        # (B,)
+    b_idx = jnp.arange(x.shape[0])
+    cache = {
+        "k": cache["k"].at[b_idx, slot].set(k_new[:, 0]),
+        "v": cache["v"].at[b_idx, slot].set(v_new[:, 0]),
+        "pos": cache["pos"].at[b_idx, slot].set(position),
+    }
+    h = cfg.n_heads
+    k = _repeat_kv(cache["k"], h)                       # (B,S,H,hd)
+    v = _repeat_kv(cache["v"], h)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = cache["pos"] >= 0
+    mask = valid[:, None, None, :] \
+        & (cache["pos"][:, None, None, :] <= position[:, None, None, None])
+    if cfg.sliding_window is not None:
+        mask &= (position[:, None, None, None]
+                 - cache["pos"][:, None, None, :] < cfg.sliding_window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, v)
+    return cache, cm.dense_apply_out(params["wo"], out, x.dtype)

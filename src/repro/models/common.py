@@ -1,0 +1,87 @@
+"""Shared model primitives: init, norms, RoPE, embeddings, dense.
+
+Pure-pytree framework: parameters are nested dicts of jnp arrays,
+layers are ``init(key, ...) -> params`` plus ``apply(params, x, ...)``
+function pairs.  Per-layer parameter stacks carry a leading L axis and
+are driven by ``lax.scan`` (models/transformer.py) so 52-layer models
+lower to one-layer HLO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out, std: float | None = None):
+    """(d_in, *d_out) kernel with fan-in scaling (no bias, LLaMA-style)."""
+    if isinstance(d_out, int):
+        d_out = (d_out,)
+    std = std if std is not None else d_in ** -0.5
+    return {"w": truncated_normal(key, (d_in, *d_out), std)}
+
+
+def dense_apply(params, x, dtype):
+    w = params["w"].astype(dtype)
+    return jnp.einsum("...i,ij->...j", x, w.reshape(w.shape[0], -1)) \
+        .reshape(*x.shape[:-1], *w.shape[1:])
+
+
+def dense_apply_out(params, x, dtype):
+    """Attention output projection: (...,H,hd) x (H,hd,D) -> (...,D)."""
+    w = params["w"].astype(dtype)
+    return jnp.einsum("...hk,hkd->...d", x, w)
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    """fp32 statistics, cast back to input dtype (TPU best practice)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+def embedding_init(key, vocab: int, d: int):
+    return {"emb": truncated_normal(key, (vocab, d), 1.0)}
+
+
+def embedding_lookup(params, tokens, dtype):
+    return params["emb"].astype(dtype)[tokens]
+
+
+def embedding_logits(params, h):
+    """Tied read-out: (…, d) @ (d, vocab) in fp32 for stability."""
+    return jnp.einsum("...d,vd->...v", h.astype(jnp.float32),
+                      params["emb"].astype(jnp.float32))
+
+
+# RoPE ----------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, D); positions: (..., T) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., T, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def split_key(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,184 @@
+"""Public model API: init / loss / forward / decode for every config.
+
+``train_step``-facing: ``loss_fn(params, cfg, batch)`` where batch is
+  {"tokens": (B,T) int32, "labels": (B,T) int32 (-1 = ignore)}
+plus, per family:
+  vlm/audio prefix stubs:  "prefix": (B,P,D) precomputed embeddings
+  encoder-decoder:         "src_embeddings": (B,S,D) frame embeddings
+
+``serve_step``-facing: ``decode_step(params, cfg, states, tokens,
+position[, memory])`` — one token against a standing KV-cache/SSM
+state, the object the decode_* / long_* dry-run shapes lower.
+
+Cross-entropy is chunked over tokens (``cfg.vocab_chunk`` per block,
+checkpointed) with the vocabulary dimension sharded over "model", so
+the 257k-vocab archs never materialize a full (tokens, V) fp32 tensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm, transformer as tf
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = cm.split_key(key, 5)
+    p = {
+        "embed": cm.embedding_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": cm.rmsnorm_init(cfg.d_model),
+        "layers": tf.stack_init(ks[1], cfg, cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.embedding_init(ks[2], cfg.vocab_size,
+                                         cfg.d_model)
+    if cfg.encoder_layers:
+        p["encoder"] = tf.stack_init(ks[3], cfg, cfg.encoder_layers,
+                                     encoder=True)
+        p["enc_norm"] = cm.rmsnorm_init(cfg.d_model)
+    pd = jnp.dtype(cfg.param_dtype)
+    if pd != jnp.float32:   # bf16 master weights (the optimizer still
+        p = jax.tree.map(   # updates in fp32; m/v keep full precision)
+            lambda a: a.astype(pd) if a.dtype == jnp.float32 else a, p)
+    return p
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def encode(params, cfg: ModelConfig, src_embeddings):
+    """Encoder stack over stub frontend embeddings (B,S,D)."""
+    x = src_embeddings.astype(_dtype(cfg))
+    pos = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+    x, _ = tf.stack_seq(params["encoder"], cfg, x, pos, causal=False)
+    return cm.rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, prefix=None,
+                   memory=None):
+    """(B,T[,+P]) -> (hidden (B,T_total,D), aux)."""
+    x = cm.embedding_lookup(params["embed"], tokens, _dtype(cfg))
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    x = shard(x, "data", None, None)
+    pos = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+    x, aux = tf.stack_seq(params["layers"], cfg, x, pos, memory)
+    return cm.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def _readout_table(params):
+    return params.get("lm_head", params["embed"])["emb"]
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    table = _readout_table(params)
+    out = jnp.einsum("...d,vd->...v", hidden.astype(jnp.float32),
+                     table.astype(jnp.float32))
+    return shard(out, "data", None, "model")
+
+
+def chunked_ce(params, cfg: ModelConfig, hidden, labels):
+    """Token-chunked cross entropy; labels < 0 are masked."""
+    b, t, d = hidden.shape
+    h = hidden.reshape(b * t, d)
+    l = labels.reshape(b * t)
+    chunk = min(cfg.vocab_chunk, h.shape[0])
+    pad = (-h.shape[0]) % chunk
+    if pad:
+        h = jnp.concatenate([h, jnp.zeros((pad, d), h.dtype)])
+        l = jnp.concatenate([l, -jnp.ones((pad,), l.dtype)])
+    n = h.shape[0] // chunk
+    table = _readout_table(params)
+
+    def one(args):
+        hc, lc = args
+        logits = jnp.einsum("td,vd->tv", hc.astype(jnp.float32),
+                            table.astype(jnp.float32))
+        logits = shard(logits, None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[:, None], axis=-1)[:, 0]
+        return jnp.where(lc >= 0, lse - gold, 0.0)
+
+    per_tok = jax.lax.map(jax.checkpoint(one),
+                          (h.reshape(n, chunk, d), l.reshape(n, chunk)))
+    n_valid = jnp.maximum((l >= 0).sum(), 1)
+    return per_tok.sum() / n_valid
+
+
+LB_COEF = 1e-2
+Z_COEF = 1e-4
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Scalar training loss + metrics."""
+    memory = None
+    if cfg.encoder_layers:
+        memory = encode(params, cfg, batch["src_embeddings"])
+    hidden, aux = forward_hidden(params, cfg, batch["tokens"],
+                                 prefix=batch.get("prefix"),
+                                 memory=memory)
+    if cfg.prefix_len:
+        hidden = hidden[:, cfg.prefix_len:]
+    ce = chunked_ce(params, cfg, hidden, batch["labels"])
+    loss = ce + LB_COEF * aux["lb_loss"] + Z_COEF * aux["z_loss"]
+    return loss, {"ce": ce, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(params, cfg: ModelConfig, batch: int,
+                      cache_len: int):
+    """Per-layer stacked KV caches / SSM / WKV states."""
+    return tf.stack_state0(params["layers"], cfg, batch, cache_len,
+                           _dtype(cfg))
+
+
+def decode_step(params, cfg: ModelConfig, states, tokens, position,
+                memory=None):
+    """One-token serve step.
+
+    tokens: (B,) int32; position: (B,) int32 absolute positions.
+    Returns (states', logits (B,V)).
+    """
+    x = cm.embedding_lookup(params["embed"], tokens[:, None],
+                            _dtype(cfg))
+    states, x = tf.stack_decode(params["layers"], cfg, states, x,
+                                position, memory)
+    h = cm.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return states, logits_fn(params, cfg, h[:, 0])
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix=None, memory=None):
+    """Sequential prefill via the decode path (exactness over speed;
+    used by examples/tests — the dry-run shapes take the standing
+    cache as an input instead)."""
+    b, t = tokens.shape
+    x = cm.embedding_lookup(params["embed"], tokens, _dtype(cfg))
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    total = x.shape[1]
+    states = init_decode_state(params, cfg, b, total)
+    logits = None
+
+    def step(carry, i):
+        states = carry
+        pos = jnp.full((b,), i, jnp.int32)
+        st, xi = tf.stack_decode(params["layers"], cfg, states,
+                                 x[:, i][:, None], pos, memory)
+        h = cm.rmsnorm_apply(params["final_norm"], xi, cfg.norm_eps)
+        return st, h[:, 0]
+
+    states, hs = jax.lax.scan(step, states,
+                              jnp.arange(total, dtype=jnp.int32))
+    logits = logits_fn(params, cfg, hs[-1])
+    return states, logits

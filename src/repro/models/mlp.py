@@ -1,0 +1,26 @@
+"""Gated MLPs: SwiGLU (llama-family) and GeGLU (gemma/paligemma)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.sharding import shard
+
+
+def init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = cm.split_key(key, 3)
+    return {
+        "w_gate": cm.dense_init(k1, d_model, d_ff),
+        "w_up": cm.dense_init(k2, d_model, d_ff),
+        "w_down": cm.dense_init(k3, d_ff, d_model),
+    }
+
+
+def apply(params, x, kind: str = "swiglu"):
+    act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+    gate = cm.dense_apply(params["w_gate"], x, x.dtype)
+    up = cm.dense_apply(params["w_up"], x, x.dtype)
+    hidden = act(gate) * up
+    hidden = shard(hidden, "data", None, "model")
+    return cm.dense_apply(params["w_down"], hidden, x.dtype)

@@ -1,0 +1,205 @@
+"""Mixture-of-Experts layer (GShard-style) with grouped dispatch.
+
+Covers llama4-maverick (128e top-1) and arctic (128e top-2 + parallel
+dense residual MLP).  Experts are sharded over the "model" axis; the
+dispatch/combine einsums against expert-major tensors make GSPMD insert
+the canonical all-to-all pair (verified in the dry-run HLO).
+
+Tokens are processed in *groups* (GShard's trick) so the dispatch
+tensor is (g, n, E, c) with n = moe_group_size instead of the full
+token count — the difference between a 64 MB and a 5 GB dispatch at
+train_4k scale.
+
+Connection to the paper (DESIGN.md §5): routing is a scatter with
+collisions (many tokens -> one expert slot range) and a capacity limit.
+We resolve it exactly like the BFS restoration process resolves bitmap
+races: a deterministic position-by-prefix-sum (cumsum over the group)
+instead of atomics — the same segment-sum primitive, reused.  Tokens
+overflowing capacity are dropped (their combine weight is zero), the
+standard GShard behaviour.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+
+def init(key, cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = cm.split_key(key, 5)
+    params = {
+        "router": cm.dense_init(ks[0], d, e, std=0.02),
+        "w_gate": {"w": cm.truncated_normal(ks[1], (e, d, ff), d ** -0.5)},
+        "w_up": {"w": cm.truncated_normal(ks[2], (e, d, ff), d ** -0.5)},
+        "w_down": {"w": cm.truncated_normal(ks[3], (e, ff, d),
+                                            ff ** -0.5)},
+    }
+    if cfg.dense_residual:
+        from repro.models import mlp
+        params["dense"] = mlp.init(ks[4], d,
+                                   cfg.dense_residual_ff or cfg.d_ff)
+    return params
+
+
+def _capacity(n: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(n * top_k / n_experts * factor) + 1
+    return max(4, -(-c // 4) * 4)  # align to 4
+
+
+def apply(params, cfg: ModelConfig, x):
+    """x: (B, T, D) -> (out (B,T,D), aux losses dict).
+
+    Two dispatch modes (cfg.moe_dispatch):
+      "einsum" — GShard-faithful one-hot dispatch/combine einsums (the
+        baseline; simple, but burns 2*N*E*c*D flops per layer moving
+        zeros through the MXU);
+      "sort"   — §Perf optimization: gather/scatter routing.  Tokens
+        are ordered by expert with a stable argsort, slotted by a
+        prefix-sum (the SAME deterministic collision-resolution the
+        BFS restoration process uses — DESIGN.md §5), gathered into
+        (E,c,D) expert buffers, and combined back through the inverse
+        permutation.  Flop cost: O(N log N) sort keys + O(N*D)
+        gathers — the dispatch einsums disappear from the roofline
+        (measured in EXPERIMENTS.md §Perf).  Both modes drop the same
+        overflow tokens, so outputs match (tests/test_moe_dispatch.py).
+    """
+    b, t, d = x.shape
+    total = b * t
+    n = min(cfg.moe_group_size, total)
+    g = max(total // n, 1)
+    assert g * n == total, (
+        f"token count {total} not divisible by moe_group_size {n}")
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(n, e, k, cfg.capacity_factor)
+
+    tokens = x.reshape(g, n, d)
+    tokens = shard(tokens, "data", None, None)
+    logits = jnp.einsum("gnd,de->gne", tokens.astype(jnp.float32),
+                        params["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)       # (g,n,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)          # renormalize
+
+    if cfg.moe_dispatch == "sort":
+        return _apply_sorted(params, cfg, x, tokens, probs, gate_vals,
+                             gate_idx, logits, g, n, e, k, c)
+
+    # deterministic slot assignment: prefix-sum per expert (the
+    # restoration-style replacement for an atomic counter)
+    dispatch = jnp.zeros((g, n, e, c), x.dtype)
+    combine = jnp.zeros((g, n, e, c), jnp.float32)
+    count_so_far = jnp.zeros((g, 1, e), jnp.int32)
+    for kk in range(k):
+        mask_k = jax.nn.one_hot(gate_idx[..., kk], e, dtype=jnp.int32)
+        pos = jnp.cumsum(mask_k, axis=1) - 1 + count_so_far  # (g,n,e)
+        keep = (mask_k == 1) & (pos < c)
+        slot = jax.nn.one_hot(jnp.where(keep, pos, c), c,
+                              dtype=x.dtype)             # (g,n,e,c)
+        slot = slot * keep[..., None].astype(x.dtype)
+        dispatch = dispatch + slot
+        combine = combine + slot.astype(jnp.float32) \
+            * gate_vals[..., kk][..., None, None]
+        count_so_far = count_so_far + mask_k.sum(axis=1, keepdims=True)
+
+    # dispatch: tokens -> expert-major (E, g, c, D); E cut over "model"
+    expert_in = jnp.einsum("gnec,gnd->egcd", dispatch, tokens)
+    expert_in = shard(expert_in, "model", None, None, None)
+    wg = params["w_gate"]["w"].astype(x.dtype)
+    wu = params["w_up"]["w"].astype(x.dtype)
+    wd = params["w_down"]["w"].astype(x.dtype)
+    hidden = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, wg)) \
+        * jnp.einsum("egcd,edf->egcf", expert_in, wu)
+    hidden = shard(hidden, "model", None, None, None)
+    expert_out = jnp.einsum("egcf,efd->egcd", hidden, wd)
+
+    out = jnp.einsum("gnec,egcd->gnd", combine.astype(x.dtype),
+                     expert_out)
+    out = out.reshape(b, t, d)
+
+    if cfg.dense_residual:                               # arctic
+        from repro.models import mlp
+        out = out + mlp.apply(params["dense"], x, cfg.mlp)
+
+    # aux losses: load-balance (Switch) + router z-loss
+    me = probs.mean(axis=1)                              # (g,e)
+    ce = (dispatch.sum(-1) > 0).astype(jnp.float32).mean(axis=1)
+    lb_loss = e * (me * ce).sum(-1).mean()
+    z_loss = jnp.square(jax.nn.logsumexp(logits, axis=-1)).mean()
+    return out, {"lb_loss": lb_loss, "z_loss": z_loss}
+
+
+def _expert_ffn(params, cfg: ModelConfig, expert_in, dtype):
+    """(E, g, c, D) -> (E, g, c, D) through the expert GLU stacks."""
+    wg = params["w_gate"]["w"].astype(dtype)
+    wu = params["w_up"]["w"].astype(dtype)
+    wd = params["w_down"]["w"].astype(dtype)
+    hidden = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, wg)) \
+        * jnp.einsum("egcd,edf->egcf", expert_in, wu)
+    hidden = shard(hidden, "model", None, None, None)
+    return jnp.einsum("egcf,efd->egcd", hidden, wd)
+
+
+def _apply_sorted(params, cfg: ModelConfig, x, tokens, probs, gate_vals,
+                  gate_idx, logits, g, n, e, k, c):
+    """Sort-based gather/scatter dispatch (see apply docstring)."""
+    b, t, d = x.shape
+
+    def route_group(tok, gidx, gval):
+        # (n,d), (n,k), (n,k) -> (out (n,d), counts (e,))
+        nk = n * k
+        eid = gidx.reshape(nk)                      # expert per entry
+        src = jnp.tile(jnp.arange(n, dtype=jnp.int32)[:, None],
+                       (1, k)).reshape(nk)          # token per entry
+        order = jnp.argsort(eid, stable=True)       # tokens grouped
+        e_sorted = eid[order]
+        src_sorted = src[order]
+        # slot via prefix-sum (restoration-style collision resolution)
+        start = jnp.searchsorted(e_sorted,
+                                 jnp.arange(e, dtype=jnp.int32),
+                                 side="left").astype(jnp.int32)
+        pos = jnp.arange(nk, dtype=jnp.int32) - start[e_sorted]
+        keep = pos < c
+        slot = jnp.where(keep, e_sorted * c + pos, e * c)
+        # gather tokens into (e*c, d) expert buffers (scatter: unique
+        # slots by construction — deterministic, no races)
+        buf = jnp.zeros((e * c, d), tok.dtype) \
+            .at[slot].set(tok[src_sorted], mode="drop")
+        counts = jnp.bincount(e_sorted, length=e)
+        return buf.reshape(e, c, d), (order, keep, slot, src_sorted,
+                                      counts)
+
+    routed = jax.vmap(route_group)(tokens, gate_idx, gate_vals)
+    expert_in = routed[0].transpose(1, 0, 2, 3)      # (e,g,c,d)
+    expert_in = shard(expert_in, "model", None, None, None)
+    expert_out = _expert_ffn(params, cfg, expert_in, x.dtype)
+    out_buf = expert_out.transpose(1, 0, 2, 3).reshape(g, e * c, d)
+
+    def combine_group(buf, meta, gval):
+        order, keep, slot, src_sorted, counts = meta
+        picked = buf[jnp.clip(slot, 0, e * c - 1)] \
+            * keep[:, None].astype(buf.dtype)        # (n*k, d)
+        # invert the sort: entry j came from (token src_sorted[j],
+        # choice order[j] % k); weight and scatter-add back
+        weights = gval.reshape(n * k)[order].astype(buf.dtype)
+        out = jnp.zeros((n, d), buf.dtype) \
+            .at[src_sorted].add(picked * weights[:, None])
+        return out
+
+    out = jax.vmap(combine_group)(out_buf, routed[1], gate_vals)
+    out = out.reshape(b, t, d)
+    if cfg.dense_residual:                           # arctic
+        from repro.models import mlp
+        out = out + mlp.apply(params["dense"], x, cfg.mlp)
+
+    counts = routed[1][4]                            # (g,e)
+    me = probs.mean(axis=1)
+    ce = counts.astype(jnp.float32) / (n * k)
+    lb_loss = e * (me * ce).sum(-1).mean()
+    z_loss = jnp.square(jax.nn.logsumexp(logits, axis=-1)).mean()
+    return out, {"lb_loss": lb_loss, "z_loss": z_loss}

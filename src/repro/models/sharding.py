@@ -1,0 +1,60 @@
+"""Sharding annotations decoupled from model code.
+
+Model code calls ``shard(x, "data", None, "model")`` at the natural
+cut points; outside a mesh context (CPU unit tests) these are no-ops,
+under ``with mesh:`` in the launchers they become
+``with_sharding_constraint`` with the mesh's axis names.
+
+Logical axes:
+  "data"   — batch (mapped to the physical ('pod', 'data') axes)
+  "model"  — tensor-parallel (heads / ff hidden / vocab / experts)
+  "seq"    — optional sequence parallelism (mapped to 'data' for
+             prefill shapes; see EXPERIMENTS §Perf)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> dict | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: dict[str, tuple[str, ...] | str | None]):
+    """Map logical axis names to physical mesh axes for this scope.
+
+    Example: {"data": ("pod", "data"), "model": "model"}.
+    """
+    prev = _rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def resolve(*logical: str | None) -> P:
+    """Logical names -> PartitionSpec under the active rules."""
+    rules = _rules() or {}
+    return P(*[rules.get(a) if a is not None else None for a in logical])
+
+
+def shard(x, *logical: str | None):
+    """Constrain ``x`` (no-op outside a mesh / without rules)."""
+    if _rules() is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, resolve(*logical))
+    except (ValueError, RuntimeError):
+        return x  # no mesh in scope (unit tests)
+
+
+DEFAULT_RULES = {"data": ("pod", "data"), "model": "model"}
+SINGLE_POD_RULES = {"data": "data", "model": "model"}

@@ -1,0 +1,101 @@
+"""Mamba-style selective SSM head (hymba's parallel-SSM path).
+
+Diagonal selective state space: per channel c and state dim n,
+  h_t = exp(dt_t * A)[c,n] * h_{t-1} + (dt_t * B_t)[n] * u_t[c]
+  y_t = C_t . h_t + D[c] * u_t[c]
+with dt, B, C data-dependent (the "selective" part) and a causal
+depthwise conv in front.  Training uses ``lax.associative_scan`` over
+time (parallel prefix over the affine maps), decode is the single-step
+recurrence.  The inner channel dim is cut over "model".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+
+def init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = d                       # inner width == d_model (parallel head)
+    n = cfg.ssm_state
+    ks = cm.split_key(key, 7)
+    return {
+        "in_proj": cm.dense_init(ks[0], d, 2 * d_in),
+        "conv": {"w": cm.truncated_normal(ks[1], (cfg.ssm_conv, d_in),
+                                          cfg.ssm_conv ** -0.5)},
+        "dt_proj": cm.dense_init(ks[2], d_in, d_in, std=0.01),
+        "bc_proj": cm.dense_init(ks[3], d_in, 2 * n),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n)) * 1.0),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": cm.dense_init(ks[6], d_in, d),
+    }
+
+
+def _conv_causal(w, u, init_state=None):
+    """Depthwise causal conv. u: (B,T,C); w: (K,C)."""
+    k = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    padded = jnp.concatenate([init_state, u], axis=1)
+    out = sum(padded[:, i:i + u.shape[1]] * w[i] for i in range(k))
+    return out, padded[:, -(k - 1):] if k > 1 else init_state
+
+
+def _ssm_inputs(params, cfg: ModelConfig, x, conv_state=None):
+    u, z = jnp.split(cm.dense_apply(params["in_proj"], x, x.dtype), 2,
+                     axis=-1)
+    u = shard(u, "data", None, "model")
+    u, conv_state = _conv_causal(params["conv"]["w"].astype(x.dtype), u,
+                                 conv_state)
+    u = jax.nn.silu(u)
+    dt = jax.nn.softplus(
+        cm.dense_apply(params["dt_proj"], u, jnp.float32))
+    bc = cm.dense_apply(params["bc_proj"], u, jnp.float32)
+    b, c = jnp.split(bc, 2, axis=-1)                   # (B,T,N) each
+    a = -jnp.exp(params["a_log"])                      # (C,N)
+    decay = jnp.exp(dt[..., None] * a)                 # (B,T,C,N)
+    drive = (dt * u.astype(jnp.float32))[..., None] \
+        * b[..., None, :]                              # (B,T,C,N)
+    return u, z, c, decay, drive, conv_state
+
+
+def apply_seq(params, cfg: ModelConfig, x):
+    """Full-sequence SSM (training/prefill). x: (B,T,D)."""
+    u, z, c, decay, drive, _ = _ssm_inputs(params, cfg, x)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    y = jnp.einsum("btcn,btn->btc", h, c).astype(x.dtype)
+    y = y + params["d_skip"].astype(x.dtype) * u
+    y = y * jax.nn.silu(z)
+    y = shard(y, "data", None, "model")
+    return cm.dense_apply(params["out_proj"], y, x.dtype)
+
+
+def init_state(params, cfg: ModelConfig, batch: int, dtype):
+    d_in = params["d_skip"].shape[0]
+    return {
+        "h": jnp.zeros((batch, d_in, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype),
+    }
+
+
+def apply_step(params, cfg: ModelConfig, state, x):
+    """One-token decode. x: (B,1,D)."""
+    u, z, c, decay, drive, conv_state = _ssm_inputs(
+        params, cfg, x, state["conv"])
+    h = state["h"] * decay[:, 0] + drive[:, 0]         # (B,C,N)
+    y = jnp.einsum("bcn,bn->bc", h, c[:, 0])[:, None].astype(x.dtype)
+    y = y + params["d_skip"].astype(x.dtype) * u
+    y = y * jax.nn.silu(z)
+    out = cm.dense_apply(params["out_proj"], y, x.dtype)
+    return {"h": h, "conv": conv_state}, out

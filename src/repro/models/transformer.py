@@ -1,0 +1,236 @@
+"""Block composition + scanned layer stacks for every pool family.
+
+One decoder block covers: dense GQA (qwen3/phi3/danube/granite/
+paligemma), MoE (llama4/arctic), hybrid parallel attn+SSM (hymba),
+attention-free RWKV6, and cross-attention decoders (seamless).  Blocks
+expose three entry points with a uniform layer-state contract so a
+single ``lax.scan`` drives 52-layer stacks in one-layer HLO:
+
+  seq    : (params, x, positions[, memory])  -> (x', aux)
+  decode : (params, state, x, position[, memory]) -> (state', x')
+  state0 : initial per-layer decode state
+
+Training remat: each scan body is wrapped in ``jax.checkpoint`` so
+activation memory stays O(layers * B*T*D) instead of O(everything).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common as cm, mlp, moe, rwkv, ssm
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+ZERO_AUX = {"lb_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Single blocks
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, *, encoder: bool = False,
+               use_moe: bool | None = None):
+    d = cfg.d_model
+    ks = cm.split_key(key, 8)
+    use_moe = (cfg.moe if use_moe is None else use_moe) and not encoder
+    if cfg.attn_free and not encoder:
+        return {"ln1": cm.rmsnorm_init(d), "ln2": cm.rmsnorm_init(d),
+                "rwkv": rwkv.init(ks[0], cfg)}
+    p = {"ln1": cm.rmsnorm_init(d), "attn": attention.init(ks[0], cfg),
+         "ln2": cm.rmsnorm_init(d)}
+    if cfg.ssm and not encoder:
+        p["ssm"] = ssm.init(ks[1], cfg)
+        p["ln_attn_out"] = cm.rmsnorm_init(d)
+        p["ln_ssm_out"] = cm.rmsnorm_init(d)
+    if cfg.cross_attention and not encoder:
+        p["ln_cross"] = cm.rmsnorm_init(d)
+        p["cross"] = attention.init(ks[2], cfg)
+    if use_moe:
+        p["moe"] = moe.init(ks[3], cfg)
+    else:
+        p["ffn"] = mlp.init(ks[3], d, cfg.d_ff)
+    return p
+
+
+def _mixer_seq(p, cfg: ModelConfig, x, positions, *, causal):
+    """Self-attention (+ parallel SSM for hymba) on normed input."""
+    xn = cm.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    a = attention.apply(p["attn"], cfg, xn, positions, causal=causal)
+    if "ssm" in p:
+        s = ssm.apply_seq(p["ssm"], cfg, xn)
+        a = 0.5 * (cm.rmsnorm_apply(p["ln_attn_out"], a, cfg.norm_eps)
+                   + cm.rmsnorm_apply(p["ln_ssm_out"], s, cfg.norm_eps))
+    return a
+
+
+def block_seq(p, cfg: ModelConfig, x, positions, memory=None, *,
+              causal: bool = True):
+    """Full-sequence block. Returns (x, aux)."""
+    if cfg.seq_parallel:
+        # Megatron-style sequence parallelism: the residual stream is
+        # seq-sharded over "model" between blocks, so GSPMD lowers each
+        # TP boundary to reduce-scatter (+ all-gather where attention
+        # needs the full sequence) — half the wire of plain all-reduce
+        x = shard(x, "data", "model", None)
+    if "rwkv" in p:
+        st = rwkv.init_block_state(cfg, x.shape[0], x.dtype)
+        tm_out, _, _ = rwkv.time_mix_seq(
+            p["rwkv"]["time_mix"], cfg,
+            cm.rmsnorm_apply(p["ln1"], x, cfg.norm_eps),
+            st["shift_t"], st["wkv"])
+        x = x + tm_out
+        cm_out, _ = rwkv.channel_mix(
+            p["rwkv"]["channel_mix"],
+            cm.rmsnorm_apply(p["ln2"], x, cfg.norm_eps), st["shift_c"])
+        return x + cm_out, dict(ZERO_AUX)
+
+    x = x + _mixer_seq(p, cfg, x, positions, causal=causal)
+    if cfg.seq_parallel:
+        x = shard(x, "data", "model", None)   # RS after attn residual
+    if "cross" in p and memory is not None:
+        xn = cm.rmsnorm_apply(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attention.cross_apply(p["cross"], cfg, xn, memory,
+                                      positions)
+    xn = cm.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        f, aux = moe.apply(p["moe"], cfg, xn)
+    else:
+        f, aux = mlp.apply(p["ffn"], xn, cfg.mlp), dict(ZERO_AUX)
+    return x + f, aux
+
+
+def block_state0(p, cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Initial decode state matching this block's structure."""
+    st = {}
+    if "rwkv" in p:
+        st["rwkv"] = rwkv.init_block_state(cfg, batch, dtype)
+        return st
+    st["kv"] = attention.init_cache(cfg, batch, max_len, dtype)
+    if "ssm" in p:
+        st["ssm"] = ssm.init_state(p["ssm"], cfg, batch, dtype)
+    return st
+
+
+def block_decode(p, cfg: ModelConfig, st, x, position, memory=None):
+    """One-token block step. x: (B,1,D). Returns (st', x')."""
+    if "rwkv" in p:
+        r = st["rwkv"]
+        tm_out, sh_t, wkv = rwkv.time_mix_step(
+            p["rwkv"]["time_mix"], cfg,
+            cm.rmsnorm_apply(p["ln1"], x, cfg.norm_eps),
+            r["shift_t"], r["wkv"])
+        x = x + tm_out
+        cm_in = cm.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        cm_out, sh_c = rwkv.channel_mix(p["rwkv"]["channel_mix"], cm_in,
+                                        r["shift_c"])
+        # token-shift states carry the *normed* inputs, matching seq
+        st = {"rwkv": {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}}
+        return st, x + cm_out
+
+    xn = cm.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    kv, a = attention.decode_step(p["attn"], cfg, st["kv"], xn, position)
+    new_st = {"kv": kv}
+    if "ssm" in p:
+        s_st, s = ssm.apply_step(p["ssm"], cfg, st["ssm"], xn)
+        new_st["ssm"] = s_st
+        a = 0.5 * (cm.rmsnorm_apply(p["ln_attn_out"], a, cfg.norm_eps)
+                   + cm.rmsnorm_apply(p["ln_ssm_out"], s, cfg.norm_eps))
+    x = x + a
+    if "cross" in p and memory is not None:
+        xc = cm.rmsnorm_apply(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attention.cross_apply(p["cross"], cfg, xc, memory,
+                                      position[:, None])
+    xn = cm.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        f, _ = moe.apply(p["moe"], cfg, xn)
+    else:
+        f = mlp.apply(p["ffn"], xn, cfg.mlp)
+    return new_st, x + f
+
+
+# ---------------------------------------------------------------------------
+# Scanned stacks
+#
+# Representation: a TUPLE of per-position stacked trees.  With
+# moe_stride == s, layer g*s + j lives in element j stacked over the
+# n_layers/s scan groups — heterogeneous interleavings (llama4's
+# dense/MoE alternation) scan as one group of s blocks per step.
+# Homogeneous models are the 1-tuple case.
+# ---------------------------------------------------------------------------
+
+def _stride(cfg: ModelConfig, encoder: bool) -> int:
+    return cfg.moe_stride if (cfg.moe and cfg.moe_stride > 1
+                              and not encoder) else 1
+
+
+def stack_init(key, cfg: ModelConfig, n_layers: int, *,
+               encoder: bool = False):
+    stride = _stride(cfg, encoder)
+    assert n_layers % stride == 0
+    keys = cm.split_key(key, n_layers)
+    blocks = [
+        block_init(k, cfg, encoder=encoder,
+                   use_moe=cfg.moe and (i % stride == stride - 1))
+        for i, k in enumerate(keys)
+    ]
+    return tuple(
+        jax.tree.map(lambda *xs: jnp.stack(xs), *blocks[j::stride])
+        for j in range(stride))
+
+
+def stack_seq(stacked, cfg: ModelConfig, x, positions, memory=None, *,
+              causal: bool = True):
+    """scan over layer groups; aux accumulated. Returns (x, aux)."""
+    def body(carry, group_params):
+        h, lb, zl = carry
+        for bp in group_params:
+            h, aux = block_seq(bp, cfg, h, positions, memory,
+                               causal=causal)
+            lb = lb + aux["lb_loss"]
+            zl = zl + aux["z_loss"]
+        return (h, lb, zl), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        (x, lb, zl), _ = jax.lax.scan(
+            body, (x, jnp.float32(0.0), jnp.float32(0.0)), stacked)
+    else:
+        n = jax.tree.leaves(stacked[0])[0].shape[0]
+        carry = (x, jnp.float32(0.0), jnp.float32(0.0))
+        for i in range(n):
+            group = jax.tree.map(lambda a, i=i: a[i], stacked)
+            carry, _ = body(carry, group)
+        x, lb, zl = carry
+    return x, {"lb_loss": lb, "z_loss": zl}
+
+
+def stack_state0(stacked, cfg: ModelConfig, batch: int, max_len: int,
+                 dtype):
+    out = []
+    for sub in stacked:
+        layer0 = jax.tree.map(lambda a: a[0], sub)
+        st = block_state0(layer0, cfg, batch, max_len, dtype)
+        n = jax.tree.leaves(sub)[0].shape[0]
+        out.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy(),
+            st))
+    return tuple(out)
+
+
+def stack_decode(stacked, cfg: ModelConfig, states, x, position,
+                 memory=None):
+    """scan one token through all layer groups. Returns (states', x')."""
+    def body(h, group):
+        group_params, group_states = group
+        new_states = []
+        for bp, st in zip(group_params, group_states):
+            st, h = block_decode(bp, cfg, st, h, position, memory)
+            new_states.append(st)
+        return h, tuple(new_states)
+
+    x, new_states = jax.lax.scan(body, x, (stacked, states))
+    return new_states, x

@@ -1,0 +1,184 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on
+TPU v5e constants:
+
+  compute    = HLO_FLOPs_per_chip / 197e12        (bf16 MXU peak)
+  memory     = HLO_bytes_per_chip / 819e9         (HBM bandwidth)
+  collective = wire_bytes_per_chip / 50e9         (ICI per link)
+
+FLOPs and bytes come from ``compiled.cost_analysis()`` of the
+post-SPMD per-device module.  Collective wire bytes are parsed from
+the compiled HLO text: for each all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute we take the payload
+shape and apply the ring-algorithm wire factor over the op's
+replica-group size g:
+
+  all-reduce      2 * (g-1)/g * bytes      (reduce-scatter + all-gather)
+  all-gather      (g-1)/g * bytes          (bytes = full output)
+  reduce-scatter  (g-1)/g * bytes          (bytes = full input)
+  all-to-all      (g-1)/g * bytes
+  collective-permute  bytes
+
+Caveats, recorded once here: cost_analysis "bytes accessed" counts
+operand+result of every HLO op, which over-counts HBM for fusion-
+resident values — treat the memory term as an upper bound; collective
+bytes assume ring scheduling on a single link (v5e has multiple ICI
+links; wrap-around meshes halve hop counts), so the collective term is
+also conservative.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))        # [ngroups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return default
+
+
+def _wire_factor(op: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    return {"all-reduce": 2 * frac, "all-gather": frac,
+            "reduce-scatter": frac, "all-to-all": frac,
+            "collective-permute": 1.0}[op]
+
+
+@dataclass
+class CollectiveStats:
+    ops: dict = field(default_factory=dict)      # op -> count
+    payload_bytes: int = 0
+    wire_bytes: float = 0.0
+
+    def to_dict(self):
+        return {"ops": self.ops, "payload_bytes": self.payload_bytes,
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    """Sum payload/wire bytes of every collective in the HLO text."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-done" in line:
+            continue                   # async pair: count the start only
+        b = _shape_bytes(shape_str)
+        g = _group_size(line, default_group)
+        st.ops[op] = st.ops.get(op, 0) + 1
+        st.payload_bytes += b
+        st.wire_bytes += b * _wire_factor(op, g)
+    return st
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    wire_bytes: float
+    n_chips: int
+    model_flops: float = 0.0          # 6*N*D (or 2*N*D decode)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips * HLO flops): remat/redundancy waste."""
+        denom = self.flops * self.n_chips
+        return (self.model_flops / denom) if denom else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline-bounded MFU: useful flops / peak at t_bound."""
+        if self.t_bound == 0:
+            return 0.0
+        return self.model_flops / (self.n_chips * PEAK_FLOPS
+                                   * self.t_bound)
+
+    def to_dict(self):
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "wire_bytes_per_chip": self.wire_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops_for(kind: str, n_params_active: float, n_tokens: float,
+                    n_embedding: float = 0.0) -> float:
+    """6ND training / 2ND inference, excluding embedding lookups."""
+    body = n_params_active - n_embedding
+    per_tok = 6.0 * body if kind == "train" else 2.0 * body
+    return per_tok * n_tokens

@@ -1,0 +1,223 @@
+"""AdamW optimizer (pure pytree), schedules, clipping, ZeRO-1 sharding.
+
+No optax in the container — this is the complete implementation the
+framework ships.  State = {m, v, step}; ``zero1_specs`` produces
+PartitionSpecs that additionally cut the largest divisible dim of each
+m/v leaf over the DATA axis (optimizer-state sharding, ZeRO stage 1):
+with AdamW fp32 state being 8 bytes/param, this is what fits the
+400B-class archs on 16 GB chips (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    progress = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) \
+        * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step with global-norm clipping. Returns (params', state')."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    # separate maps (no tuple leaves: param trees may CONTAIN tuples —
+    # the layer-group representation); XLA CSEs the repeated casts
+    new_m = jax.tree.map(
+        lambda g, m: cfg.b1 * m
+        + (1 - cfg.b1) * g.astype(jnp.float32) * scale,
+        grads, state["m"])
+    new_v = jax.tree.map(
+        lambda g, v: cfg.b2 * v
+        + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32) * scale),
+        grads, state["v"])
+
+    def upd_p(p, m, v):
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    new_params = jax.tree.map(upd_p, params, new_m, new_v)
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Quantized optimizer state (bitsandbytes-style, TPU-native)
+#
+# m: int8, one fp32 scale per 128-wide block of the last dim (per-leaf
+#    scale when the last dim doesn't divide).  m is zero-centered, so
+#    symmetric int8 works.
+# v: bf16.  Symmetric int8 on the second moment zeros-out small
+#    entries within a block (measured: AdamW stalls at ~40% of the
+#    fp32 loss on a quadratic), because 1/sqrt(v) amplifies exactly
+#    the coordinates quantization killed.  bf16 keeps fp32's exponent
+#    range with ~0.4% relative error — harmless under the sqrt.
+# Net: ~3.1 B/param of state vs 8 B fp32; the difference between the
+# 400B-class archs fitting a single 256-chip pod or not.
+# Accuracy cross-checked against fp32 AdamW in
+# tests/test_optimizer_8bit.py (loss curves track within tolerance).
+# ---------------------------------------------------------------------------
+
+Q_BLOCK = 128
+
+
+def _quantize(x: jax.Array):
+    n = x.shape[-1] if x.ndim else 1
+    if x.ndim == 0 or n % Q_BLOCK != 0:
+        scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+        q = jnp.round(x / scale).astype(jnp.int8)
+        return {"q": q, "s": scale.astype(jnp.float32)}
+    blocked = x.reshape(*x.shape[:-1], n // Q_BLOCK, Q_BLOCK)
+    scale = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True) / 127.0 \
+        + 1e-12
+    q = jnp.round(blocked / scale).astype(jnp.int8)
+    return {"q": q.reshape(x.shape),
+            "s": scale.squeeze(-1).astype(jnp.float32)}
+
+
+def _dequantize(qs, like_shape):
+    q, s = qs["q"], qs["s"]
+    if q.ndim == 0 or s.ndim == 0:
+        return q.astype(jnp.float32) * s
+    blocked = q.reshape(*q.shape[:-1], q.shape[-1] // Q_BLOCK, Q_BLOCK)
+    return (blocked.astype(jnp.float32) * s[..., None]) \
+        .reshape(like_shape)
+
+
+def init_8bit(params):
+    zq = lambda p: _quantize(jnp.zeros(p.shape, jnp.float32))
+    zb = lambda p: jnp.zeros(p.shape, jnp.bfloat16)
+    return {"m": jax.tree.map(zq, params),
+            "v": jax.tree.map(zb, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+_CHUNK_ELEMS = 64 * 1024 * 1024   # loop the update on leaves above this
+
+
+def update_8bit(cfg: AdamWConfig, params, grads, state):
+    """AdamW on int8-blockwise m/v (dequant -> update -> requant).
+
+    Leaves above _CHUNK_ELEMS are updated with ``lax.map`` over their
+    leading axis (the layer-stack dim), so the fp32 dequantized
+    temporaries never exceed one layer's worth — without this, the
+    400B expert stacks spike >10 GiB of transient fp32 per leaf.
+    """
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    is_qs = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+
+    def upd(p, g, mq, vb):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * _dequantize(mq, g.shape) + (1 - cfg.b1) * g
+        v = cfg.b2 * vb.astype(jnp.float32) \
+            + (1 - cfg.b2) * jnp.square(g)
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, _quantize(m), v.astype(jnp.bfloat16)
+
+    def upd_leaf(mq, vb, p, g):
+        if p.size <= _CHUNK_ELEMS or p.ndim < 2 \
+                or mq["s"].ndim != p.ndim:
+            return upd(p, g, mq, vb)
+        n0 = p.shape[0]
+        body = lambda args: upd(args[2], args[3], args[0], args[1])
+        if n0 <= 64:                       # layer stacks: map as-is
+            return jax.lax.map(body, (mq, vb, p, g))
+        # big flat leaves (embeddings): map over a FIXED ~32-way
+        # reshape — mapping over the raw leading dim would emit a
+        # 200k-iteration loop (measured: 800 TB of HBM churn)
+        nc = next((c for c in (32, 16, 8, 4, 2) if n0 % c == 0), 1)
+        if nc == 1:
+            return upd(p, g, mq, vb)
+        rs = lambda a: a.reshape(nc, n0 // nc, *a.shape[1:])
+        parts = jax.lax.map(body, (jax.tree.map(rs, mq), rs(vb),
+                                   rs(p), rs(g)))
+        un = lambda a: a.reshape(n0, *a.shape[2:])
+        return un(parts[0]), jax.tree.map(un, parts[1]), un(parts[2])
+
+    # m goes first so is_leaf stops traversal at the {"q","s"} dicts;
+    # flatten_up_to then accepts the plain-array leaves of params/grads
+    out = {}
+    for i, name in enumerate(("p", "m", "v")):
+        out[name] = jax.tree.map(
+            lambda mq, vb, p, g, i=i: upd_leaf(mq, vb, p, g)[i],
+            state["m"], state["v"], params, grads, is_leaf=is_qs)
+    return out["p"], {"m": out["m"], "v": out["v"], "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer-state sharding over the data axis
+# ---------------------------------------------------------------------------
+
+def zero1_specs(param_spec_tree, params_shape, data_divisor: int):
+    """m/v specs: param spec + cut the largest free dim over "data".
+
+    A dim is eligible if unsharded in the param spec and divisible by
+    the data-axis size.  Falls back to the param spec (replicated over
+    data) when nothing divides — correctness never depends on it.
+    """
+    def one(spec: P, leaf):
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        if "data" in dims:
+            return P(*dims)       # FSDP leaf: data axis already used
+        best, best_size = None, 0
+        for i, (s, n) in enumerate(zip(dims, leaf.shape)):
+            if s is None and n % data_divisor == 0 and n > best_size:
+                best, best_size = i, n
+        if best is not None:
+            dims[best] = "data"
+        return P(*dims)
+
+    return jax.tree.map(one, param_spec_tree, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,106 @@
+"""The production train step: loss -> grads -> AdamW, with
+microbatched gradient accumulation, optional gradient compression, and
+the sharding constraints that make GSPMD overlap the data-parallel
+all-reduce with backward compute.
+
+This is the object the train_4k dry-run cells lower — params in,
+params out, nothing mocked.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    accum_steps: int = 1          # microbatch gradient accumulation
+    compress_grads: str | None = None   # None | "bf16"
+    opt_8bit: bool = False        # int8 block-quantized m/v
+
+
+def _compress(grads, mode):
+    """Cast gradients before the cross-replica reduction.
+
+    Under pjit the dp all-reduce materializes at the dtype flowing into
+    it; casting here halves the wire bytes ("gradient compression").
+    The optimizer re-casts to fp32, so the m/v accumulators keep full
+    precision.
+    """
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    return grads
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)."""
+    grad_fn = jax.value_and_grad(
+        lambda p, b: lm.loss_fn(p, cfg, b), has_aux=True)
+
+    def microbatched_grads(params, batch):
+        if tcfg.accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, _compress(grads, tcfg.compress_grads)
+
+        n = tcfg.accum_steps
+        micro = jax.tree.map(
+            lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+        def step(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            grads = _compress(grads, tcfg.compress_grads)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(step, (zero, jnp.float32(0.0)),
+                                        micro)
+        inv = 1.0 / n
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        return loss * inv, {"ce": loss * inv}, grads
+
+    update_fn = opt.update_8bit if tcfg.opt_8bit else opt.update
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = microbatched_grads(params, batch)
+        params, opt_state, stats = update_fn(tcfg.adamw, params, grads,
+                                             opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **stats}
+
+    return train_step
+
+
+def opt_init_for(tcfg: TrainConfig):
+    return opt.init_8bit if tcfg.opt_8bit else opt.init
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Inference-prefill: full-context forward, last-token logits."""
+    def prefill_step(params, batch):
+        memory = (lm.encode(params, cfg, batch["src_embeddings"])
+                  if cfg.encoder_layers else None)
+        hidden, _ = lm.forward_hidden(params, cfg, batch["tokens"],
+                                      prefix=batch.get("prefix"),
+                                      memory=memory)
+        return lm.logits_fn(params, cfg, hidden[:, -1])
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One-token decode against the standing cache (decode_* shapes)."""
+    def serve_step(params, states, tokens, position, memory=None):
+        return lm.decode_step(params, cfg, states, tokens, position,
+                              memory)
+    return serve_step

@@ -1,0 +1,114 @@
+"""BFS correctness: Algorithms 2/3 vs the serial oracle (Algorithm 1).
+
+Every parallel variant may return a *different* valid spanning tree
+(benign race, §3.2) — so equality is checked on the depth array, which
+all valid BFS trees share, plus the Graph500 soft validator.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csr as csr_mod
+from repro.core import rmat
+from repro.core.bfs_parallel import (parents_graph500, run_bfs, run_bfs_jit)
+from repro.core.bfs_serial import bfs_serial
+from repro.core.validate import validate
+
+
+def build(scale, key=0, edgefactor=16):
+    edges = rmat.generate(jax.random.PRNGKey(key), scale=scale,
+                          edgefactor=edgefactor)
+    return csr_mod.from_edges(edges)
+
+
+@pytest.fixture(scope="module")
+def g12():
+    return build(12)
+
+
+def check_against_oracle(csr, state, root):
+    p = parents_graph500(state, csr.n_vertices)
+    _, ref_depth = bfs_serial(np.asarray(csr.rows),
+                              np.asarray(csr.colstarts),
+                              csr.n_vertices, root)
+    res = validate(csr, p, root, reference_depth=ref_depth)
+    assert res.root_ok, "root must parent itself"
+    assert res.no_cycles, "parent pointers must be acyclic"
+    assert res.tree_edges_exist, "tree edges must exist in graph"
+    assert res.edge_levels_ok, "graph edges must span <=1 level"
+    assert res.component_closed, "must reach exactly the component"
+    assert res.depths_consistent, "depths must match the serial oracle"
+    assert res.ok
+
+
+@pytest.mark.parametrize("algorithm", ["simd", "nonsimd"])
+@pytest.mark.parametrize("root_seed", [0, 1, 2])
+def test_bucketed_driver_matches_oracle(g12, algorithm, root_seed):
+    rng = np.random.default_rng(root_seed)
+    root = int(rng.integers(0, g12.n_vertices))
+    state = run_bfs(g12, root, algorithm=algorithm)
+    check_against_oracle(g12, state, root)
+
+
+@pytest.mark.parametrize("algorithm", ["simd", "nonsimd"])
+def test_jit_while_loop_driver_matches_oracle(algorithm):
+    csr = build(9)
+    root = 5
+    state = run_bfs_jit(csr.colstarts, csr.rows, root, csr.n_vertices,
+                        algorithm)
+    check_against_oracle(csr, state, root)
+
+
+def test_drivers_agree_on_reachability(g12):
+    s1 = run_bfs(g12, 17, algorithm="simd")
+    s2 = run_bfs_jit(g12.colstarts, g12.rows, 17, g12.n_vertices, "simd")
+    p1 = np.asarray(parents_graph500(s1, g12.n_vertices))
+    p2 = np.asarray(parents_graph500(s2, g12.n_vertices))
+    np.testing.assert_array_equal(p1 >= 0, p2 >= 0)
+
+
+def test_isolated_root():
+    """A degree-0 start vertex terminates immediately (zero-TEPS run)."""
+    csr = build(8)
+    deg = np.asarray(csr.degrees())
+    isolated = np.where(deg == 0)[0]
+    if len(isolated) == 0:
+        pytest.skip("no isolated vertex at this seed")
+    root = int(isolated[0])
+    state = run_bfs(csr, root, algorithm="simd")
+    p = np.asarray(parents_graph500(state, csr.n_vertices))
+    assert p[root] == root
+    assert (p[np.arange(csr.n_vertices) != root] == -1).all()
+
+
+def test_layer_stats_shape(g12):
+    """Per-layer stats reproduce the paper's Table 1 structure."""
+    state, stats = run_bfs(g12, 3, algorithm="simd", collect_stats=True)
+    assert len(stats) >= 2
+    # frontier sizes rise then fall (small-world, §4.1)
+    sizes = [s.frontier_vertices for s in stats]
+    peak = sizes.index(max(sizes))
+    assert all(a <= b for a, b in zip(sizes[:peak], sizes[1:peak + 1]))
+    assert all(a >= b for a, b in zip(sizes[peak:], sizes[peak + 1:]))
+    # discovered vertices in layer k == frontier of layer k+1
+    for a, b in zip(stats[:-1], stats[1:]):
+        assert a.discovered == b.frontier_vertices
+
+
+def test_restoration_repairs_all_races():
+    """Adversarial graph: a hub whose neighbors share bitmap words.
+
+    Star graph: vertex 0 connected to 1..127 — all discoveries happen
+    in one layer and collide heavily within 4 words.  The racy scatter
+    alone WILL drop bits; the restoration must repair every one.
+    """
+    import jax.numpy as jnp
+    from repro.core.rmat import EdgeList
+    n = 128
+    src = jnp.asarray([0] * (n - 1) + list(range(1, n)), jnp.int32)
+    dst = jnp.asarray(list(range(1, n)) + [0] * (n - 1), jnp.int32)
+    csr = csr_mod.from_edges(EdgeList(src, dst, n))
+    state = run_bfs(csr, 0, algorithm="simd")
+    p = np.asarray(parents_graph500(state, csr.n_vertices))
+    assert (p[1:] == 0).all() and p[0] == 0

@@ -1,0 +1,134 @@
+"""Unit + property tests for the bitmap substrate (§3.3.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitmap as bm
+
+
+def test_num_words():
+    assert bm.num_words(1) == 1
+    assert bm.num_words(32) == 1
+    assert bm.num_words(33) == 2
+    assert bm.num_words(1_048_576) == 32_768  # paper's §3.3.1 example
+
+
+def test_paper_compression_example():
+    # §3.3.1: 1,048,576 vertices -> 131,072 bytes as a bitmap
+    assert bm.num_words(1_048_576) * 4 == 131_072
+
+
+def test_word_and_bit():
+    w, b = bm.word_and_bit(jnp.asarray([0, 31, 32, 28, 30, 95]))
+    np.testing.assert_array_equal(np.asarray(w), [0, 0, 1, 0, 0, 2])
+    np.testing.assert_array_equal(np.asarray(b), [0, 31, 0, 28, 30, 31])
+
+
+def test_fig5_example():
+    """Paper Fig. 5: vertices 28 and 30 land in word 0."""
+    bitmap = bm.set_bits_exact(bm.zeros(128), jnp.asarray([28, 30]))
+    assert int(bitmap[0]) == (1 << 28) | (1 << 30)
+    assert int(bm.popcount(bitmap)) == 2
+
+
+def test_set_test_roundtrip():
+    vs = jnp.asarray([0, 5, 9, 63, 64, 127])
+    bitmap = bm.set_bits_exact(bm.zeros(128), vs)
+    assert bool(bm.test_bits(bitmap, vs).all())
+    others = jnp.asarray([1, 4, 62, 65, 126])
+    assert not bool(bm.test_bits(bitmap, others).any())
+
+
+def test_set_bits_exact_handles_duplicates():
+    vs = jnp.asarray([5, 5, 5, 9])
+    bitmap = bm.set_bits_exact(bm.zeros(32), vs)
+    assert int(bitmap[0]) == (1 << 5) | (1 << 9)
+
+
+def test_set_bits_racy_same_word_race():
+    """Fig. 6: two lanes updating word 0 -> one bit may be lost."""
+    vs = jnp.asarray([5, 9])  # same word
+    bitmap = bm.set_bits_racy(bm.zeros(32), vs)
+    val = int(bitmap[0])
+    # exactly the corrupted-word model: at least one bit lands,
+    # and nothing outside the two bits is set
+    assert val != 0
+    assert val | ((1 << 5) | (1 << 9)) == (1 << 5) | (1 << 9)
+
+
+def test_set_bits_racy_distinct_words_exact():
+    vs = jnp.asarray([5, 37, 69])  # all different words
+    bitmap = bm.set_bits_racy(bm.zeros(128), vs)
+    assert bool(bm.test_bits(bitmap, vs).all())
+    assert int(bm.popcount(bitmap)) == 3
+
+
+def test_valid_mask_drops_lanes():
+    vs = jnp.asarray([3, 7, 11])
+    valid = jnp.asarray([True, False, True])
+    bitmap = bm.set_bits_exact(bm.zeros(32), vs, valid)
+    assert int(bitmap[0]) == (1 << 3) | (1 << 11)
+    # racy variant: use distinct words so no race masks the check
+    vs2 = jnp.asarray([3, 39, 75])
+    bitmap_r = bm.set_bits_racy(bm.zeros(128), vs2, valid)
+    assert int(bitmap_r[0]) == (1 << 3)
+    assert int(bitmap_r[1]) == 0          # masked lane dropped
+    assert int(bitmap_r[2]) == (1 << 11)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    dense = jnp.asarray(rng.random(256) < 0.3)
+    assert bool((bm.unpack_bool(bm.pack_bool(dense)) == dense).all())
+
+
+def test_compact():
+    vs = jnp.asarray([3, 64, 100])
+    bitmap = bm.set_bits_exact(bm.zeros(128), vs)
+    out = bm.compact(bitmap, size=8, fill_value=128)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  [3, 64, 100, 128, 128, 128, 128, 128])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=511), min_size=0,
+                max_size=64))
+def test_property_exact_set_matches_python_set(vertices):
+    """set_bits_exact == the mathematical set union, always."""
+    bitmap = bm.set_bits_exact(bm.zeros(512),
+                               jnp.asarray(vertices, jnp.int32)
+                               if vertices else jnp.zeros((0,), jnp.int32))
+    want = set(vertices)
+    got = {i for i in range(512)
+           if bool(bm.test_bits(bitmap, jnp.asarray([i]))[0])}
+    assert got == want
+    assert int(bm.popcount(bitmap)) == len(want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=511), min_size=1,
+                max_size=64))
+def test_property_racy_is_subset_superset_bounds(vertices):
+    """Racy scatter: result ⊆ requested set, ≥1 bit per touched word."""
+    vs = jnp.asarray(vertices, jnp.int32)
+    bitmap = bm.set_bits_racy(bm.zeros(512), vs)
+    want = set(vertices)
+    got = {i for i in range(512)
+           if bool(bm.test_bits(bitmap, jnp.asarray([i]))[0])}
+    assert got <= want                        # never invents bits
+    touched_words = {v // 32 for v in want}
+    got_words = {v // 32 for v in got}
+    assert got_words == touched_words        # every word got >=1 lane
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=500))
+def test_property_compact_inverts_set(n):
+    rng = np.random.default_rng(n)
+    vs = np.unique(rng.integers(0, 512, size=n)).astype(np.int32)
+    bitmap = bm.set_bits_exact(bm.zeros(512), jnp.asarray(vs))
+    out = np.asarray(bm.compact(bitmap, size=512, fill_value=512))
+    np.testing.assert_array_equal(out[:len(vs)], np.sort(vs))
+    assert (out[len(vs):] == 512).all()

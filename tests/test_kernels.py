@@ -1,0 +1,171 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles.
+
+Each Pallas kernel is swept over shapes and compared bit-exactly with
+its ref.py oracle (the tile-sequential racy contract), plus property
+tests of the invariants that BFS correctness actually relies on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitmap as bm
+from repro.kernels import ops, ref
+from repro.kernels.frontier_expand import frontier_expand
+from repro.kernels.restoration import restoration
+from repro.kernels.bitmap_kernels import popcount
+
+
+def random_case(seed, n_slots, v_pad, frontier_density=0.1):
+    rng = np.random.default_rng(seed)
+    n_vertices = v_pad - 128
+    nbr = rng.integers(0, n_vertices, n_slots).astype(np.int32)
+    cand = rng.integers(0, n_vertices, n_slots).astype(np.int32)
+    valid = (rng.random(n_slots) < 0.9).astype(np.int32)
+    w = v_pad // 32
+    frontier = rng.integers(0, 2**32, w, dtype=np.uint32)
+    visited = (rng.integers(0, 2**32, w, dtype=np.uint32)
+               & rng.integers(0, 2**32, w, dtype=np.uint32))
+    out0 = np.zeros(w, np.uint32)
+    p0 = np.full(v_pad, n_vertices, np.int32)
+    return (jnp.asarray(nbr), jnp.asarray(cand), jnp.asarray(valid),
+            jnp.asarray(frontier), jnp.asarray(visited),
+            jnp.asarray(out0), jnp.asarray(p0), n_vertices)
+
+
+@pytest.mark.parametrize("n_slots,tile", [(1024, 256), (2048, 1024),
+                                          (4096, 512), (512, 512)])
+@pytest.mark.parametrize("check_frontier", [False, True])
+def test_expand_matches_oracle(n_slots, tile, check_frontier):
+    nbr, cand, valid, frontier, visited, out0, p0, nv = random_case(
+        n_slots * 7 + tile, n_slots, v_pad=2048)
+    out_k, p_k = frontier_expand(
+        nbr, cand, valid, frontier, visited, out0, p0, n_vertices=nv,
+        tile=tile, check_frontier=check_frontier, interpret=True)
+    out_r, p_r = ref.frontier_expand_ref(
+        nbr, cand, valid, frontier, visited, out0, p0, n_vertices=nv,
+        tile=tile, check_frontier=check_frontier)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
+def test_expand_invariants():
+    """The guarantees restoration relies on, regardless of races:
+    1. every lane that passes the mask writes P (never lost);
+    2. P entries are u - |V| (negative) for discovered, untouched else;
+    3. out bits ⊆ {masked candidates}; every touched word has ≥1 bit.
+    """
+    nbr, cand, valid, frontier, visited, out0, p0, nv = random_case(
+        3, 4096, v_pad=1024)
+    out_k, p_k = frontier_expand(
+        nbr, cand, valid, frontier, visited, out0, p0, n_vertices=nv,
+        tile=512, interpret=True)
+    p_np = np.asarray(p_k)
+    changed = p_np != np.asarray(p0)
+    assert (p_np[changed] < 0).all()
+    parents = p_np[changed] + nv
+    assert ((parents >= 0) & (parents < nv)).all()
+    # every set bit corresponds to a vertex with a written P
+    out_dense = np.asarray(bm.unpack_bool(out_k))
+    assert (~out_dense | changed[:len(out_dense)]).all()
+
+
+def test_expand_vmem_budget_guard():
+    big_p = jnp.zeros((8 * 1024 * 1024,), jnp.int32)  # 32 MiB P
+    w = big_p.shape[0] // 32
+    z32 = jnp.zeros((1024,), jnp.int32)
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.expand(z32, z32, z32, jnp.zeros((w,), jnp.uint32),
+                   jnp.zeros((w,), jnp.uint32), jnp.zeros((w,), jnp.uint32),
+                   big_p, n_vertices=big_p.shape[0] - 128)
+
+
+def test_ops_expand_pads_stream():
+    nbr, cand, valid, frontier, visited, out0, p0, nv = random_case(
+        11, 1000, v_pad=1024)  # 1000 not a tile multiple
+    out_k, p_k = ops.expand(nbr, cand, valid, frontier, visited, out0,
+                            p0, n_vertices=nv, tile=512, interpret=True)
+    pad = jnp.zeros((24,), jnp.int32)
+    out_r, p_r = ref.frontier_expand_ref(
+        jnp.concatenate([nbr, pad]), jnp.concatenate([cand, pad]),
+        jnp.concatenate([valid, pad]), frontier, visited, out0, p0,
+        n_vertices=nv, tile=512, check_frontier=False)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
+@pytest.mark.parametrize("v_pad,tile", [(1024, 256), (4096, 4096),
+                                        (8192, 2048), (2048, 32)])
+def test_restoration_matches_oracle(v_pad, tile):
+    rng = np.random.default_rng(v_pad + tile)
+    nv = v_pad - 128
+    p = np.full(v_pad, nv, np.int32)
+    marked = rng.random(v_pad) < 0.2
+    parents = rng.integers(0, nv, v_pad)
+    p[marked] = parents[marked] - nv
+    p = jnp.asarray(p)
+    f_k, d_k = restoration(p, n_vertices=nv, tile=tile, interpret=True)
+    f_r, d_r = ref.restoration_ref(p, n_vertices=nv)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+
+
+def test_restoration_fixes_exactly_marked():
+    nv = 896
+    p = jnp.asarray([-nv, 5, -1, nv, 0] + [nv] * 1019, jnp.int32)
+    f, d = ops.restore(p, n_vertices=nv, interpret=True)
+    f = np.asarray(f)
+    assert f[0] == 0          # parent 0 (was -nv)
+    assert f[1] == 5          # untouched
+    assert f[2] == nv - 1     # parent nv-1 (was -1)
+    dense = np.asarray(bm.unpack_bool(d))
+    assert dense[0] and dense[2] and not dense[1] and not dense[3]
+
+
+@pytest.mark.parametrize("n_words", [128, 4096, 5000])
+def test_popcount_matches_oracle(n_words):
+    rng = np.random.default_rng(n_words)
+    words = jnp.asarray(rng.integers(0, 2**32, n_words, dtype=np.uint32))
+    got = int(popcount(words, interpret=True))
+    want = int(ref.popcount_ref(words))
+    assert got == want
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=1, max_value=64))
+def test_property_popcount(seed, n_words):
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(0, 2**32, n_words, dtype=np.uint32)
+    got = int(popcount(jnp.asarray(arr), interpret=True))
+    assert got == sum(int(x).bit_count() for x in arr)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_property_expand_plus_restore_is_exact_discovery(seed):
+    """THE paper invariant: racy expand + restoration == exact set of
+    newly-discoverable candidates, for any interleaving."""
+    rng = np.random.default_rng(seed)
+    nbr, cand, valid, frontier, visited, out0, p0, nv = random_case(
+        seed, 2048, v_pad=1024)
+    out_k, p_k = frontier_expand(
+        nbr, cand, valid, frontier, visited, out0, p0, n_vertices=nv,
+        tile=256, interpret=True)
+    p_f, delta = ref.restoration_ref(p_k, n_vertices=nv)
+    out_final = np.asarray(out_k | delta)
+
+    # expected discoveries: valid lanes whose cand bit unset in visited
+    vis_dense = np.asarray(bm.unpack_bool(visited))
+    cand_np, valid_np = np.asarray(cand), np.asarray(valid).astype(bool)
+    expect = sorted({int(v) for v, ok in zip(cand_np, valid_np)
+                     if ok and not vis_dense[v]})
+    got = sorted(np.nonzero(np.asarray(bm.unpack_bool(
+        jnp.asarray(out_final))))[0].tolist())
+    assert got == expect
+    # and every discovered vertex has a valid, in-range parent
+    p_np = np.asarray(p_f)
+    for v in got:
+        assert 0 <= p_np[v] < nv

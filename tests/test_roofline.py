@@ -1,0 +1,133 @@
+"""HLO analyzer: trip-count loops, dot flops, collective wire bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_analyze import (Analyzer, analyze,
+                                        parse_computations, shape_bytes)
+from repro.roofline.analysis import Roofline, model_flops_for
+
+
+def compile_hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    hlo = compile_hlo(lambda x, y: x @ y, a, b)
+    c = analyze(hlo)
+    assert c.flops == 2 * 128 * 256 * 512
+
+
+def test_scan_multiplies_by_trip_count():
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def f(x):
+        def body(h, _):
+            return h @ a, None
+        h, _ = jax.lax.scan(body, x, None, length=17)
+        return h
+
+    hlo = compile_hlo(f, jnp.ones((64, 64)))
+    c = analyze(hlo)
+    assert c.flops == 17 * 2 * 64 * 64 * 64, c.flops
+    assert c.unresolved_whiles == 0
+
+
+def test_nested_scan_trips_compound():
+    a = jnp.zeros((32, 32), jnp.float32)
+
+    def f(x):
+        def inner(h, _):
+            return h @ a, None
+
+        def outer(h, _):
+            h, _ = jax.lax.scan(inner, h, None, length=3)
+            return h, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    hlo = compile_hlo(f, jnp.ones((32, 32)))
+    c = analyze(hlo)
+    assert c.flops == 5 * 3 * 2 * 32 ** 3, c.flops
+
+
+def test_bytes_reasonable_for_elementwise():
+    x = jnp.ones((1024, 1024), jnp.float32)  # 4 MB
+    hlo = compile_hlo(lambda x: x * 2 + 1, x)
+    c = analyze(hlo)
+    # read 4 MB + write 4 MB, fused: allow up to 3x for convert noise
+    assert 8e6 <= c.bytes < 2.5e7, c.bytes
+
+
+def test_shape_bytes_tuple():
+    assert shape_bytes("(f32[10,10], bf16[4])") == 400 + 8
+    assert shape_bytes("pred[8]") == 8
+    assert shape_bytes("f32[]") == 4  # scalar
+
+
+SYNTH = """
+HloModule synth
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p0), replica_groups=[8,16]<=[128], to_apply=%sum
+  %ag = f32[2048]{0} all-gather(%ar), replica_groups={{0,1},{2,3}}, dimensions={0}
+  ROOT %cp = f32[1024]{0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_synthetic_collectives():
+    c = analyze(SYNTH, default_group=128)
+    assert c.coll_ops == {"all-reduce": 1, "all-gather": 1,
+                          "collective-permute": 1}
+    ar_wire = 4096 * 2 * 15 / 16          # ring, group 16
+    ag_wire = 8192 * 1 / 2                # group 2 (explicit groups)
+    cp_wire = 4096
+    assert abs(c.wire_bytes - (ar_wire + ag_wire + cp_wire)) < 1e-6
+    assert c.coll_payload == 4096 + 8192 + 4096
+
+
+def test_end_to_end_flops_vs_analytic():
+    """Tiny LM train step: analyzer flops within [1x, 3.5x] of 6ND
+    (attention + remat overhead land above 1x; 3.5x is generous)."""
+    from repro.configs import registry
+    from repro.models import lm
+    from repro.train.train_step import TrainConfig, make_train_step
+    from repro.train import optimizer as opt
+    from repro.models.config import param_count
+
+    cfg = registry.get("phi3", reduced=True).with_(
+        dtype="float32", n_layers=2, vocab_size=512)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b, t = 2, 64
+    batch = {"tokens": jnp.ones((b, t), jnp.int32),
+             "labels": jnp.ones((b, t), jnp.int32)}
+    step = make_train_step(cfg, TrainConfig())
+    hlo = jax.jit(step).lower(params, opt.init(params),
+                              batch).compile().as_text()
+    c = analyze(hlo)
+    n_embed = cfg.vocab_size * cfg.d_model * 2
+    expect = model_flops_for("train", param_count(cfg), b * t, n_embed)
+    assert expect <= c.flops <= 3.5 * expect, (c.flops, expect)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops=197e12, bytes_accessed=819e9 * 2,
+                 wire_bytes=50e9 * 0.5, n_chips=1,
+                 model_flops=100e12)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 2.0) < 1e-9
+    assert abs(r.t_collective - 0.5) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.mfu_bound - 100e12 / (197e12 * 2.0)) < 1e-9
+    assert abs(r.useful_flops_ratio - 100 / 197) < 1e-3

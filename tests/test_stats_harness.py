@@ -1,0 +1,32 @@
+"""Tests for the Graph500 64-root TEPS harness (§5.3)."""
+import jax
+import pytest
+
+from repro.core import csr as csr_mod
+from repro.core import rmat
+from repro.core.bfs_parallel import run_bfs
+from repro.core.stats import run_harness
+
+
+@pytest.fixture(scope="module")
+def g10():
+    return csr_mod.from_edges(
+        rmat.generate(jax.random.PRNGKey(1), scale=10, edgefactor=16))
+
+
+def test_harness_runs_and_validates(g10):
+    res = run_harness(
+        g10, lambda c, r: run_bfs(c, r, algorithm="simd"),
+        jax.random.PRNGKey(0), n_roots=8, validate_runs=True)
+    assert len(res.runs) == 8
+    assert all(r.valid for r in res.runs)
+    assert res.hmean_teps > 0
+    assert res.max_teps >= res.hmean_teps
+    assert "hmean_teps" in res.summary()
+
+
+def test_hmean_is_harmonic(g10):
+    res = run_harness(g10, lambda c, r: run_bfs(c, r),
+                      jax.random.PRNGKey(2), n_roots=4)
+    ts = [r.teps for r in res.runs if r.teps > 0]
+    assert abs(res.hmean_teps - len(ts) / sum(1 / t for t in ts)) < 1e-6

@@ -1,0 +1,108 @@
+"""The Graph500 validator must CATCH every corruption class — a
+validator that always says yes validates nothing (§5.3)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import csr as csr_mod
+from repro.core import rmat
+from repro.core.bfs_parallel import parents_graph500, run_bfs
+from repro.core.validate import validate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = csr_mod.from_edges(
+        rmat.generate(jax.random.PRNGKey(4), scale=10, edgefactor=16))
+    root = 1
+    while int(g.out_degree(root)) == 0:
+        root += 1
+    state = run_bfs(g, root, algorithm="simd")
+    p = np.asarray(parents_graph500(state, g.n_vertices)).copy()
+    assert validate(g, p, root).ok
+    return g, root, p
+
+
+def _reached(p):
+    return np.nonzero(p >= 0)[0]
+
+
+def test_catches_wrong_root(setup):
+    g, root, p = setup
+    bad = p.copy()
+    bad[root] = (root + 1) % g.n_vertices
+    assert not validate(g, bad, root).root_ok
+
+
+def test_catches_cycle(setup):
+    g, root, p = setup
+    bad = p.copy()
+    reached = [v for v in _reached(p) if v != root]
+    a = reached[0]
+    # make a's parent chain loop through itself
+    bad[a] = a
+    res = validate(g, bad, root)
+    assert not res.no_cycles or not res.depths_consistent
+
+
+def test_catches_nonexistent_tree_edge(setup):
+    g, root, p = setup
+    rows = np.asarray(g.rows)
+    cs = np.asarray(g.colstarts)
+    bad = p.copy()
+    # find a reached vertex and assign a parent that is NOT a neighbor
+    for v in _reached(p):
+        if v == root:
+            continue
+        neighbors = set(rows[cs[v]:cs[v + 1]].tolist())
+        for cand in _reached(p):
+            if cand not in neighbors and cand != v:
+                bad[v] = cand
+                break
+        else:
+            continue
+        break
+    res = validate(g, bad, root)
+    assert not (res.tree_edges_exist and res.depths_consistent
+                and res.edge_levels_ok)
+
+
+def test_catches_component_leak(setup):
+    """Marking an unreachable vertex as reached must fail closure or
+    tree-edge checks."""
+    g, root, p = setup
+    unreached = np.nonzero(p < 0)[0]
+    if len(unreached) == 0:
+        pytest.skip("graph fully connected at this seed")
+    bad = p.copy()
+    bad[unreached[0]] = root        # fake parent
+    res = validate(g, bad, root)
+    assert not res.ok
+
+
+def test_catches_unmarking_reached(setup):
+    """Dropping a reached vertex violates component closure (an edge
+    now crosses reached -> 'unreached')."""
+    g, root, p = setup
+    bad = p.copy()
+    victims = [v for v in _reached(p) if v != root]
+    bad[victims[len(victims) // 2]] = -1
+    res = validate(g, bad, root)
+    assert not res.ok
+
+
+def test_catches_depth_skip(setup):
+    """Reparenting a depth-3 vertex onto the root breaks depth
+    consistency against the reference."""
+    from repro.core.bfs_serial import bfs_serial
+    g, root, p = setup
+    _, ref_depth = bfs_serial(np.asarray(g.rows),
+                              np.asarray(g.colstarts), g.n_vertices,
+                              root)
+    deep = np.nonzero(ref_depth >= 3)[0]
+    if len(deep) == 0:
+        pytest.skip("graph too shallow")
+    bad = p.copy()
+    bad[deep[0]] = root             # depth-3 vertex claims depth 1
+    res = validate(g, bad, root, reference_depth=ref_depth)
+    assert not res.ok
