@@ -1,0 +1,17 @@
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test test-quick bench bench-quick
+
+test:            ## full tier-1 suite (ROADMAP verify command)
+	$(PY) -m pytest -x -q
+
+test-quick:      ## BFS substrate + engine only (fast inner loop)
+	$(PY) -m pytest -x -q tests/test_bitmap.py tests/test_kernels.py \
+	    tests/test_bfs_correctness.py tests/test_engine.py
+
+bench:           ## full benchmark harness
+	$(PY) -m benchmarks.run
+
+bench-quick:     ## the batched-BFS benchmark at CI scale
+	$(PY) -m benchmarks.run --quick --only bfs_batched

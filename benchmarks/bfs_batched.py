@@ -1,0 +1,88 @@
+"""Fused-engine and batched multi-root BFS benchmark.
+
+Three measurements:
+
+1. **Layer-loop overhead removed** — the same single-root top-down
+   search via the legacy host layer loop (per-layer ``int(count)``
+   device sync + pow2 bucket dispatch) vs the fused engine (one
+   ``lax.while_loop`` launch).  The delta is the per-layer host
+   round-trip cost the unified engine eliminates.  NB on the CPU
+   container the fused path pays full-``E`` padding per layer in
+   interpret mode, which can outweigh the sync saving; on TPU the
+   sync dominates — the benchmark reports the signed delta either way.
+2. **Multi-root throughput** — ``batch`` roots traversed in ONE fused
+   launch (leading root axis through the batched expansion kernel);
+   reported as roots/s next to the single-root time.
+3. **Serve throughput** — the continuous-batching `GraphEngine`
+   draining 2x``batch`` queries with slot reuse.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, graph
+from repro.configs.bfs_graph500 import SERVE
+from repro.core import engine
+from repro.serve.graph_engine import BfsQuery, GraphEngine
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()                                   # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def main(scale: int = 12, batch: int | None = None,
+         policy=None) -> None:
+    batch = batch or SERVE.batch_slots
+    g = graph(scale)
+    rng = np.random.default_rng(7)
+    deg = np.asarray(g.degrees())
+    connected = np.where(deg > 0)[0]
+    roots = [int(r) for r in rng.choice(connected, size=batch,
+                                        replace=False)]
+    policy = policy or engine.TopDown()
+
+    # 1. single root: host layer loop vs fused while_loop
+    r0 = roots[0]
+    t_host = _time(lambda: jax.block_until_ready(
+        engine.traverse_hostloop(g, r0, policy=policy)[0].parent))
+    t_fused = _time(lambda: jax.block_until_ready(
+        engine.traverse(g, r0, policy=policy).state.parent))
+    removed = (t_host - t_fused) * 1e6
+    emit(f"bfs_single_hostloop_s{scale}", t_host * 1e6, "per_layer_sync")
+    emit(f"bfs_single_fused_s{scale}", t_fused * 1e6,
+         f"hostloop_minus_fused_us={removed:.1f}")
+
+    # 2. multi-root: one launch, leading root axis
+    t_batch = _time(lambda: jax.block_until_ready(
+        engine.traverse(g, roots, policy=policy).state.parent))
+    emit(f"bfs_batched{batch}_s{scale}", t_batch * 1e6,
+         f"roots_per_s={batch / t_batch:.1f};"
+         f"speedup_vs_serial_fused={batch * t_fused / t_batch:.2f}x")
+
+    # 3. serve engine: continuous batching, 2x oversubscribed queue
+    def serve_once():
+        eng = GraphEngine(g, batch_slots=batch,
+                          algorithm=SERVE.algorithm,
+                          max_layers=SERVE.max_layers)
+        for uid, r in enumerate(roots * 2):
+            eng.submit(BfsQuery(uid=uid, root=int(r)))
+        eng.run_until_done()
+        return eng
+    serve_once()                            # warmup/compile
+    t0 = time.perf_counter()
+    eng = serve_once()
+    t_serve = time.perf_counter() - t0
+    n_q = len(eng.finished)
+    emit(f"bfs_serve{batch}_s{scale}", t_serve / n_q * 1e6,
+         f"queries_per_s={n_q / t_serve:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, graph, time_bfs
-from repro.core.bfs_vectorized import run_bfs_vectorized
 
 
 def main(scale: int = 13, n_roots: int = 3):
@@ -33,16 +32,23 @@ def main(scale: int = 13, n_roots: int = 3):
     roots = rng.choice(np.nonzero(deg > 0)[0], size=n_roots,
                        replace=False)
 
+    # tile-differentiated variants run through the hostloop driver,
+    # which honors the requested tile exactly against bucketed layer
+    # sizes (the fused engine clamps small tiles in interpret mode)
+    from repro.core import engine
     variants = {
-        "simd_no_opt": dict(simd_threshold=0, tile=128),
-        "simd_align_mask": dict(simd_threshold=16_384, tile=1024),
-        "simd_prefetch": dict(simd_threshold=16_384, tile=None),
+        "simd_no_opt": dict(policy=engine.ThresholdSimd(0), tile=128),
+        "simd_align_mask": dict(policy=engine.ThresholdSimd(16_384),
+                                tile=1024),
+        "simd_prefetch": dict(policy=engine.ThresholdSimd(16_384),
+                              tile=None),
     }
     print(f"# Fig. 9 analog: SCALE={scale}, {n_roots} roots")
     results = {}
     for name, kw in variants.items():
-        sec = time_bfs(lambda c, r, kw=kw: run_bfs_vectorized(c, r, **kw),
-                       g, roots)
+        sec = time_bfs(
+            lambda c, r, kw=kw: engine.traverse_hostloop(c, r, **kw)[0],
+            g, roots)
         results[name] = sec
         teps = g.n_edges / 2 / sec
         emit(f"bfs_opt_ablation.{name}", sec * 1e6,

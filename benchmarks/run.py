@@ -24,8 +24,8 @@ def main() -> None:
                     help="run a single benchmark by name")
     args = ap.parse_args()
 
-    from benchmarks import (affinity, bfs_layers, bfs_opt_ablation,
-                            bfs_scaling, lm_roofline)
+    from benchmarks import (affinity, bfs_batched, bfs_layers,
+                            bfs_opt_ablation, bfs_scaling, lm_roofline)
 
     layer_scale = 20 if args.paper_scale else (12 if args.quick else 16)
     abl_scale = 13 if not args.quick else 11
@@ -37,6 +37,8 @@ def main() -> None:
             scale=abl_scale, n_roots=2 if args.quick else 3),
         "bfs_scaling": lambda: bfs_scaling.main(
             scales=scales, n_roots=2 if args.quick else 4),
+        "bfs_batched": lambda: bfs_batched.main(
+            scale=11 if args.quick else 12),
         "affinity": lambda: affinity.main(scale=abl_scale),
         "lm_roofline": lambda: lm_roofline.main(),
     }

@@ -70,6 +70,18 @@ def main():
         h = run_harness(g, fn, jax.random.PRNGKey(7),
                         n_roots=args.roots)
         print(f"   {name:32s} {h.summary()}")
+
+    print(f"== batched multi-root engine ({args.roots} roots, 1 launch)")
+    from repro.core import engine
+    roots = [root + i for i in range(args.roots)]
+    t0 = time.perf_counter()
+    res = engine.traverse(g, roots, policy=engine.TopDown())
+    jax.block_until_ready(res.state.parent)
+    dt = time.perf_counter() - t0
+    # depths counts active layers (= eccentricity + 1 from the root)
+    print(f"   {args.roots} searches in {dt:.2f}s "
+          f"({args.roots/dt:.1f} roots/s), max tree depth "
+          f"{(np.asarray(res.depths) - 1).tolist()}")
     print("OK")
     return 0
 

@@ -1,0 +1,30 @@
+"""Version-tolerant access to jax symbols that moved across releases.
+
+Companion to `kernels.pallas_compat` (the Pallas rename) and the
+AxisType shim in `launch.mesh`; everything that has to run on both the
+jax 0.4.x line and >= 0.5 resolves through here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` when available (>= 0.5), else the experimental
+    entry point (0.4.x) with replication checking off — the older
+    tracker lacks rules for some collectives these programs use."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def pcast_varying(x, axis_names):
+    """Mark a replicated value as device-varying for while_loop carry
+    typing; identity on jax versions without replication tracking."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, axis_names, to="varying")

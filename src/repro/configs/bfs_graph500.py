@@ -22,8 +22,23 @@ class GraphConfig:
         return 2 * self.n_vertices * self.edgefactor
 
 
+@dataclass(frozen=True)
+class BfsServeConfig:
+    """Defaults for the batched BFS query service and benchmark.
+
+    ``batch_slots`` is the fixed multi-root width (engine launch and
+    serve batch alike); 8 is the smallest batch that amortizes the
+    layer-loop fixed costs on the quick CPU scales and is the
+    benchmark's reported configuration.
+    """
+    batch_slots: int = 8
+    max_layers: int = 64
+    algorithm: str = "simd"
+
+
 GRAPHS = {
     f"rmat-{s}": GraphConfig(f"rmat-{s}", scale=s)
     for s in (10, 12, 14, 16, 18, 19, 20, 22, 24, 27)
 }
 PAPER_GRAPHS = ("rmat-18", "rmat-19", "rmat-20")
+SERVE = BfsServeConfig()

@@ -5,10 +5,11 @@ Layers:
   rmat           Graph500 Kronecker generator (§5.2)
   csr            padded CSR + alignment policy (§3.3.1, §4.2)
   bfs_serial     Algorithm 1 oracle
-  bfs_parallel   Algorithms 2/3 (restoration process) in jnp
-  bfs_vectorized §4 SIMD pipeline backed by Pallas kernels
-  bfs_hybrid     beyond-paper direction-optimizing BFS
-  bfs_distributed shard_map multi-chip BFS
+  engine         unified fused traversal engine + direction policies
+  bfs_parallel   Algorithms 2/3 wrapper (scalar expanders)
+  bfs_vectorized §4 SIMD pipeline wrapper (ThresholdSimd/PaperLiteral)
+  bfs_hybrid     direction-optimizing wrapper (BeamerHybrid policy)
+  bfs_distributed shard_map multi-chip BFS (engine step pieces)
   validate       Graph500 soft validator (§5.3)
   stats          64-root TEPS harness (§5.3)
 """

@@ -41,8 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import bitmap as bm
-from repro.core.bfs_parallel import apportion
+from repro.core import engine
 from repro.core.csr import Csr, round_up
 
 
@@ -100,21 +101,20 @@ def partition_csr(csr: Csr, n_devices: int, slack: float = 1.5):
 
 def _local_step(rows_l, colstarts_l, frontier, visited, v_loc: int,
                 n_vertices: int, v_cap: int, base):
-    """One chip's expansion: local frontier slice -> parent candidates."""
+    """One chip's expansion, built from the engine's step pieces:
+    `engine.edge_stream` gathers the local frontier slice's adjacency
+    (in LOCAL vertex ids, sentinel == v_loc) and
+    `engine.candidate_scatter` encodes discoveries as the min-parent
+    candidate array the collective merge resolves deterministically."""
     w_loc = v_loc // bm.BITS_PER_WORD
     local_words = jax.lax.dynamic_slice(
         frontier, (base // bm.BITS_PER_WORD,), (w_loc,))
-    local_list = bm.compact(local_words, size=v_loc, fill_value=v_loc)
-    # apportion in LOCAL vertex ids (sentinel == v_loc)
-    u_loc, v_nbr, valid = apportion(colstarts_l, rows_l, local_list,
-                                    v_loc, rows_l.shape[0])
+    u_loc, v_nbr, valid = engine.edge_stream(
+        colstarts_l, rows_l, local_words, v_loc, v_loc,
+        rows_l.shape[0])
     u_glob = jnp.where(u_loc < v_loc, u_loc + base, n_vertices)
-    undiscovered = ~bm.test_bits(visited, v_nbr)
-    mask = valid & undiscovered & (v_nbr < n_vertices)
-    # encoded candidates: INF everywhere, min-parent where discovered
-    idx = jnp.where(mask, v_nbr, v_cap)
-    cand = jnp.full((v_cap,), n_vertices, jnp.int32)
-    return cand.at[idx].min(u_glob, mode="drop")
+    return engine.candidate_scatter(u_glob, v_nbr, valid, visited,
+                                    n_vertices, v_cap)
 
 
 def make_bfs_program(v_loc: int, n_vertices: int, n_devices: int,
@@ -182,8 +182,8 @@ def make_bfs_program(v_loc: int, n_vertices: int, n_devices: int,
         # The carried bitmaps become device-varying after the first
         # all_gather; mark the (replicated) initial values as varying
         # so the while_loop carry types match.
-        frontier = jax.lax.pcast(frontier, axis_names, to="varying")
-        visited = jax.lax.pcast(visited, axis_names, to="varying")
+        frontier = compat.pcast_varying(frontier, axis_names)
+        visited = compat.pcast_varying(visited, axis_names)
         in_range = (root >= base) & (root < base + v_loc)
         parent_l = jnp.full((v_loc,), inf, jnp.int32)
         parent_l = jnp.where(
@@ -236,8 +236,8 @@ def _run(mesh, axis_names, n_vertices, max_layers, merge, rows_sh,
     program = make_bfs_program(v_loc, n_vertices, n_devices, axis_names,
                                max_layers, merge=merge)
     p_out = P() if merge == "allreduce" else P(axis_names)
-    shard = jax.shard_map(
-        program, mesh=mesh,
+    shard = compat.shard_map(
+        program, mesh,
         in_specs=(P(axis_names), P(axis_names), P()),
         out_specs=(p_out, P()))
     return shard(rows_sh, colstarts_sh, root)

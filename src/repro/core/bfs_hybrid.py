@@ -2,7 +2,8 @@
 
 The paper (§3, §8) notes its vectorization techniques "can be applied
 to the bottom-up phase, which can lead to speed up the hybrid BFS
-algorithm" [Beamer et al. 2012] — this module does exactly that.
+algorithm" [Beamer et al. 2012] — this wrapper selects the engine's
+`BeamerHybrid` policy, which does exactly that.
 
 Bottom-up step: iterate the *unvisited* vertices' adjacency and test
 each neighbor against the frontier bitmap.  On TPU this is *friendlier*
@@ -11,101 +12,31 @@ only scatter is the benign P write, so the bit race of §3.3.2 cannot
 even occur — restoration still runs to unify the code path, but it is
 repairing nothing.  Both directions reuse the same Pallas kernel
 (``check_frontier=True`` flips the direction) and the same
-apportionment machinery.
+apportionment machinery (`engine.edge_stream`).
 
 Switching heuristic (Beamer): top-down -> bottom-up when the frontier's
 out-edge count exceeds the unexplored edge count / alpha; back when the
 frontier shrinks below V / beta.  Defaults alpha=14, beta=24 (Beamer's
-published constants).
+published constants).  The decision runs *on device* inside the fused
+layer loop — no per-layer host sync.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import bitmap as bm
-from repro.core.bfs_parallel import (BfsState, _layer_workload, _next_pow2,
-                                     apportion, init_state)
-from repro.core.bfs_vectorized import (_apply_restore, _auto_tile,
-                                       _gather_stream)
+from repro.core import engine
 from repro.core.csr import Csr
-from repro.kernels import ops
 
 
-@functools.partial(jax.jit, static_argnames=("n_vertices", "c_size",
-                                             "e_size"))
-def _bottomup_stream(colstarts, rows, visited, n_vertices, c_size, e_size):
-    """Apportion the adjacency of *unvisited* vertices.
-
-    Returns (cand, nbr, valid): cand = unvisited vertex to discover,
-    nbr = its neighbor to test against the frontier.
-    """
-    unvisited = ~bm.unpack_bool(visited)
-    (cands,) = jnp.nonzero(unvisited, size=c_size, fill_value=n_vertices)
-    cand_list = cands.astype(jnp.int32)
-    cand, nbr, valid = apportion(colstarts, rows, cand_list, n_vertices,
-                                 e_size)
-    return cand, nbr, valid.astype(jnp.int32)
-
-
-@functools.partial(jax.jit, static_argnames=("n_vertices",))
-def _unvisited_workload(visited, colstarts, n_vertices):
-    dense = ~bm.unpack_bool(visited)[:n_vertices]
-    deg = colstarts[1:] - colstarts[:-1]
-    count = dense.sum(dtype=jnp.int32)
-    edges = jnp.where(dense, deg, 0).sum(dtype=jnp.int32)
-    return count, edges
-
-
-def _bottomup_layer(csr: Csr, state: BfsState, c_size: int, e_size: int,
-                    tile: int) -> BfsState:
-    cand, nbr, valid = _bottomup_stream(csr.colstarts, csr.rows,
-                                        state.visited, csr.n_vertices,
-                                        c_size, e_size)
-    out_racy, parent_racy = ops.expand(
-        nbr, cand, valid, state.frontier, state.visited,
-        bm.zeros(state.parent.shape[0]), state.parent,
-        n_vertices=csr.n_vertices, tile=tile, check_frontier=True)
-    return _apply_restore(state, out_racy, parent_racy, csr.n_vertices)
-
-
-def run_bfs_hybrid(csr: Csr, root: int, *, alpha: float = 14.0,
+def run_bfs_hybrid(csr: Csr, root, *, alpha: float = 14.0,
                    beta: float = 24.0, tile: int | None = None,
                    collect_stats: bool = False, max_layers: int = 1024):
-    """Direction-optimizing BFS with vectorized kernels both ways."""
-    state = init_state(csr, root)
-    v = csr.n_vertices
-    direction_log: list[str] = []
-    bottom_up = False
-    for _ in range(max_layers):
-        f_count, f_edges = _layer_workload(state.frontier, csr.colstarts, v)
-        f_count, f_edges = int(f_count), int(f_edges)
-        if f_count == 0:
-            break
-        u_count, u_edges = _unvisited_workload(state.visited,
-                                               csr.colstarts, v)
-        u_count, u_edges = int(u_count), int(u_edges)
+    """Direction-optimizing BFS with vectorized kernels both ways.
 
-        if not bottom_up and f_edges > u_edges / alpha:
-            bottom_up = True                     # growing: switch down
-        elif bottom_up and f_count < v / beta:
-            bottom_up = False                    # shrinking: switch back
-
-        if bottom_up and u_count > 0:
-            c_size = _next_pow2(u_count)
-            e_size = _next_pow2(max(u_edges, 1))
-            t = tile or _auto_tile(e_size, interpret=True)
-            state = _bottomup_layer(csr, state, c_size, e_size, t)
-            direction_log.append("bottomup")
-        else:
-            from repro.core.bfs_vectorized import _simd_layer
-            f_size = _next_pow2(f_count)
-            e_size = _next_pow2(max(f_edges, 1))
-            t = tile or _auto_tile(e_size, interpret=True)
-            state = _simd_layer(csr, state, f_size, e_size, t)
-            direction_log.append("topdown")
+    With ``collect_stats`` returns ``(state, direction_log)`` where the
+    log holds one "topdown"/"bottomup" entry per executed layer.
+    """
+    policy = engine.BeamerHybrid(float(alpha), float(beta))
+    res = engine.traverse(csr, root, policy=policy, tile=tile,
+                          max_layers=max_layers)
     if collect_stats:
-        return state, direction_log
-    return state
+        return res.state, engine.direction_log(res)
+    return res.state

@@ -1,61 +1,33 @@
 """Layer-synchronous parallel top-down BFS — Algorithms 2 and 3.
 
-Two implementations of one expansion pipeline:
+Thin public wrapper over `core.engine` (the unified traversal engine).
+Two scalar expansion flavours survive as the ``algorithm`` switch:
 
-* ``expand_nonsimd``   — Algorithm 2 semantics.  Dense bool arrays for
-  in/out/visited (the pre-bitmap version): no bit race exists because
-  every vertex owns a whole element; only the *benign* parent race of
-  §3.2 remains (any discovering parent is a valid parent).
+* ``nonsimd`` — Algorithm 2 semantics.  Dense bool arrays for
+  in/out/visited: no bit race exists because every vertex owns a whole
+  element; only the *benign* parent race of §3.2 remains.
+* ``simd``    — Algorithm 3.  Bitmap arrays + the racy word scatter of
+  the hot loop + the **restoration process** (§3.3.2).  No atomics
+  anywhere — what made the paper's AVX-512 vectorization legal, and
+  equally what makes the XLA/TPU scatter formulation legal.
 
-* ``expand_simd_semantics`` — Algorithm 3.  Bitmap arrays + the racy
-  word scatter of the hot loop + the **restoration process** (§3.3.2):
-  after the racy expansion, every vertex discovered this layer is
-  identified by its negative ``P`` entry (``P[v] = u - V``), its bit is
-  re-set exactly in both ``out`` and ``visited``, and ``P`` is fixed up
-  by adding ``V`` back.  No atomics anywhere — that is what made the
-  paper's AVX-512 vectorization legal, and it is equally what makes
-  the XLA/TPU scatter formulation legal (neither has bit atomics).
-
-Work distribution ("gather apportionment"): the paper gives each
-OpenMP thread a slice of the input list and lets the vector unit walk
-16 neighbors at a time.  The TPU-native equivalent computes, for every
-*edge slot* of the layer, its source vertex by a vectorized binary
-search over the cumulative frontier degrees — perfectly load-balanced
-across lanes regardless of degree skew, which is the property OpenMP
-dynamic scheduling approximated.
-
-Drivers:
-* ``run_bfs``          — Python layer loop with power-of-two shape
-  buckets (exact work; used for timing/benchmarks; a handful of
-  recompiles total).
-* ``run_bfs_jit``      — single ``lax.while_loop`` with full-``E``
-  padding per layer (static shapes; used for ``.lower()`` dry-runs and
-  as the body that ``shard_map`` distributes).
+Both drivers now run the whole search as ONE fused ``lax.while_loop``
+on device (no per-layer host sync); pass ``policy=`` to switch the
+engine's direction policy, or use `engine.traverse_hostloop` for the
+legacy bucketed layer loop.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bitmap as bm
+from repro.core import engine
 from repro.core.csr import Csr, init_visited
-
-
-class BfsState(NamedTuple):
-    frontier: jax.Array     # input bitmap (W,) uint32
-    visited: jax.Array      # visited bitmap (W,) uint32
-    parent: jax.Array       # P, (V_pad,) int32; init = V ("infinity")
-    layer: jax.Array        # scalar int32
-
-
-class LayerStats(NamedTuple):
-    layer: int
-    frontier_vertices: int  # |in|  (Table 1 "Vertices")
-    edges_examined: int     # Σ deg(in)  (Table 1 "Edges")
-    discovered: int         # |out| (Table 1 "Traversed vertices")
+# Re-exports: these historically lived here; canonical home is engine.
+from repro.core.engine import BfsState, LayerStats, apportion  # noqa: F401
 
 
 def init_state(csr: Csr, root) -> BfsState:
@@ -69,193 +41,61 @@ def init_state(csr: Csr, root) -> BfsState:
     return BfsState(frontier, visited, parent, jnp.int32(0))
 
 
-# ---------------------------------------------------------------------------
-# Edge apportionment: frontier bitmap -> per-edge-slot (u, v, valid)
-# ---------------------------------------------------------------------------
-
-def apportion(csr_colstarts: jax.Array, csr_rows: jax.Array,
-              frontier_list: jax.Array, n_vertices: int, n_slots: int):
-    """Map ``n_slots`` edge slots onto the frontier's adjacency lists.
-
-    frontier_list is sentinel-padded (id == n_vertices => empty).
-    Returns (u, v, valid) arrays of length n_slots.
-
-    Owner lookup is a scatter + prefix-sum instead of a binary search:
-    ``owner[slot] = #frontier vertices whose adjacency ends at or
-    before slot`` = cumsum of end-offset markers.  A vectorized
-    searchsorted lowers to a log2(F)-iteration while loop that re-reads
-    the full slot array every pass (measured 16.3 GB/layer at SCALE-27
-    per chip); the prefix-sum form is two passes (§Perf iteration 2).
-    """
-    is_real = frontier_list < n_vertices
-    safe = jnp.where(is_real, frontier_list, 0)
-    deg = jnp.where(is_real,
-                    csr_colstarts[safe + 1] - csr_colstarts[safe], 0)
-    cum = jnp.cumsum(deg, dtype=jnp.int32)
-    total = cum[-1] if cum.shape[0] else jnp.int32(0)
-    slots = jnp.arange(n_slots, dtype=jnp.int32)
-    # scatter a marker at each vertex's END offset; prefix-sum counts
-    # how many adjacency lists finished at or before each slot
-    markers = (jnp.zeros((n_slots,), jnp.int32)
-               .at[cum].add(1, mode="drop"))
-    owner = jnp.cumsum(markers, dtype=jnp.int32)
-    owner_c = jnp.clip(owner, 0, frontier_list.shape[0] - 1)
-    prev = jnp.where(owner_c > 0, cum[jnp.maximum(owner_c - 1, 0)], 0)
-    u = frontier_list[owner_c]
-    valid = slots < total
-    u_safe = jnp.where(valid, u, 0)
-    e_idx = csr_colstarts[u_safe] + (slots - prev)
-    e_idx = jnp.clip(e_idx, 0, csr_rows.shape[0] - 1)
-    v = csr_rows[e_idx]
-    return u.astype(jnp.int32), v, valid
-
-
-# ---------------------------------------------------------------------------
-# Algorithm 3 layer: racy bitmap expansion + restoration
-# ---------------------------------------------------------------------------
-
 def expand_simd_semantics(colstarts, rows, n_vertices: int,
                           state: BfsState, frontier_size: int,
                           edge_slots: int) -> BfsState:
     """One layer of Algorithm 3 (bitmaps, racy scatter, restoration)."""
-    v_pad = state.parent.shape[0]
-    frontier_list = bm.compact(state.frontier, frontier_size, n_vertices)
-    u, v, valid = apportion(colstarts, rows, frontier_list, n_vertices,
-                            edge_slots)
-
-    # --- hot loop (lines 9-13): gather, test, mask, racy scatter -----------
-    undiscovered = ~(bm.test_bits(state.visited, v)
-                     | bm.test_bits(state.frontier, v))
-    mask = valid & undiscovered
-    # P[v] = u - nodes  (negative marking; int scatter => word-atomic,
-    # duplicate-v lanes race benignly: either parent is valid)
-    scatter_idx = jnp.where(mask, v, v_pad)
-    parent = state.parent.at[scatter_idx].set(u - n_vertices, mode="drop")
-    # out.SetBit(v) — racy word OR; colliding words lose bits (Fig. 6)
-    out = bm.set_bits_racy(bm.zeros(v_pad), v, mask)
-
-    # --- restoration process (lines 15-29) ---------------------------------
-    marked = parent < 0
-    repaired = bm.pack_bool(marked)
-    out = out | repaired
-    visited = state.visited | repaired
-    parent = jnp.where(marked, parent + n_vertices, parent)
-
+    out, visited, parent = engine.scalar_expand(
+        colstarts, rows, n_vertices, state.frontier, state.visited,
+        state.parent, frontier_size, edge_slots, "simd")
     return BfsState(out, visited, parent, state.layer + 1)
 
-
-# ---------------------------------------------------------------------------
-# Algorithm 2 layer: dense bool arrays, no bit race (non-simd reference)
-# ---------------------------------------------------------------------------
 
 def expand_nonsimd(colstarts, rows, n_vertices: int, state: BfsState,
                    frontier_size: int, edge_slots: int) -> BfsState:
     """One layer of Algorithm 2 on dense bool arrays (exact updates)."""
-    v_pad = state.parent.shape[0]
-    frontier_list = bm.compact(state.frontier, frontier_size, n_vertices)
-    u, v, valid = apportion(colstarts, rows, frontier_list, n_vertices,
-                            edge_slots)
-    visited_dense = bm.unpack_bool(state.visited)
-    mask = valid & ~visited_dense[jnp.clip(v, 0, v_pad - 1)]
-    scatter_idx = jnp.where(mask, v, v_pad)
-    parent = state.parent.at[scatter_idx].set(u, mode="drop")
-    out_dense = (jnp.zeros((v_pad,), bool)
-                 .at[scatter_idx].set(True, mode="drop"))
-    out = bm.pack_bool(out_dense)
-    visited = state.visited | out
+    out, visited, parent = engine.scalar_expand(
+        colstarts, rows, n_vertices, state.frontier, state.visited,
+        state.parent, frontier_size, edge_slots, "nonsimd")
     return BfsState(out, visited, parent, state.layer + 1)
 
 
-_EXPANDERS = {"simd": expand_simd_semantics, "nonsimd": expand_nonsimd}
+def run_bfs(csr: Csr, root, *, algorithm: str = "simd",
+            collect_stats: bool = False, max_layers: int = 1024,
+            policy=None, tile: int | None = None):
+    """Fused single-launch BFS driver (engine-backed).
 
-
-# ---------------------------------------------------------------------------
-# Drivers
-# ---------------------------------------------------------------------------
-
-def _next_pow2(n: int, lo: int = 128) -> int:
-    n = max(int(n), lo)
-    return 1 << (n - 1).bit_length()
-
-
-@functools.partial(jax.jit, static_argnums=(2,))
-def _layer_workload(frontier, colstarts, n_vertices):
-    """Concrete (|frontier|, Σdeg) for bucket selection."""
-    count = bm.popcount(frontier)
-    dense = bm.unpack_bool(frontier)[:n_vertices]
-    deg = colstarts[1:] - colstarts[:-1]
-    edges = jnp.where(dense, deg, 0).sum(dtype=jnp.int32)
-    return count, edges
-
-
-@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
-def _layer_step(expander_name, colstarts, rows, n_vertices,
-                frontier_size, edge_slots, state):
-    return _EXPANDERS[expander_name](colstarts, rows, n_vertices, state,
-                                     frontier_size, edge_slots)
-
-
-def run_bfs(csr: Csr, root: int, *, algorithm: str = "simd",
-            collect_stats: bool = False, max_layers: int = 1024):
-    """Python layer-loop driver with power-of-two shape buckets.
-
-    Exact work per layer (the paper's Table 1 workload), at the cost of
-    one small recompile per new (frontier, edges) bucket pair.
+    Args unchanged from the historical bucketed driver; additionally
+    accepts ``policy`` (any `engine` direction policy — default
+    `engine.TopDown()`) and ``tile`` for policies that use the SIMD
+    kernel.  ``root`` may be a sequence for batched multi-root search
+    (state arrays then carry a leading root axis).
     """
-    state = init_state(csr, root)
-    stats: list[LayerStats] = []
-    for _ in range(max_layers):
-        count, edges = _layer_workload(state.frontier, csr.colstarts,
-                                       csr.n_vertices)
-        count, edges = int(count), int(edges)
-        if count == 0:
-            break
-        f_size = _next_pow2(count)
-        e_size = _next_pow2(edges)
-        state = _layer_step(algorithm, csr.colstarts, csr.rows,
-                            csr.n_vertices, f_size, e_size, state)
-        if collect_stats:
-            stats.append(LayerStats(
-                layer=int(state.layer) - 1, frontier_vertices=count,
-                edges_examined=edges,
-                discovered=int(bm.popcount(state.frontier))))
+    res = engine.traverse(csr, root, policy=policy, algorithm=algorithm,
+                          tile=tile, max_layers=max_layers)
     if collect_stats:
-        return state, stats
-    return state
+        return res.state, engine.layer_stats(res)
+    return res.state
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5))
 def run_bfs_jit(colstarts, rows, root, n_vertices: int,
                 algorithm: str = "simd", max_layers: int = 64) -> BfsState:
-    """Fully-jitted ``lax.while_loop`` driver (static full-E shapes).
+    """Fully-jitted driver on raw arrays (static full-E shapes).
 
-    Every layer processes the padded edge capacity with masks — O(E)
-    slots per layer.  Used for ``.lower()``/dry-run and inside
-    ``shard_map`` for the distributed BFS.
+    Alias for the engine's fused loop; used for ``.lower()``/dry-run
+    paths that only have arrays, not a `Csr`.
     """
-    v_pad = (int(n_vertices) + 128) // 128 * 128  # padded_vertex_count
-    expander = _EXPANDERS[algorithm]
-
-    frontier = bm.set_bits_exact(
-        bm.zeros(v_pad), jnp.asarray([root], jnp.int32).reshape(()))
-    pad_ids = jnp.arange(n_vertices, v_pad, dtype=jnp.int32)
-    visited = bm.set_bits_exact(bm.zeros(v_pad), pad_ids)
-    visited = bm.set_bits_exact(visited, jnp.asarray(root, jnp.int32))
-    parent = jnp.full((v_pad,), n_vertices, jnp.int32).at[root].set(root)
-    state = BfsState(frontier, visited, parent, jnp.int32(0))
-
-    e_pad = int(rows.shape[0])
-
-    def cond(s: BfsState):
-        return (bm.popcount(s.frontier) > 0) & (s.layer < max_layers)
-
-    def body(s: BfsState):
-        return expander(colstarts, rows, n_vertices, s, v_pad, e_pad)
-
-    return jax.lax.while_loop(cond, body, state)
+    res = engine.traverse_arrays(
+        colstarts, rows, jnp.reshape(jnp.asarray(root, jnp.int32), (1,)),
+        n_vertices=n_vertices, algorithm=algorithm,
+        max_layers=max_layers)
+    st = res.state
+    return BfsState(st.frontier[0], st.visited[0], st.parent[0],
+                    st.layer)
 
 
 def parents_graph500(state: BfsState, n_vertices: int) -> jax.Array:
     """Convert internal P (∞ == V sentinel) to Graph500 convention (-1)."""
-    p = state.parent[:n_vertices]
+    p = state.parent[..., :n_vertices]
     return jnp.where(p >= n_vertices, -1, p)

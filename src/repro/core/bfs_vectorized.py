@@ -1,16 +1,20 @@
 """The paper's §4 vectorized BFS: Pallas kernels + layer-adaptive switch.
 
-Pipeline per layer (top-down):
+Thin wrapper over `core.engine`.  Pipeline per layer (top-down):
   compact -> apportion -> [SIMD kernel | scalar path] -> restoration
 
 The *layer-adaptive* switch is §4.1: small-world graphs concentrate
 ~95% of edge traffic in the two fat middle layers, so the SIMD path
 (kernel launch, VMEM pinning) only pays for itself there.  The paper
 hard-codes "the first two layers"; we default to an *edge-count
-threshold* — same effect on RMAT graphs (the fat layers are exactly the
-ones above threshold), robust on other graph shapes — and offer
-``simd_layers`` for the paper-literal policy.  Both are benchmarked in
-benchmarks/bfs_opt_ablation.py.
+threshold* (`engine.ThresholdSimd`) — same effect on RMAT graphs,
+robust on other shapes — and offer ``simd_layers``
+(`engine.PaperLiteralLayers`) for the paper-literal policy.  Both are
+benchmarked in benchmarks/bfs_opt_ablation.py.
+
+The whole search now runs as one fused ``lax.while_loop``: the policy
+decides scalar-vs-SIMD per layer from on-device counters, with no host
+round-trip between layers.
 
 Prefetch-distance analogue: the Pallas grid double-buffers edge-stream
 tiles HBM->VMEM; ``tile`` controls how far ahead the DMA runs, the role
@@ -20,65 +24,11 @@ to keep the grid short; on TPU the default is 1024 lanes.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import bitmap as bm
-from repro.core.bfs_parallel import (BfsState, LayerStats, _layer_workload,
-                                     _next_pow2, apportion, init_state)
+from repro.core import engine
 from repro.core.csr import Csr
-from repro.kernels import ops
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("n_vertices", "f_size", "e_size"))
-def _gather_stream(colstarts, rows, frontier, n_vertices, f_size, e_size):
-    """Compact + apportion: build the layer's (nbr, cand, valid) stream."""
-    frontier_list = bm.compact(frontier, f_size, n_vertices)
-    u, v, valid = apportion(colstarts, rows, frontier_list, n_vertices,
-                            e_size)
-    return u, v, valid.astype(jnp.int32)
-
-
-@functools.partial(jax.jit, static_argnames=("n_vertices",))
-def _apply_restore(state: BfsState, out_racy, parent_racy, n_vertices):
-    parent, delta = ops.restore(parent_racy, n_vertices=n_vertices,
-                                interpret=True)
-    out = out_racy | delta
-    visited = state.visited | delta
-    return BfsState(out, visited, parent, state.layer + 1)
-
-
-def _simd_layer(csr: Csr, state: BfsState, f_size: int, e_size: int,
-                tile: int) -> BfsState:
-    """One §4 SIMD layer: kernel expansion + kernel restoration."""
-    u, v, valid = _gather_stream(csr.colstarts, csr.rows, state.frontier,
-                                 csr.n_vertices, f_size, e_size)
-    out_racy, parent_racy = ops.expand(
-        u, v, valid, state.frontier, state.visited,
-        bm.zeros(state.parent.shape[0]), state.parent,
-        n_vertices=csr.n_vertices, tile=tile)
-    return _apply_restore(state, out_racy, parent_racy, csr.n_vertices)
-
-
-def _scalar_layer(csr: Csr, state: BfsState, f_size: int,
-                  e_size: int) -> BfsState:
-    """Skinny-layer fallback: Algorithm 2/3 in plain jnp (non-simd)."""
-    from repro.core.bfs_parallel import expand_simd_semantics
-    return expand_simd_semantics(csr.colstarts, csr.rows, csr.n_vertices,
-                                 state, f_size, e_size)
-
-
-def _auto_tile(e_size: int, interpret: bool) -> int:
-    if not interpret:
-        return 1024
-    # interpret mode unrolls the grid at trace time: keep it short
-    return max(1024, e_size // 32)
-
-
-def run_bfs_vectorized(csr: Csr, root: int, *,
+def run_bfs_vectorized(csr: Csr, root, *,
                        simd_threshold: int = 16_384,
                        simd_layers: tuple[int, ...] | None = None,
                        tile: int | None = None,
@@ -92,32 +42,18 @@ def run_bfs_vectorized(csr: Csr, root: int, *,
       simd_layers: explicit layer indices for the SIMD path (the
         paper's literal "first two [fat] layers" policy); overrides the
         threshold when given.
-      tile: kernel edge-tile size (None = auto).
+      tile: kernel edge-tile size (None = auto).  NB in interpret mode
+        (non-TPU) the fused engine clamps small tiles to bound
+        trace-time grid unrolling; for exact tile sweeps use
+        ``engine.traverse_hostloop`` (see benchmarks/affinity.py).
     """
-    state = init_state(csr, root)
-    stats: list[LayerStats] = []
-    layer = 0
-    for _ in range(max_layers):
-        count, edges = _layer_workload(state.frontier, csr.colstarts,
-                                       csr.n_vertices)
-        count, edges = int(count), int(edges)
-        if count == 0:
-            break
-        f_size = _next_pow2(count)
-        e_size = _next_pow2(edges)
-        use_simd = (layer in simd_layers) if simd_layers is not None \
-            else (edges >= simd_threshold)
-        if use_simd:
-            t = tile or _auto_tile(e_size, interpret=True)
-            state = _simd_layer(csr, state, f_size, e_size, t)
-        else:
-            state = _scalar_layer(csr, state, f_size, e_size)
-        if collect_stats:
-            stats.append(LayerStats(
-                layer=layer, frontier_vertices=count,
-                edges_examined=edges,
-                discovered=int(bm.popcount(state.frontier))))
-        layer += 1
+    if simd_layers is not None:
+        policy = engine.PaperLiteralLayers(tuple(int(l)
+                                                 for l in simd_layers))
+    else:
+        policy = engine.ThresholdSimd(int(simd_threshold))
+    res = engine.traverse(csr, root, policy=policy, tile=tile,
+                          max_layers=max_layers)
     if collect_stats:
-        return state, stats
-    return state
+        return res.state, engine.layer_stats(res)
+    return res.state

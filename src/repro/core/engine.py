@@ -1,0 +1,702 @@
+"""Unified on-device BFS traversal engine with pluggable direction policies.
+
+DESIGN
+======
+Every BFS variant in this repo — Algorithms 2/3 of the paper, the §4
+vectorized pipeline, the Beamer-style hybrid, and the distributed
+per-chip program — is the same per-layer pipeline:
+
+    measure workload  ->  decide direction  ->  expand  ->  restore
+
+This module is the single home of that pipeline.  The paper sections
+map onto engine phases as follows:
+
+* **measure** (`Workload`): §4.1's layer-adaptive decision input — the
+  frontier vertex/edge counts of Table 1, computed *on device* from the
+  bitmap (§3.3.1) and the CSR degree array.
+* **decide** (`DirectionPolicy.decide`): which expansion flavour runs
+  this layer.  ``MODE_SCALAR`` is the plain-jnp Algorithm 2/3 layer,
+  ``MODE_SIMD`` the §4 Pallas kernel (Listing 1), ``MODE_BOTTOMUP`` the
+  frontier-testing kernel of the hybrid extension (arXiv:1704.02259).
+  Policies are small frozen objects deciding from on-device counters,
+  so the decision traces into the fused loop — no host round-trip.
+* **expand**: the racy gather-test-mask-scatter hot loop (§3.2, §3.3.2
+  Fig. 6).  The scalar and SIMD paths share the apportionment machinery
+  (`edge_stream`); the batched kernel adds a leading root axis so many
+  searches expand in one launch.
+* **restore** (§3.3.2, Alg. 3 lines 15-29): every vertex discovered
+  this layer is identified by its negative ``P`` entry and its bit is
+  re-set exactly — what makes the non-atomic vectorization legal.
+
+Two drivers expose the pipeline:
+
+* ``traverse``          — the **fused** engine: the whole search (all
+  layers, all roots) is ONE ``lax.while_loop`` over statically padded
+  buffers.  No host synchronization inside the layer loop; per-layer
+  stats (Table 1 counters + chosen mode) are written into a preallocated
+  on-device buffer and read back once after the loop.  Supports batched
+  multi-root search via a leading root axis on every state array.
+* ``traverse_hostloop``  — the legacy Python layer loop with
+  power-of-two shape buckets (exact per-layer shapes, a few recompiles).
+  Kept for A/B measurement of the removed layer-loop overhead
+  (benchmarks/bfs_batched.py) and for workload studies.
+
+The public drivers ``bfs_parallel.run_bfs``,
+``bfs_vectorized.run_bfs_vectorized`` and ``bfs_hybrid.run_bfs_hybrid``
+are thin wrappers selecting a policy; ``bfs_distributed`` builds its
+shard_map per-chip step from `edge_stream` + `candidate_scatter`.
+"""
+from __future__ import annotations
+
+import functools
+import operator
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core.csr import Csr, init_visited, padded_vertex_count
+from repro.kernels import ops
+
+MODE_SCALAR = 0     # plain-jnp Algorithm 2/3 layer
+MODE_SIMD = 1       # §4 Pallas expansion kernel (top-down)
+MODE_BOTTOMUP = 2   # frontier-testing kernel (hybrid bottom-up)
+
+MODE_NAMES = {MODE_SCALAR: "topdown", MODE_SIMD: "topdown",
+              MODE_BOTTOMUP: "bottomup"}
+
+# on-device per-layer stats buffer columns
+_ST_FRONTIER, _ST_EDGES, _ST_DISCOVERED, _ST_MODE, _ST_ACTIVE = range(5)
+
+
+class BfsState(NamedTuple):
+    frontier: jax.Array     # input bitmap (W,) uint32 — (B, W) batched
+    visited: jax.Array      # visited bitmap (W,) uint32
+    parent: jax.Array       # P, (V_pad,) int32; init = V ("infinity")
+    layer: jax.Array        # scalar int32
+
+
+class LayerStats(NamedTuple):
+    layer: int
+    frontier_vertices: int  # |in|  (Table 1 "Vertices")
+    edges_examined: int     # Σ deg(in)  (Table 1 "Edges")
+    discovered: int         # |out| (Table 1 "Traversed vertices")
+
+
+class Workload(NamedTuple):
+    """On-device counters a `DirectionPolicy` decides from (§4.1).
+
+    In batched mode the counters are summed over the root batch **in
+    float32**: per-root edge counts are int32-bounded (E < 2^31, the
+    CSR invariant), but a batch of B roots can sum past 2^31; policies
+    only take ratios/thresholds of these, so float32 precision is
+    ample.  ``n_roots`` lets per-graph thresholds (Beamer's V/beta)
+    scale to the batch.
+    """
+    layer: jax.Array                 # int32 scalar
+    frontier_vertices: jax.Array     # scalar (batch-summed, may be f32)
+    frontier_edges: jax.Array        # scalar (batch-summed, may be f32)
+    unvisited_vertices: jax.Array    # scalar (0 unless needed)
+    unvisited_edges: jax.Array       # scalar
+    n_vertices: int                  # static |V|
+    bottom_up: jax.Array             # bool scalar, previous direction
+    n_roots: int = 1                 # static batch width
+
+
+class EngineResult(NamedTuple):
+    state: BfsState          # final state; batched arrays iff multi-root
+    depths: jax.Array        # (B,) int32: layers each root stayed active
+    stats: jax.Array         # (max_layers, 5) int32 on-device buffer
+
+
+# ---------------------------------------------------------------------------
+# Direction policies
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TopDown:
+    """Always the scalar top-down layer (Algorithms 2/3)."""
+    modes = (MODE_SCALAR,)
+    needs_unvisited = False
+
+    def decide(self, w: Workload):
+        return jnp.int32(MODE_SCALAR), jnp.asarray(False)
+
+
+@dataclass(frozen=True)
+class ThresholdSimd:
+    """§4.1 adaptive policy: SIMD kernel on layers examining at least
+    ``simd_threshold`` edges, scalar elsewhere."""
+    simd_threshold: int = 16_384
+    modes = (MODE_SCALAR, MODE_SIMD)
+    needs_unvisited = False
+
+    def decide(self, w: Workload):
+        mode = jnp.where(w.frontier_edges >= self.simd_threshold,
+                         MODE_SIMD, MODE_SCALAR)
+        return mode.astype(jnp.int32), jnp.asarray(False)
+
+
+@dataclass(frozen=True)
+class PaperLiteralLayers:
+    """The paper's literal §4.1 policy: SIMD on an explicit layer set
+    (the "first two [fat] layers"), scalar elsewhere."""
+    simd_layers: tuple[int, ...] = (1, 2)
+    modes = (MODE_SCALAR, MODE_SIMD)
+    needs_unvisited = False
+
+    def decide(self, w: Workload):
+        hit = functools.reduce(
+            operator.or_, [w.layer == l for l in self.simd_layers],
+            jnp.asarray(False))
+        mode = jnp.where(hit, MODE_SIMD, MODE_SCALAR)
+        return mode.astype(jnp.int32), jnp.asarray(False)
+
+
+@dataclass(frozen=True)
+class BeamerHybrid:
+    """Direction-optimizing switch [Beamer 2012] with hysteresis:
+    down when the frontier's out-edges exceed unexplored/alpha, back up
+    when the frontier shrinks below V/beta.  Top-down layers use the
+    SIMD kernel (the arXiv:1704.02259 hybrid vectorization)."""
+    alpha: float = 14.0
+    beta: float = 24.0
+    modes = (MODE_SIMD, MODE_BOTTOMUP)
+    needs_unvisited = True
+
+    def decide(self, w: Workload):
+        f_edges = w.frontier_edges.astype(jnp.float32)
+        u_edges = w.unvisited_edges.astype(jnp.float32)
+        f_count = w.frontier_vertices.astype(jnp.float32)
+        switch_down = (~w.bottom_up) & (f_edges > u_edges / self.alpha)
+        # V/beta scales by the batch width: counters are batch-summed
+        switch_up = w.bottom_up & (
+            f_count < w.n_vertices * w.n_roots / self.beta)
+        bottom_up = jnp.where(switch_down, True,
+                              jnp.where(switch_up, False, w.bottom_up))
+        mode = jnp.where(bottom_up & (w.unvisited_vertices > 0),
+                         MODE_BOTTOMUP, MODE_SIMD)
+        return mode.astype(jnp.int32), bottom_up
+
+
+# ---------------------------------------------------------------------------
+# Shared per-layer building blocks
+# ---------------------------------------------------------------------------
+
+def apportion(csr_colstarts: jax.Array, csr_rows: jax.Array,
+              frontier_list: jax.Array, n_vertices: int, n_slots: int):
+    """Map ``n_slots`` edge slots onto the frontier's adjacency lists.
+
+    frontier_list is sentinel-padded (id == n_vertices => empty).
+    Returns (u, v, valid) arrays of length n_slots.
+
+    Owner lookup is a scatter + prefix-sum instead of a binary search:
+    ``owner[slot] = #frontier vertices whose adjacency ends at or
+    before slot`` = cumsum of end-offset markers.  A vectorized
+    searchsorted lowers to a log2(F)-iteration while loop that re-reads
+    the full slot array every pass (measured 16.3 GB/layer at SCALE-27
+    per chip); the prefix-sum form is two passes (§Perf iteration 2).
+    """
+    is_real = frontier_list < n_vertices
+    safe = jnp.where(is_real, frontier_list, 0)
+    deg = jnp.where(is_real,
+                    csr_colstarts[safe + 1] - csr_colstarts[safe], 0)
+    cum = jnp.cumsum(deg, dtype=jnp.int32)
+    total = cum[-1] if cum.shape[0] else jnp.int32(0)
+    slots = jnp.arange(n_slots, dtype=jnp.int32)
+    # scatter a marker at each vertex's END offset; prefix-sum counts
+    # how many adjacency lists finished at or before each slot
+    markers = (jnp.zeros((n_slots,), jnp.int32)
+               .at[cum].add(1, mode="drop"))
+    owner = jnp.cumsum(markers, dtype=jnp.int32)
+    owner_c = jnp.clip(owner, 0, frontier_list.shape[0] - 1)
+    prev = jnp.where(owner_c > 0, cum[jnp.maximum(owner_c - 1, 0)], 0)
+    u = frontier_list[owner_c]
+    valid = slots < total
+    u_safe = jnp.where(valid, u, 0)
+    e_idx = csr_colstarts[u_safe] + (slots - prev)
+    e_idx = jnp.clip(e_idx, 0, csr_rows.shape[0] - 1)
+    v = csr_rows[e_idx]
+    return u.astype(jnp.int32), v, valid
+
+
+def edge_stream(colstarts, rows, frontier_words, list_size: int,
+                n_vertices: int, n_slots: int):
+    """The engine's gather phase: bitmap -> apportioned (u, v, valid).
+
+    Also the per-chip local step of the distributed program — the chip
+    passes its rebased CSR slice and its slice of the frontier bitmap.
+    """
+    frontier_list = bm.compact(frontier_words, list_size, n_vertices)
+    return apportion(colstarts, rows, frontier_list, n_vertices, n_slots)
+
+
+def candidate_scatter(u, v, valid, visited, n_vertices: int, v_cap: int):
+    """Encode a layer's discoveries as a min-parent candidate array.
+
+    The deterministic merge primitive of the distributed engine step:
+    INF (== n_vertices) everywhere, min discovering parent where a
+    valid undiscovered candidate exists.  ``pmin``/``all_to_all`` of
+    these arrays resolves inter-chip duplicates reproducibly.
+    """
+    undiscovered = ~bm.test_bits(visited, v)
+    mask = valid & undiscovered & (v < n_vertices)
+    idx = jnp.where(mask, v, v_cap)
+    cand = jnp.full((v_cap,), n_vertices, jnp.int32)
+    return cand.at[idx].min(u, mode="drop")
+
+
+def restore_jnp(parent, out, visited, n_vertices: int):
+    """Pure-jnp restoration (§3.3.2): repair racy bitmap drops from the
+    negative P marks.  Returns (parent, out, visited) all fixed."""
+    marked = parent < 0
+    repaired = bm.pack_bool(marked)
+    return (jnp.where(marked, parent + n_vertices, parent),
+            out | repaired, visited | repaired)
+
+
+@jax.jit
+def row_popcounts(words):
+    """Set-bit count over the trailing word axis: (B, W) -> (B,) or
+    (W,) -> scalar.  The one popcount used by loop conditions, depth
+    tracking, and the serve engine's finished-slot scan."""
+    return jax.lax.population_count(words).astype(jnp.int32).sum(axis=-1)
+
+
+def masked_edge_sum(dense, deg):
+    """Σ deg over True lanes of a dense vertex mask (trailing V axis) —
+    the Table 1 'Edges' counter (int32; E < 2^31 is a framework
+    invariant asserted at CSR build)."""
+    return jnp.where(dense, deg, 0).sum(axis=-1, dtype=jnp.int32)
+
+
+def _next_pow2(n: int, lo: int = 128) -> int:
+    n = max(int(n), lo)
+    return 1 << (n - 1).bit_length()
+
+
+def _auto_tile(e_size: int, interpret: bool) -> int:
+    if not interpret:
+        return 1024
+    # interpret mode unrolls the grid at trace time: keep it short
+    return max(1024, e_size // 32)
+
+
+def _resolve_tile(tile: int | None, e_pad: int) -> int:
+    interpret = jax.default_backend() != "tpu"
+    if tile is None:
+        return _auto_tile(e_pad, interpret)
+    if interpret:
+        # interpret mode unrolls the kernel grid at trace time; clamp
+        # the requested tile so the full-E fused layer stays <=64 steps
+        # (on TPU the requested tile is honored exactly)
+        return max(int(tile), _auto_tile(e_pad, True) // 2)
+    return int(tile)
+
+
+# ---------------------------------------------------------------------------
+# The three expansion flavours (batched: leading root axis on state)
+# ---------------------------------------------------------------------------
+
+def scalar_expand(colstarts, rows, n_vertices: int, frontier, visited,
+                  parent, f_size: int, e_size: int, algorithm: str):
+    """One plain-jnp top-down layer (the canonical Algorithm 2/3 body).
+
+    The single home of the scalar gather-test-mask-scatter(-restore)
+    sequence: the fused engine, the hostloop driver, and
+    ``bfs_parallel.expand_*`` all call this.  Returns
+    (out, visited, parent).
+    """
+    v_pad = parent.shape[0]
+    u, v, valid = edge_stream(colstarts, rows, frontier, f_size,
+                              n_vertices, e_size)
+    if algorithm == "nonsimd":         # Algorithm 2: exact dense updates
+        vis_dense = bm.unpack_bool(visited)
+        mask = valid & ~vis_dense[jnp.clip(v, 0, v_pad - 1)]
+        idx = jnp.where(mask, v, v_pad)
+        parent = parent.at[idx].set(u, mode="drop")
+        out_dense = (jnp.zeros((v_pad,), bool)
+                     .at[idx].set(True, mode="drop"))
+        out = bm.pack_bool(out_dense)
+        return out, visited | out, parent
+    # Algorithm 3: racy bitmap scatter + restoration
+    undiscovered = ~(bm.test_bits(visited, v)
+                     | bm.test_bits(frontier, v))
+    mask = valid & undiscovered
+    idx = jnp.where(mask, v, v_pad)
+    parent = parent.at[idx].set(u - n_vertices, mode="drop")
+    out = bm.set_bits_racy(bm.zeros(v_pad), v, mask)
+    parent, out, visited = restore_jnp(parent, out, visited, n_vertices)
+    return out, visited, parent
+
+
+def _make_scalar_step(colstarts, rows, n_vertices: int, v_pad: int,
+                      e_pad: int, algorithm: str):
+    """Plain-jnp Algorithm 2/3 layer, vmapped over the root axis."""
+
+    def one(frontier, visited, parent):
+        return scalar_expand(colstarts, rows, n_vertices, frontier,
+                             visited, parent, v_pad, e_pad, algorithm)
+
+    return jax.vmap(one)
+
+
+def kernel_expand_restore(expand_fn, nbr, cand, valid, frontier,
+                          visited, parent, n_vertices: int, tile: int,
+                          check_frontier: bool = False):
+    """Racy kernel expansion + restoration + delta merge (§3.3.2).
+
+    The single home of the expand -> restore -> OR-delta sequence;
+    ``expand_fn`` is `ops.expand` (single root) or `ops.expand_batched`
+    (leading root axis).  Returns (out, visited, parent)."""
+    out_racy, p_racy = expand_fn(
+        nbr, cand, valid.astype(jnp.int32), frontier, visited,
+        jnp.zeros_like(frontier), parent, n_vertices=n_vertices,
+        tile=tile, check_frontier=check_frontier)
+    p_fixed, delta = ops.restore(p_racy, n_vertices=n_vertices)
+    return out_racy | delta, visited | delta, p_fixed
+
+
+def _make_simd_step(colstarts, rows, n_vertices: int, v_pad: int,
+                    e_pad: int, tile: int):
+    """§4 SIMD layer: batched Pallas expansion + kernel restoration."""
+
+    def step(frontier, visited, parent):
+        u, v, valid = jax.vmap(
+            lambda f: edge_stream(colstarts, rows, f, v_pad, n_vertices,
+                                  e_pad))(frontier)
+        return kernel_expand_restore(ops.expand_batched, u, v, valid,
+                                     frontier, visited, parent,
+                                     n_vertices, tile)
+
+    return step
+
+
+def _bottomup_stream(colstarts, rows, visited_words, n_vertices: int,
+                     c_size: int, e_size: int):
+    """Apportion the adjacency of *unvisited* vertices (one root)."""
+    unvisited = ~bm.unpack_bool(visited_words)
+    (cands,) = jnp.nonzero(unvisited, size=c_size,
+                           fill_value=n_vertices)
+    return apportion(colstarts, rows, cands.astype(jnp.int32),
+                     n_vertices, e_size)
+
+
+def _make_bottomup_step(colstarts, rows, n_vertices: int, v_pad: int,
+                        e_pad: int, tile: int):
+    """Bottom-up layer: apportion the *unvisited* adjacency, test each
+    neighbor against the frontier bitmap inside the kernel."""
+
+    def step(frontier, visited, parent):
+        cand, nbr, valid = jax.vmap(
+            lambda vis: _bottomup_stream(colstarts, rows, vis,
+                                         n_vertices, v_pad,
+                                         e_pad))(visited)
+        return kernel_expand_restore(ops.expand_batched, nbr, cand,
+                                     valid, frontier, visited, parent,
+                                     n_vertices, tile,
+                                     check_frontier=True)
+
+    return step
+
+
+def _make_steps(colstarts, rows, n_vertices, v_pad, e_pad, algorithm,
+                tile):
+    return {
+        MODE_SCALAR: _make_scalar_step(colstarts, rows, n_vertices,
+                                       v_pad, e_pad, algorithm),
+        MODE_SIMD: _make_simd_step(colstarts, rows, n_vertices, v_pad,
+                                   e_pad, tile),
+        MODE_BOTTOMUP: _make_bottomup_step(colstarts, rows, n_vertices,
+                                           v_pad, e_pad, tile),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The fused driver: whole search (all layers, all roots) in one launch
+# ---------------------------------------------------------------------------
+
+def init_root_state(root, base_visited, n_vertices: int):
+    """Frontier/visited/parent arrays for one fresh root.
+
+    ``base_visited`` is the padding-premarked visited bitmap
+    (`csr.init_visited`).  The single init convention shared by the
+    fused engine and the serve engine's slot refill."""
+    v_pad = base_visited.shape[0] * bm.BITS_PER_WORD
+    frontier = bm.set_bits_exact(bm.zeros(v_pad), root)
+    visited = bm.set_bits_exact(base_visited, root)
+    parent = jnp.full((v_pad,), n_vertices, jnp.int32).at[root].set(root)
+    return frontier, visited, parent
+
+
+def _init_batched(roots, n_vertices: int, v_pad: int):
+    pad_ids = jnp.arange(n_vertices, v_pad, dtype=jnp.int32)
+    base_vis = bm.set_bits_exact(bm.zeros(v_pad), pad_ids)
+    return jax.vmap(
+        lambda r: init_root_state(r, base_vis, n_vertices)
+    )(roots.astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_vertices", "policy", "algorithm",
+                              "tile", "max_layers"))
+def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
+                    policy=TopDown(), algorithm: str = "simd",
+                    tile: int = 1024, max_layers: int = 64
+                    ) -> EngineResult:
+    """The fused engine on raw CSR arrays (shard_map/dry-run friendly).
+
+    ``roots`` is a (B,) int32 array; every state array carries the
+    leading root axis.  The entire search is one ``lax.while_loop`` —
+    no host synchronization between layers.
+    """
+    v_pad = padded_vertex_count(n_vertices)
+    e_pad = int(rows.shape[0])
+    deg = colstarts[1:] - colstarts[:-1]
+    steps = _make_steps(colstarts, rows, n_vertices, v_pad, e_pad,
+                        algorithm, tile)
+    modes = tuple(policy.modes)
+
+    def rows_workload(words):          # (B, W) -> per-root counters
+        dense = jax.vmap(bm.unpack_bool)(words)[:, :n_vertices]
+        return row_popcounts(words), masked_edge_sum(dense, deg)
+
+    frontier, visited, parent = _init_batched(roots, n_vertices, v_pad)
+    n_roots = roots.shape[0]
+    carry0 = (frontier, visited, parent, jnp.int32(0), jnp.asarray(False),
+              jnp.zeros((n_roots,), jnp.int32),
+              jnp.zeros((max_layers, 5), jnp.int32))
+
+    def cond(s):
+        frontier, layer = s[0], s[3]
+        return (row_popcounts(frontier).sum() > 0) & (layer < max_layers)
+
+    def body(s):
+        frontier, visited, parent, layer, bottom_up, depths, stats = s
+        f_count_b, f_edges_b = rows_workload(frontier)
+        # policy counters aggregate in float32: per-root values are
+        # int32-safe, the batch sum may not be (see Workload docstring)
+        if policy.needs_unvisited:
+            u_dense = ~jax.vmap(bm.unpack_bool)(visited)[:, :n_vertices]
+            u_count = u_dense.sum(dtype=jnp.float32)
+            u_edges = masked_edge_sum(u_dense, deg) \
+                .astype(jnp.float32).sum()
+        else:
+            u_count = u_edges = jnp.float32(0)
+        w = Workload(layer, f_count_b.astype(jnp.float32).sum(),
+                     f_edges_b.astype(jnp.float32).sum(), u_count,
+                     u_edges, n_vertices, bottom_up,
+                     n_roots=roots.shape[0])
+        mode, bottom_up = policy.decide(w)
+
+        if len(modes) == 1:
+            new_f, visited, parent = steps[modes[0]](frontier, visited,
+                                                     parent)
+        else:
+            branch = sum(jnp.where(mode == m, jnp.int32(i), 0)
+                         for i, m in enumerate(modes))
+            new_f, visited, parent = jax.lax.switch(
+                branch,
+                [functools.partial(lambda fn, op: fn(*op), steps[m])
+                 for m in modes],
+                (frontier, visited, parent))
+        discovered = row_popcounts(new_f).sum()
+        # stats stay int32 (exact Table 1 counters; single-root always
+        # fits, extreme batched sums may clip — diagnostics only)
+        stats = stats.at[layer].set(
+            jnp.stack([f_count_b.sum(), f_edges_b.sum(), discovered,
+                       mode, jnp.int32(1)]))
+        depths = depths + (f_count_b > 0).astype(jnp.int32)
+        return (new_f, visited, parent, layer + 1, bottom_up, depths,
+                stats)
+
+    frontier, visited, parent, layer, _, depths, stats = \
+        jax.lax.while_loop(cond, body, carry0)
+    return EngineResult(BfsState(frontier, visited, parent, layer),
+                        depths, stats)
+
+
+def traverse(csr: Csr, roots, *, policy=None, algorithm: str = "simd",
+             tile: int | None = None, max_layers: int = 64
+             ) -> EngineResult:
+    """Run the fused engine on a `Csr` for one root or a batch of roots.
+
+    Args:
+      roots: an int (single-root — result arrays are unbatched) or a
+        sequence of ints (multi-root in one launch; every result array
+        gains a leading root axis).
+      policy: a direction policy object (default `TopDown()`).
+      algorithm: "simd" | "nonsimd" — which scalar expander backs
+        ``MODE_SCALAR`` layers.
+      tile: SIMD kernel edge-tile (None = auto for the backend).
+
+    In batched mode the policy decides ONCE per layer from the
+    batch-summed counters (one mode for the whole batch keeps the loop
+    single-branch); finished roots flow through as no-ops.
+    """
+    if algorithm not in ("simd", "nonsimd"):
+        raise ValueError(f"unknown scalar algorithm {algorithm!r}")
+    single = jnp.ndim(roots) == 0
+    roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
+    res = traverse_arrays(
+        csr.colstarts, csr.rows, roots_arr, n_vertices=csr.n_vertices,
+        policy=policy if policy is not None else TopDown(),
+        algorithm=algorithm,
+        tile=_resolve_tile(tile, csr.n_edges_padded),
+        max_layers=max_layers)
+    if single:
+        st = res.state
+        return EngineResult(
+            BfsState(st.frontier[0], st.visited[0], st.parent[0],
+                     st.layer),
+            res.depths[0], res.stats)
+    return res
+
+
+def layer_stats(result: EngineResult) -> list[LayerStats]:
+    """Decode the on-device stats buffer (one transfer, post-loop)."""
+    buf = np.asarray(result.stats)
+    out = []
+    for i in range(buf.shape[0]):
+        if not buf[i, _ST_ACTIVE]:
+            break
+        out.append(LayerStats(layer=i,
+                              frontier_vertices=int(buf[i, _ST_FRONTIER]),
+                              edges_examined=int(buf[i, _ST_EDGES]),
+                              discovered=int(buf[i, _ST_DISCOVERED])))
+    return out
+
+
+def direction_log(result: EngineResult) -> list[str]:
+    """Per-layer direction strings ("topdown"/"bottomup") from stats."""
+    buf = np.asarray(result.stats)
+    return [MODE_NAMES[int(buf[i, _ST_MODE])]
+            for i in range(buf.shape[0]) if buf[i, _ST_ACTIVE]]
+
+
+# ---------------------------------------------------------------------------
+# One batched layer tick (the serve engine's step function)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_vertices", "algorithm"))
+def layer_step(colstarts, rows, frontier, visited, parent, *,
+               n_vertices: int, algorithm: str = "simd"):
+    """Advance every root in the batch by exactly one layer.
+
+    Used by `serve.graph_engine.GraphEngine` as its tick: the batch
+    shape never changes, so this compiles once per engine.  Slots with
+    an empty frontier flow through as no-ops (their edge stream is all
+    sentinel).
+    """
+    v_pad = parent.shape[-1]
+    e_pad = int(rows.shape[0])
+    step = _make_scalar_step(colstarts, rows, n_vertices, v_pad, e_pad,
+                             algorithm)
+    return step(frontier, visited, parent)
+
+
+# ---------------------------------------------------------------------------
+# Legacy host-loop driver (pow2 buckets; for A/B and workload studies)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _layer_workload(frontier, colstarts, n_vertices):
+    """Concrete (|frontier|, Σdeg) for bucket selection."""
+    dense = bm.unpack_bool(frontier)[:n_vertices]
+    deg = colstarts[1:] - colstarts[:-1]
+    return row_popcounts(frontier), masked_edge_sum(dense, deg)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _unvisited_workload(visited, colstarts, n_vertices):
+    dense = ~bm.unpack_bool(visited)[:n_vertices]
+    deg = colstarts[1:] - colstarts[:-1]
+    return dense.sum(dtype=jnp.int32), masked_edge_sum(dense, deg)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_vertices", "mode", "algorithm",
+                                    "f_size", "e_size", "tile"))
+def _hostloop_layer(colstarts, rows, frontier, visited, parent, *,
+                    n_vertices, mode, algorithm, f_size, e_size, tile):
+    """One bucketed layer at exact pow2 shapes, any mode."""
+    if mode == MODE_SCALAR:
+        return scalar_expand(colstarts, rows, n_vertices, frontier,
+                             visited, parent, f_size, e_size, algorithm)
+    if mode == MODE_SIMD:
+        u, v, valid = edge_stream(colstarts, rows, frontier, f_size,
+                                  n_vertices, e_size)
+        return kernel_expand_restore(ops.expand, u, v, valid, frontier,
+                                     visited, parent, n_vertices, tile)
+    # MODE_BOTTOMUP: f_size buckets the unvisited-candidate list
+    cand, nbr, valid = _bottomup_stream(colstarts, rows, visited,
+                                        n_vertices, f_size, e_size)
+    return kernel_expand_restore(ops.expand, nbr, cand, valid, frontier,
+                                 visited, parent, n_vertices, tile,
+                                 check_frontier=True)
+
+
+def traverse_hostloop(csr: Csr, root: int, *, policy=None,
+                      algorithm: str = "simd", tile: int | None = None,
+                      max_layers: int = 1024,
+                      collect_stats: bool = False):
+    """Python layer-loop driver with power-of-two shape buckets.
+
+    Exact work per layer (the paper's Table 1 workload), at the cost of
+    one ``int(count)`` device sync and a possible recompile per new
+    bucket pair.  The measured A/B counterpart of `traverse`.
+    Returns (state, stats, direction_log).
+    """
+    policy = policy if policy is not None else TopDown()
+    interpret = jax.default_backend() != "tpu"
+    v_pad = csr.n_vertices_padded
+    frontier = bm.set_bits_exact(bm.zeros(v_pad),
+                                 jnp.asarray([root], jnp.int32))
+    visited = bm.set_bits_racy(init_visited(csr),
+                               jnp.asarray([root], jnp.int32))
+    parent = jnp.full((v_pad,), csr.n_vertices, jnp.int32) \
+        .at[root].set(root)
+    bottom_up = jnp.asarray(False)
+    stats: list[LayerStats] = []
+    log: list[str] = []
+    layer = 0
+    for _ in range(max_layers):
+        count, edges = _layer_workload(frontier, csr.colstarts,
+                                       csr.n_vertices)
+        count, edges = int(count), int(edges)
+        if count == 0:
+            break
+        if policy.needs_unvisited:
+            u_count, u_edges = _unvisited_workload(visited, csr.colstarts,
+                                                   csr.n_vertices)
+            u_count, u_edges = int(u_count), int(u_edges)
+        else:
+            u_count = u_edges = 0
+        w = Workload(jnp.int32(layer), jnp.int32(count), jnp.int32(edges),
+                     jnp.int32(u_count), jnp.int32(u_edges),
+                     csr.n_vertices, bottom_up)
+        mode_t, bottom_up = policy.decide(w)
+        mode = int(mode_t)
+        if mode == MODE_BOTTOMUP:
+            f_size = _next_pow2(u_count)
+            e_size = _next_pow2(max(u_edges, 1))
+        else:
+            f_size = _next_pow2(count)
+            e_size = _next_pow2(max(edges, 1))
+        t = tile if tile is not None else _auto_tile(e_size, interpret)
+        frontier, visited, parent = _hostloop_layer(
+            csr.colstarts, csr.rows, frontier, visited, parent,
+            n_vertices=csr.n_vertices, mode=mode, algorithm=algorithm,
+            f_size=f_size, e_size=e_size, tile=t)
+        log.append(MODE_NAMES[mode])
+        if collect_stats:
+            stats.append(LayerStats(
+                layer=layer, frontier_vertices=count,
+                edges_examined=edges,
+                discovered=int(bm.popcount(frontier))))
+        layer += 1
+    state = BfsState(frontier, visited, parent, jnp.int32(layer))
+    return state, stats, log

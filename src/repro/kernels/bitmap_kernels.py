@@ -11,7 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
 
 DEFAULT_TILE = 4096
 
@@ -41,7 +42,7 @@ def popcount(words, *, tile: int = DEFAULT_TILE, interpret: bool = True):
         in_specs=[pl.BlockSpec((tile,), lambda t: (t,))],
         out_specs=pl.BlockSpec((1,), lambda t: (0,)),
         out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="bitmap_popcount",

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.bitmap import BITS_PER_WORD
 from repro.kernels import bitmap_kernels, frontier_expand as fe
 from repro.kernels import restoration as rest
 
@@ -48,16 +49,60 @@ def expand(nbr, cand, valid, frontier, visited, out_init, p_init, *,
         check_frontier=check_frontier, interpret=interpret)
 
 
-def restore(parent, *, n_vertices: int, tile: int = rest.DEFAULT_TILE,
-            interpret: bool | None = None):
-    """Run the restoration kernel; tile auto-shrinks to divide V_pad."""
+def expand_batched(nbr, cand, valid, frontier, visited, out_init, p_init,
+                   *, n_vertices: int, tile: int = fe.DEFAULT_TILE,
+                   check_frontier: bool = False,
+                   interpret: bool | None = None):
+    """Pad + run the batched (leading root-axis) expansion kernel.
+
+    All arrays carry a leading (B,) root axis; each root's search
+    expands independently in one launch.  The VMEM budget is per-root
+    (the kernel pins one root's bitmaps/P at a time).
+    """
     if interpret is None:
         interpret = _interpret_default()
-    v_pad = parent.shape[0]
+    budget = fe.vmem_budget(visited.shape[1], p_init.shape[1], tile)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"frontier_expand working set {budget/2**20:.1f} MiB exceeds "
+            f"VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py) or reduce the tile")
+    n = cand.shape[1]
+    pad = (-n) % tile
+    if pad:
+        z = jnp.zeros((cand.shape[0], pad), jnp.int32)
+        nbr = jnp.concatenate([nbr, z], axis=1)
+        cand = jnp.concatenate([cand, z], axis=1)
+        valid = jnp.concatenate([valid.astype(jnp.int32), z], axis=1)
+    return fe.frontier_expand_batched(
+        nbr, cand, valid.astype(jnp.int32), frontier, visited, out_init,
+        p_init, n_vertices=n_vertices, tile=tile,
+        check_frontier=check_frontier, interpret=interpret)
+
+
+def restore(parent, *, n_vertices: int, tile: int = rest.DEFAULT_TILE,
+            interpret: bool | None = None):
+    """Run the restoration kernel; tile auto-shrinks to divide V_pad.
+
+    Accepts a batched (B, V_pad) parent too: restoration is
+    tile-independent, so the batch flattens through the same kernel
+    (the tile divides V_pad, so no tile straddles two roots); the
+    delta bitmap comes back as (B, W).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    v_pad = parent.shape[-1]
     t = min(tile, v_pad)
     while v_pad % t:
         t //= 2
     t = max(t, 32)
+    if parent.ndim == 2:
+        b = parent.shape[0]
+        p, delta = rest.restoration(parent.reshape(-1),
+                                    n_vertices=n_vertices, tile=t,
+                                    interpret=interpret)
+        return (p.reshape(b, v_pad),
+                delta.reshape(b, v_pad // BITS_PER_WORD))
     return rest.restoration(parent, n_vertices=n_vertices, tile=t,
                             interpret=interpret)
 

@@ -1,0 +1,13 @@
+"""Version-tolerant access to renamed Pallas TPU symbols.
+
+jax has shipped the TPU compiler-params dataclass under two names
+across releases (``TPUCompilerParams`` in the 0.4.3x line,
+``CompilerParams`` before and after).  Every kernel module resolves it
+through here so a jax upgrade/downgrade is a one-line fix.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -25,9 +25,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bitmap import BITS_PER_WORD
+from repro.kernels.pallas_compat import CompilerParams
 
 DEFAULT_TILE = 4096  # vertices per grid step; 128 words out per step
 
@@ -71,7 +71,7 @@ def restoration(parent, *, n_vertices: int, tile: int = DEFAULT_TILE,
         out_shape=[
             jax.ShapeDtypeStruct((v_pad,), jnp.int32),
             jax.ShapeDtypeStruct((v_pad // BITS_PER_WORD,), jnp.uint32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="bfs_restoration",

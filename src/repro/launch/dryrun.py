@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import registry
 from repro.configs.bfs_graph500 import GRAPHS
 from repro.launch import inputs
@@ -298,11 +299,11 @@ def lower_bfs_cell(graph_name: str, mesh_name: str,
     program_full = make_bfs_program(v_loc, g.n_vertices, n_chips, axes,
                                     merge=merge)
     p_out = P() if merge == "allreduce" else P(axes)
-    shard = jax.shard_map(
-        program, mesh=mesh,
+    shard = compat.shard_map(
+        program, mesh,
         in_specs=(P(axes), P(axes), P()), out_specs=(p_out, P()))
-    shard_full = jax.shard_map(
-        program_full, mesh=mesh,
+    shard_full = compat.shard_map(
+        program_full, mesh,
         in_specs=(P(axes), P(axes), P()), out_specs=(p_out, P()))
     rows_s = jax.ShapeDtypeStruct((n_chips, e_loc), jnp.int32)
     cs_s = jax.ShapeDtypeStruct((n_chips, v_loc + 1), jnp.int32)

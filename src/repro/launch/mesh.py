@@ -11,7 +11,12 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:                       # jax >= 0.5; absent on the 0.4.x line
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 from repro.models.sharding import DEFAULT_RULES, SINGLE_POD_RULES
 
@@ -19,11 +24,12 @@ from repro.models.sharding import DEFAULT_RULES, SINGLE_POD_RULES
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
 

@@ -1,1 +1,5 @@
-"""Substrate: serve."""
+"""Substrate: serve.
+
+  engine        continuous-batching LM decode engine
+  graph_engine  continuous-batching BFS query service (same design)
+"""

@@ -1,0 +1,132 @@
+"""Continuous-batching BFS query service over one resident graph.
+
+The graph analogue of `serve.engine.ServeEngine`: a request pool, a
+fixed query batch with slot reuse (a finished query's slot is refilled
+from the queue on the next tick — "continuous batching"), and a batch
+shape that never changes so the jitted tick compiles exactly once.
+
+One tick == one BFS layer for EVERY active slot, via the engine's
+batched `layer_step` (leading root axis).  Slots whose frontier has
+emptied flow through as no-ops — their edge stream is all sentinel —
+until the host harvests the parent array and refills the slot.  The
+per-tick host sync (a (B,) frontier-count readback) is the serving
+tick boundary, exactly like ServeEngine's per-token logits readback;
+whole-query throughput without any tick sync is what
+`engine.traverse` with a root batch provides.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core import engine
+from repro.core.csr import Csr, init_visited
+
+
+@functools.partial(jax.jit, static_argnames=("slot", "n_vertices"))
+def _reset_slot(frontier, visited, parent, base_visited, root, *,
+                slot: int, n_vertices: int):
+    """Re-arm one batch slot for a fresh root (masked row updates).
+
+    Module-level so the jit cache survives across GraphEngine
+    instances (compiles once per (batch shape, slot))."""
+    f_row, vis_row, p_row = engine.init_root_state(root, base_visited,
+                                                   n_vertices)
+    return (frontier.at[slot].set(f_row),
+            visited.at[slot].set(vis_row),
+            parent.at[slot].set(p_row))
+
+
+
+
+@dataclass
+class BfsQuery:
+    uid: int
+    root: int
+    parent: np.ndarray | None = None   # Graph500 convention (-1 unreached)
+    n_layers: int = 0
+    done: bool = False
+    truncated: bool = False            # hit the max_layers budget: the
+    #                                    parent array is PARTIAL (-1 may
+    #                                    mean "not reached yet")
+    meta: dict = field(default_factory=dict)
+
+
+class GraphEngine:
+    """Serve many concurrent BFS queries against one device-resident CSR.
+
+    Args:
+      csr: the graph (stays on device for the engine's lifetime).
+      batch_slots: fixed query-batch width (compiled once).
+      algorithm: scalar expander flavour for the layer step.
+      max_layers: per-query layer budget (safety valve).
+    """
+
+    def __init__(self, csr: Csr, batch_slots: int = 8,
+                 algorithm: str = "simd", max_layers: int = 64):
+        self.csr = csr
+        self.max_layers = max_layers
+        self.algorithm = algorithm
+        b = batch_slots
+        v_pad = csr.n_vertices_padded
+        w = v_pad // bm.BITS_PER_WORD
+        self.frontier = jnp.zeros((b, w), jnp.uint32)
+        self.visited = jnp.zeros((b, w), jnp.uint32)
+        self.parent = jnp.full((b, v_pad), csr.n_vertices, jnp.int32)
+        self._base_visited = init_visited(csr)
+        self.slots: list[BfsQuery | None] = [None] * b
+        self.queue: list[BfsQuery] = []
+        self.finished: list[BfsQuery] = []
+
+    def submit(self, query: BfsQuery):
+        self.queue.append(query)
+
+    def _fill_slots(self):
+        for i, q in enumerate(self.slots):
+            if (q is None or q.done) and self.queue:
+                nxt = self.queue.pop(0)
+                self.slots[i] = nxt
+                self.frontier, self.visited, self.parent = _reset_slot(
+                    self.frontier, self.visited, self.parent,
+                    self._base_visited, jnp.asarray(nxt.root, jnp.int32),
+                    slot=i, n_vertices=self.csr.n_vertices)
+
+    def _harvest(self, i: int, q: BfsQuery, truncated: bool = False):
+        p = np.asarray(self.parent[i, :self.csr.n_vertices])
+        q.parent = np.where(p >= self.csr.n_vertices, -1, p)
+        q.truncated = truncated
+        q.done = True
+        self.finished.append(q)
+
+    def step(self):
+        """One engine tick: advance every active query by one layer."""
+        self._fill_slots()
+        self.frontier, self.visited, self.parent = engine.layer_step(
+            self.csr.colstarts, self.csr.rows, self.frontier,
+            self.visited, self.parent, n_vertices=self.csr.n_vertices,
+            algorithm=self.algorithm)
+        counts = np.asarray(engine.row_popcounts(self.frontier))
+        for i, q in enumerate(self.slots):
+            if q is None or q.done:
+                continue
+            q.n_layers += 1
+            if counts[i] == 0:
+                self._harvest(i, q)
+            elif q.n_layers >= self.max_layers:
+                self._harvest(i, q, truncated=True)
+
+    def run_until_done(self, max_ticks: int = 100_000) -> int:
+        """Drain the queue; returns the number of ticks taken."""
+        ticks = 0
+        while (self.queue or any(q is not None and not q.done
+                                 for q in self.slots)):
+            self.step()
+            ticks += 1
+            if ticks >= max_ticks:
+                raise RuntimeError("graph serving did not converge")
+        return ticks

@@ -1,0 +1,69 @@
+"""``hypothesis`` with a tiny deterministic fallback sampler.
+
+The property tests only use ``@settings(max_examples=..., deadline=None)``,
+``@given(...)`` and the ``st.integers`` / ``st.lists`` strategies.  When
+the real ``hypothesis`` package is installed (see requirements-dev.txt)
+it is re-exported unchanged; otherwise this module provides a minimal
+drop-in that draws ``max_examples`` pseudo-random cases from a fixed
+per-test seed — no shrinking, but the same invariants get exercised and
+failures are reproducible.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import zlib
+
+    class _Integers:
+        def __init__(self, min_value, max_value):
+            self.min_value, self.max_value = min_value, max_value
+
+        def sample(self, rng):
+            return rng.randint(self.min_value, self.max_value)
+
+    class _Lists:
+        def __init__(self, elements, min_size, max_size):
+            self.elements = elements
+            self.min_size, self.max_size = min_size, max_size
+
+        def sample(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            return [self.elements.sample(rng) for _ in range(n)]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Lists(elements, min_size, max_size)
+
+    st = _Strategies()
+
+    def given(*strats):
+        def deco(fn):
+            # NB: deliberately no functools.wraps — pytest must see a
+            # zero-argument signature, not the strategy parameters
+            # (it would try to resolve them as fixtures).
+            def wrapper():
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(getattr(wrapper, "_max_examples", 20)):
+                    drawn = [s.sample(rng) for s in strats]
+                    fn(*drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

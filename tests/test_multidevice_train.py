@@ -18,7 +18,10 @@ _SCRIPT = textwrap.dedent("""
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    # version-tolerant mesh construction (AxisType compat) lives there
+    from repro.launch.mesh import make_mesh
 
     from repro.configs import registry
     from repro.data.tokens import DataConfig, batch_at
@@ -46,8 +49,7 @@ _SCRIPT = textwrap.dedent("""
         ref_losses.append(float(m["loss"]))
 
     # --- 2x4 mesh pjit ---------------------------------------------------
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = {"data": "data", "model": "model"}
     p_sh = named_shardings(mesh, param_specs(params, model_divisor=4))
     o_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
@@ -76,8 +78,7 @@ _SCRIPT = textwrap.dedent("""
 
     # --- elastic restore onto a different mesh ------------------------
     save("/tmp/elastic_ckpt", 3, {"params": pd, "opt": sd})
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
+    mesh2 = make_mesh((4, 2), ("data", "model"))
     p_sh2 = named_shardings(mesh2, param_specs(params, model_divisor=2))
     restored, _, step_no = restore(
         "/tmp/elastic_ckpt", {"params": params, "opt": state},
