@@ -1,17 +1,22 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-quick bench bench-quick
+.PHONY: test test-quick bench bench-quick bench-formats
 
 test:            ## full tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
 
-test-quick:      ## BFS substrate + engine only (fast inner loop)
+test-quick:      ## BFS substrate + engine + formats (fast inner loop)
 	$(PY) -m pytest -x -q tests/test_bitmap.py tests/test_kernels.py \
-	    tests/test_bfs_correctness.py tests/test_engine.py
+	    tests/test_bfs_correctness.py tests/test_engine.py \
+	    tests/test_formats.py
 
 bench:           ## full benchmark harness
 	$(PY) -m benchmarks.run
 
-bench-quick:     ## the batched-BFS benchmark at CI scale
+bench-quick:     ## batched-BFS + tiny graph-format sweep at CI scale
 	$(PY) -m benchmarks.run --quick --only bfs_batched
+	$(PY) -m benchmarks.run --quick --only bfs_formats
+
+bench-formats:   ## the graph-format sweep (TEPS + bytes per layout)
+	$(PY) -m benchmarks.run --only bfs_formats

@@ -1,0 +1,110 @@
+"""Graph-format sweep: traversal TEPS + bytes-moved per format x policy.
+
+The experiment the formats subsystem exists for (ISSUE 2): on the
+paper's skewed-degree RMAT workload, compare every registered layout
+(`repro.formats`) under a representative direction-policy subset.
+
+Reported per (format, policy):
+
+* ``us_per_call``  — fused single-root traversal wall time;
+* ``teps``         — Graph500 traversed edges / second (undirected,
+  from the reached set's degrees — layout-independent, so rows are
+  directly comparable);
+* ``mb_moved``     — analytic bytes the expansion steps streamed
+  (``fmt.layer_bytes() x layers``; each layout's §4.2 accounting);
+* ``fp_mb``        — device footprint of the built layout.
+
+Plus one build-time line per format (preprocess-on-load cost,
+Graph500 kernel-2 territory) and a headline ``sell_vs_csr`` speedup
+line.  The acceptance expectation is SELL-C-σ at or around CSR parity
+on this skewed workload; interpret-mode CPU timing jitters ~0.8-1.3x
+run to run, so the hard failure (`SELL_VS_CSR_FLOOR`) only triggers
+on structural regressions (e.g. padding blow-up), not noise.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, graph
+from repro.configs.bfs_graph500 import FORMAT_SWEEP
+from repro.core import engine
+from repro.core.csr import traversed_edges
+from repro.formats import autotune, registry
+
+
+SELL_VS_CSR_FLOOR = 0.5   # hard-fail ratio; see module docstring
+
+
+def _policies(cfg):
+    table = {
+        "topdown": engine.TopDown(),
+        "threshold": engine.ThresholdSimd(cfg.simd_threshold),
+        "hybrid": engine.BeamerHybrid(),
+    }
+    return {name: table[name] for name in cfg.policies}
+
+
+def _time(fn, reps: int = 5) -> float:
+    fn()                                   # warmup / compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)                         # least-noise estimator
+
+
+def main(scale: int = 12, cfg=FORMAT_SWEEP) -> None:
+    g = graph(scale)
+    choice = autotune.choose(g)
+    emit(f"bfs_fmt_autotune_s{scale}", 0.0,
+         f"choice={choice.format};skew={choice.stats.degree_skew:.1f};"
+         f"density={choice.stats.density:.4f}")
+
+    rng = np.random.default_rng(7)
+    deg = np.asarray(g.degrees())
+    root = int(rng.choice(np.where(deg > 0)[0]))
+
+    best: dict[str, float] = {}
+    for name in cfg.formats:
+        t0 = time.perf_counter()
+        fmt = registry.get(name).from_graph(g)
+        jax.block_until_ready(jax.tree_util.tree_leaves(fmt))
+        t_build = time.perf_counter() - t0
+        fp = fmt.footprint()
+        emit(f"bfs_fmt_{name}_build_s{scale}", t_build * 1e6,
+             f"fp_mb={fp.total_bytes/2**20:.2f}")
+
+        for pname, policy in _policies(cfg).items():
+            res = engine.traverse(fmt, root, policy=policy)
+            p = res.state.parent[:g.n_vertices]
+            reached = np.asarray(p) < g.n_vertices
+            n_layers = int(res.state.layer)
+            edges = int(traversed_edges(g, reached))
+            t = _time(lambda f=fmt, pol=policy: jax.block_until_ready(
+                engine.traverse(f, root, policy=pol).state.parent))
+            best[name] = min(best.get(name, np.inf), t)
+            emit(f"bfs_fmt_{name}_{pname}_s{scale}", t * 1e6,
+                 f"teps={edges / t:.3e};layers={n_layers};"
+                 f"mb_moved={fmt.layer_bytes() * n_layers / 2**20:.2f};"
+                 f"fp_mb={fp.total_bytes/2**20:.2f}")
+
+    if "csr" in best and "sell" in best:
+        speedup = best["csr"] / best["sell"]
+        emit(f"bfs_fmt_sell_vs_csr_s{scale}", best["sell"] * 1e6,
+             f"speedup={speedup:.2f}x")
+        # regression floor: CPU interpret-mode timing jitters around
+        # parity (~0.8-1.3x run to run), but a structural regression
+        # (e.g. losing row splitting re-inflates the padding 10x) drops
+        # the ratio far below it — fail the harness there.
+        if speedup < SELL_VS_CSR_FLOOR:
+            raise RuntimeError(
+                f"SELL-C-σ fell to {speedup:.2f}x of CSR (< floor "
+                f"{SELL_VS_CSR_FLOOR}) — layout or sweep regression")
+
+
+if __name__ == "__main__":
+    main()

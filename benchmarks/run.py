@@ -24,8 +24,9 @@ def main() -> None:
                     help="run a single benchmark by name")
     args = ap.parse_args()
 
-    from benchmarks import (affinity, bfs_batched, bfs_layers,
-                            bfs_opt_ablation, bfs_scaling, lm_roofline)
+    from benchmarks import (affinity, bfs_batched, bfs_formats,
+                            bfs_layers, bfs_opt_ablation, bfs_scaling,
+                            lm_roofline)
 
     layer_scale = 20 if args.paper_scale else (12 if args.quick else 16)
     abl_scale = 13 if not args.quick else 11
@@ -39,6 +40,8 @@ def main() -> None:
             scales=scales, n_roots=2 if args.quick else 4),
         "bfs_batched": lambda: bfs_batched.main(
             scale=11 if args.quick else 12),
+        "bfs_formats": lambda: bfs_formats.main(
+            scale=10 if args.quick else 12),
         "affinity": lambda: affinity.main(scale=abl_scale),
         "lm_roofline": lambda: lm_roofline.main(),
     }

@@ -71,8 +71,26 @@ def main():
                         n_roots=args.roots)
         print(f"   {name:32s} {h.summary()}")
 
-    print(f"== batched multi-root engine ({args.roots} roots, 1 launch)")
+    print("== graph formats (§4.2's layout axis, repro/formats)")
     from repro.core import engine
+    from repro.formats import autotune, registry
+    fmts = {name: registry.get(name).from_graph(g)
+            for name in ("csr", "sell")}
+    base = fmts["csr"].footprint().total_bytes
+    for name, fmt in fmts.items():
+        fp = fmt.footprint()
+        extra = (f" fill={fmt.fill_ratio:.2f} slices_of_128"
+                 if name == "sell" else "")
+        print(f"   {fp.summary()}  ({fp.total_bytes/base:.2f}x csr)"
+              f"{extra}")
+        state = engine.traverse(fmt, root).state
+        res = validate(g, parents_graph500(state, g.n_vertices), root,
+                       reference_depth=d_ref)
+        assert res.ok, f"format {name}: validation failed: {res}"
+    choice = autotune.choose(g)
+    print(f"   autotuner picks [{choice.format}]: {choice.reason}")
+
+    print(f"== batched multi-root engine ({args.roots} roots, 1 launch)")
     roots = [root + i for i in range(args.roots)]
     t0 = time.perf_counter()
     res = engine.traverse(g, roots, policy=engine.TopDown())

@@ -12,6 +12,7 @@ class GraphConfig:
     scale: int
     edgefactor: int = 16
     n_roots: int = 64          # paper §5.3 experimental design
+    graph_format: str = "auto"  # repro/formats layout ("auto" = tuner)
 
     @property
     def n_vertices(self) -> int:
@@ -29,11 +30,24 @@ class BfsServeConfig:
     ``batch_slots`` is the fixed multi-root width (engine launch and
     serve batch alike); 8 is the smallest batch that amortizes the
     layer-loop fixed costs on the quick CPU scales and is the
-    benchmark's reported configuration.
+    benchmark's reported configuration.  ``graph_format`` is the
+    preprocess-on-load layout choice (`repro.formats`): "auto" runs
+    the autotuner on the resident graph's degree statistics.
     """
     batch_slots: int = 8
     max_layers: int = 64
     algorithm: str = "simd"
+    graph_format: str = "auto"
+
+
+@dataclass(frozen=True)
+class FormatSweepConfig:
+    """The benchmarks/bfs_formats.py experiment grid: every registered
+    layout x a representative policy subset, on the paper's skewed
+    RMAT workload (where SELL-C-σ is expected to at least match CSR)."""
+    formats: tuple = ("csr", "sell", "bitmap")
+    policies: tuple = ("topdown", "threshold", "hybrid")
+    simd_threshold: int = 2048   # ThresholdSimd knee at bench scales
 
 
 GRAPHS = {
@@ -42,3 +56,4 @@ GRAPHS = {
 }
 PAPER_GRAPHS = ("rmat-18", "rmat-19", "rmat-20")
 SERVE = BfsServeConfig()
+FORMAT_SWEEP = FormatSweepConfig()

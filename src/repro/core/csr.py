@@ -99,16 +99,24 @@ def from_edges(edges: EdgeList) -> Csr:
                n_edges=n_edges)
 
 
-def init_visited(csr: Csr) -> jax.Array:
+def padding_premarked_visited(n_vertices: int) -> jax.Array:
     """Visited bitmap with every padding vertex pre-marked.
 
     This replaces the paper's peel/remainder loop handling: sentinel
     lanes always test as 'already visited' and drop out of the masks.
+    The single home of the convention — `init_visited`, the fused
+    engine's batched init and `formats.GraphFormat.init_visited` all
+    derive from it.
     """
-    v_pad = csr.n_vertices_padded
+    v_pad = padded_vertex_count(n_vertices)
     vis = bm.zeros(v_pad)
-    pad_ids = jnp.arange(csr.n_vertices, v_pad, dtype=jnp.int32)
+    pad_ids = jnp.arange(n_vertices, v_pad, dtype=jnp.int32)
     return bm.set_bits_exact(vis, pad_ids)
+
+
+def init_visited(csr: Csr) -> jax.Array:
+    """`padding_premarked_visited` for a built CSR."""
+    return padding_premarked_visited(csr.n_vertices)
 
 
 def traversed_edges(csr: Csr, reached: jax.Array) -> jax.Array:

@@ -45,6 +45,13 @@ The public drivers ``bfs_parallel.run_bfs``,
 ``bfs_vectorized.run_bfs_vectorized`` and ``bfs_hybrid.run_bfs_hybrid``
 are thin wrappers selecting a policy; ``bfs_distributed`` builds its
 shard_map per-chip step from `edge_stream` + `candidate_scatter`.
+
+The engine is **format-generic** (repro/formats/): the per-layer
+expansion steps are built by the graph format object — CSR keeps the
+apportioned edge stream below, SELL-C-σ substitutes its aligned slab
+sweep (kernels/sell_expand.py), the bitmap layout its dense word
+sweep.  `traverse` accepts a `Csr` or any built `GraphFormat`; the
+measure/decide/restore pipeline is layout-independent.
 """
 from __future__ import annotations
 
@@ -58,7 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmap as bm
-from repro.core.csr import Csr, init_visited, padded_vertex_count
+from repro.core.csr import Csr, init_visited, padding_premarked_visited
 from repro.kernels import ops
 
 MODE_SCALAR = 0     # plain-jnp Algorithm 2/3 layer
@@ -279,6 +286,14 @@ def _next_pow2(n: int, lo: int = 128) -> int:
 
 
 def _auto_tile(e_size: int, interpret: bool) -> int:
+    """The CSR edge-stream tile rule.
+
+    Tile selection is owned by the graph *format* (the layout fixes
+    the aligned unit — §4.2): `formats.CsrFormat.resolve_tile`
+    delegates here, SELL fixes its slab geometry instead.  This
+    module-level home survives for `traverse_hostloop`, whose
+    ``tile=`` argument drives the A/B prefetch-distance sweeps.
+    """
     if not interpret:
         return 1024
     # interpret mode unrolls the grid at trace time: keep it short
@@ -286,6 +301,8 @@ def _auto_tile(e_size: int, interpret: bool) -> int:
 
 
 def _resolve_tile(tile: int | None, e_pad: int) -> int:
+    """Resolve a user tile override for the CSR edge stream (see
+    `_auto_tile` for the format-ownership contract)."""
     interpret = jax.default_backend() != "tpu"
     if tile is None:
         return _auto_tile(e_pad, interpret)
@@ -301,18 +318,16 @@ def _resolve_tile(tile: int | None, e_pad: int) -> int:
 # The three expansion flavours (batched: leading root axis on state)
 # ---------------------------------------------------------------------------
 
-def scalar_expand(colstarts, rows, n_vertices: int, frontier, visited,
-                  parent, f_size: int, e_size: int, algorithm: str):
-    """One plain-jnp top-down layer (the canonical Algorithm 2/3 body).
+def expand_candidates(u, v, valid, frontier, visited, parent,
+                      n_vertices: int, algorithm: str):
+    """The post-gather Algorithm 2/3 body on any layout's edge stream.
 
-    The single home of the scalar gather-test-mask-scatter(-restore)
-    sequence: the fused engine, the hostloop driver, and
-    ``bfs_parallel.expand_*`` all call this.  Returns
-    (out, visited, parent).
+    The single home of the test-mask-scatter(-restore) sequence:
+    ``(u, v, valid)`` is a gathered candidate stream — CSR's
+    apportioned `edge_stream`, SELL's flattened slab sweep — and the
+    body is layout-independent.  Returns (out, visited, parent).
     """
     v_pad = parent.shape[0]
-    u, v, valid = edge_stream(colstarts, rows, frontier, f_size,
-                              n_vertices, e_size)
     if algorithm == "nonsimd":         # Algorithm 2: exact dense updates
         vis_dense = bm.unpack_bool(visited)
         mask = valid & ~vis_dense[jnp.clip(v, 0, v_pad - 1)]
@@ -331,6 +346,18 @@ def scalar_expand(colstarts, rows, n_vertices: int, frontier, visited,
     out = bm.set_bits_racy(bm.zeros(v_pad), v, mask)
     parent, out, visited = restore_jnp(parent, out, visited, n_vertices)
     return out, visited, parent
+
+
+def scalar_expand(colstarts, rows, n_vertices: int, frontier, visited,
+                  parent, f_size: int, e_size: int, algorithm: str):
+    """One plain-jnp top-down CSR layer (Algorithm 2/3): apportioned
+    gather + the shared `expand_candidates` body.  The fused engine,
+    the hostloop driver, and ``bfs_parallel.expand_*`` all call this.
+    Returns (out, visited, parent)."""
+    u, v, valid = edge_stream(colstarts, rows, frontier, f_size,
+                              n_vertices, e_size)
+    return expand_candidates(u, v, valid, frontier, visited, parent,
+                             n_vertices, algorithm)
 
 
 def _make_scalar_step(colstarts, rows, n_vertices: int, v_pad: int,
@@ -433,31 +460,27 @@ def init_root_state(root, base_visited, n_vertices: int):
 
 
 def _init_batched(roots, n_vertices: int, v_pad: int):
-    pad_ids = jnp.arange(n_vertices, v_pad, dtype=jnp.int32)
-    base_vis = bm.set_bits_exact(bm.zeros(v_pad), pad_ids)
+    base_vis = padding_premarked_visited(n_vertices)
     return jax.vmap(
         lambda r: init_root_state(r, base_vis, n_vertices)
     )(roots.astype(jnp.int32))
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n_vertices", "policy", "algorithm",
-                              "tile", "max_layers"))
-def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
-                    policy=TopDown(), algorithm: str = "simd",
-                    tile: int = 1024, max_layers: int = 64
-                    ) -> EngineResult:
-    """The fused engine on raw CSR arrays (shard_map/dry-run friendly).
+def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
+                   max_layers: int) -> EngineResult:
+    """The fused engine body, generic over a `formats.GraphFormat`.
 
-    ``roots`` is a (B,) int32 array; every state array carries the
-    leading root axis.  The entire search is one ``lax.while_loop`` —
-    no host synchronization between layers.
+    Every per-layer step (scalar / SIMD kernel / bottom-up) is built
+    by the *format* — the layout owns its gather primitive — while the
+    measure/decide/restore pipeline and the single ``lax.while_loop``
+    stay layout-independent.  ``roots`` is a (B,) int32 array; every
+    state array carries the leading root axis.  No host
+    synchronization between layers.
     """
-    v_pad = padded_vertex_count(n_vertices)
-    e_pad = int(rows.shape[0])
-    deg = colstarts[1:] - colstarts[:-1]
-    steps = _make_steps(colstarts, rows, n_vertices, v_pad, e_pad,
-                        algorithm, tile)
+    n_vertices = fmt.n_vertices
+    v_pad = fmt.n_vertices_padded
+    deg = fmt.degrees()
+    steps = fmt.make_steps(algorithm=algorithm, tile=tile)
     modes = tuple(policy.modes)
 
     def rows_workload(words):          # (B, W) -> per-root counters
@@ -492,7 +515,10 @@ def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
                      n_roots=roots.shape[0])
         mode, bottom_up = policy.decide(w)
 
-        if len(modes) == 1:
+        if len({id(steps[m]) for m in modes}) == 1:
+            # one distinct step (single-mode policy, or a format that
+            # maps every mode onto one sweep): call directly instead
+            # of tracing the same body once per switch branch
             new_f, visited, parent = steps[modes[0]](frontier, visited,
                                                      parent)
         else:
@@ -519,19 +545,62 @@ def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
                         depths, stats)
 
 
-def traverse(csr: Csr, roots, *, policy=None, algorithm: str = "simd",
+@functools.partial(
+    jax.jit, static_argnames=("n_vertices", "policy", "algorithm",
+                              "tile", "max_layers"))
+def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
+                    policy=TopDown(), algorithm: str = "simd",
+                    tile: int = 1024, max_layers: int = 64
+                    ) -> EngineResult:
+    """The fused engine on raw CSR arrays (shard_map/dry-run friendly).
+
+    Kept as the array-level entry for callers that only hold arrays,
+    not a `Csr` (distributed per-chip programs, ``.lower()`` dry
+    runs).  Internally the arrays are viewed through `CsrFormat`, so
+    the layer steps dispatch through the format's gather primitive
+    like every other layout.
+    """
+    from repro.formats.csr_format import CsrFormat
+    fmt = CsrFormat(colstarts, rows, n_vertices, int(rows.shape[0]))
+    return _traverse_impl(fmt, roots, policy, algorithm, tile,
+                          max_layers)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("policy", "algorithm", "tile",
+                              "max_layers"))
+def traverse_format(fmt, roots, *, policy=TopDown(),
+                    algorithm: str = "simd", tile: int = 1,
+                    max_layers: int = 64) -> EngineResult:
+    """The fused engine on any registered `GraphFormat` pytree.
+
+    ``fmt``'s arrays are traced leaves and its shape metadata is
+    static aux data, so one compile per (format class, geometry).
+    ``tile`` must already be resolved (`fmt.resolve_tile`) — its
+    meaning is format-defined (CSR: edge-stream tile; SELL: slabs per
+    grid step; bitmap: unused).
+    """
+    return _traverse_impl(fmt, roots, policy, algorithm, tile,
+                          max_layers)
+
+
+def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
              tile: int | None = None, max_layers: int = 64
              ) -> EngineResult:
-    """Run the fused engine on a `Csr` for one root or a batch of roots.
+    """Run the fused engine for one root or a batch of roots.
 
     Args:
+      graph: a `Csr` (traversed via `CsrFormat`) or any built
+        `formats.GraphFormat` (SELL-C-σ, bitmap-compressed, ...).
       roots: an int (single-root — result arrays are unbatched) or a
         sequence of ints (multi-root in one launch; every result array
         gains a leading root axis).
       policy: a direction policy object (default `TopDown()`).
       algorithm: "simd" | "nonsimd" — which scalar expander backs
         ``MODE_SCALAR`` layers.
-      tile: SIMD kernel edge-tile (None = auto for the backend).
+      tile: format-defined tile override (None = the format's auto
+        choice; the format owns tile selection — §4.2's aligned unit
+        is a property of the layout).
 
     In batched mode the policy decides ONCE per layer from the
     batch-summed counters (one mode for the whole batch keeps the loop
@@ -539,13 +608,14 @@ def traverse(csr: Csr, roots, *, policy=None, algorithm: str = "simd",
     """
     if algorithm not in ("simd", "nonsimd"):
         raise ValueError(f"unknown scalar algorithm {algorithm!r}")
+    from repro.formats.csr_format import CsrFormat
+    fmt = CsrFormat.from_csr(graph) if isinstance(graph, Csr) else graph
     single = jnp.ndim(roots) == 0
     roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
-    res = traverse_arrays(
-        csr.colstarts, csr.rows, roots_arr, n_vertices=csr.n_vertices,
+    res = traverse_format(
+        fmt, roots_arr,
         policy=policy if policy is not None else TopDown(),
-        algorithm=algorithm,
-        tile=_resolve_tile(tile, csr.n_edges_padded),
+        algorithm=algorithm, tile=fmt.resolve_tile(tile),
         max_layers=max_layers)
     if single:
         st = res.state
@@ -584,18 +654,36 @@ def direction_log(result: EngineResult) -> list[str]:
 @functools.partial(jax.jit, static_argnames=("n_vertices", "algorithm"))
 def layer_step(colstarts, rows, frontier, visited, parent, *,
                n_vertices: int, algorithm: str = "simd"):
-    """Advance every root in the batch by exactly one layer.
+    """Advance every root in the batch by exactly one layer (raw CSR
+    arrays).
 
-    Used by `serve.graph_engine.GraphEngine` as its tick: the batch
-    shape never changes, so this compiles once per engine.  Slots with
-    an empty frontier flow through as no-ops (their edge stream is all
-    sentinel).
+    The array-level counterpart of `layer_step_format` — which is what
+    `serve.graph_engine.GraphEngine` ticks through since the format
+    subsystem landed; this entry remains for callers that only hold
+    ``colstarts/rows``.  Slots with an empty frontier flow through as
+    no-ops (their edge stream is all sentinel).
     """
     v_pad = parent.shape[-1]
     e_pad = int(rows.shape[0])
     step = _make_scalar_step(colstarts, rows, n_vertices, v_pad, e_pad,
                              algorithm)
     return step(frontier, visited, parent)
+
+
+@functools.partial(jax.jit, static_argnames=("algorithm",))
+def layer_step_format(fmt, frontier, visited, parent, *,
+                      algorithm: str = "simd"):
+    """Format-generic one-layer tick (the serve engine's step).
+
+    Same contract as `layer_step`, but the per-layer step comes from
+    the graph format (`fmt.make_steps`) — the serve layer picks the
+    layout per graph at load time and ticks through it.  Uses the
+    format's scalar-mode step: serve batch shapes never change, so
+    this compiles once per (format geometry, batch shape).
+    """
+    steps = fmt.make_steps(algorithm=algorithm,
+                           tile=fmt.resolve_tile(None))
+    return steps[MODE_SCALAR](frontier, visited, parent)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,26 @@
+"""Pluggable graph-format subsystem (paper §4.2's layout axis).
+
+``import repro.formats`` registers every built-in layout:
+
+* ``csr``    — the §3.3.1 CSR baseline (core/csr.py adapter);
+* ``sell``   — SELL-C-σ sliced ELLPACK (SlimSell), format-specialized
+  Pallas sweep kernel in kernels/sell_expand.py;
+* ``bitmap`` — word-compressed adjacency for the dense/bottom-up
+  regime.
+
+Entry points: `registry.build(graph, name)` ("auto" = autotuner),
+`autotune.choose(graph)` for the decision + reasoning, and
+`engine.traverse(fmt, roots)` to run the fused engine on any format.
+"""
+from repro.formats import autotune, registry
+from repro.formats.base import Footprint, GraphFormat, csr_to_edges
+from repro.formats.bitmap_format import BitmapCompressedFormat
+from repro.formats.csr_format import CsrFormat
+from repro.formats.registry import available, build, get
+from repro.formats.sell import SellFormat
+
+__all__ = [
+    "autotune", "registry", "available", "build", "get",
+    "Footprint", "GraphFormat", "csr_to_edges",
+    "CsrFormat", "SellFormat", "BitmapCompressedFormat",
+]

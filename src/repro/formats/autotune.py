@@ -1,0 +1,119 @@
+"""Format autotuner: pick a layout from graph statistics.
+
+The scenario axis the format subsystem opens (ROADMAP): the serve
+layer preprocesses each graph on load and picks the layout the
+traversal engine will run on, from three cheap statistics:
+
+* **density** E / V² — dense-and-small graphs take the word-compressed
+  adjacency (`bitmap`): the whole matrix fits a byte budget and one
+  layer is a pure word sweep (the bottom-up/dense regime).
+* **degree skew** max_deg / mean_deg — skewed (power-law / RMAT)
+  graphs take SELL-C-σ (`sell`): degree sorting makes the per-slice
+  padding small exactly when the degree distribution is skewed, and
+  the SpMV sweep wins when most edges sit in a few fat layers.
+* otherwise CSR (`csr`): uniform-degree / high-diameter graphs, where
+  O(frontier edges) per layer beats any whole-adjacency sweep.
+
+Thresholds are intentionally coarse (this is a per-graph, build-time
+decision, not a per-layer one — the per-layer decision is the
+direction policy's job).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core.csr import Csr, from_edges as csr_from_edges, \
+    padded_vertex_count
+from repro.core.rmat import EdgeList
+from repro.formats import registry
+from repro.formats.base import GraphFormat
+
+# decision thresholds (see module docstring)
+BITMAP_BUDGET_BYTES = 4 << 20     # adjacency-bitmap cap (fits VMEM-ish)
+DENSITY_THRESHOLD = 0.05          # E/V^2 floor for the dense regime
+SKEW_THRESHOLD = 4.0              # max_deg/mean_deg floor for SELL
+
+
+class GraphStats(NamedTuple):
+    n_vertices: int
+    n_edges: int
+    mean_degree: float
+    max_degree: int
+    degree_skew: float            # max_degree / mean_degree
+    density: float                # n_edges / n_vertices^2
+    bitmap_bytes: int             # what BitmapCompressedFormat would pin
+
+
+class Choice(NamedTuple):
+    format: str
+    reason: str
+    stats: GraphStats
+
+
+def _as_csr(graph) -> Csr:
+    if isinstance(graph, Csr):
+        return graph
+    if isinstance(graph, EdgeList):
+        return csr_from_edges(graph)
+    raise TypeError(f"cannot autotune over {type(graph).__name__}")
+
+
+def measure(graph) -> GraphStats:
+    """Degree/density statistics from a Csr, EdgeList or GraphFormat."""
+    if isinstance(graph, GraphFormat):
+        deg = np.asarray(graph.degrees(), np.int64)
+        v, e = graph.n_vertices, graph.n_edges
+    else:
+        csr = _as_csr(graph)
+        deg = np.asarray(csr.degrees(), np.int64)
+        v, e = csr.n_vertices, csr.n_edges
+    mean = float(deg.mean()) if v else 0.0
+    mx = int(deg.max()) if v else 0
+    v_pad = padded_vertex_count(v)
+    return GraphStats(
+        n_vertices=v, n_edges=e, mean_degree=mean, max_degree=mx,
+        degree_skew=(mx / mean) if mean > 0 else 0.0,
+        density=(e / (v * v)) if v else 0.0,
+        bitmap_bytes=v_pad * (v_pad // bm.BITS_PER_WORD) * 4)
+
+
+def choose(graph, *,
+           bitmap_budget_bytes: int = BITMAP_BUDGET_BYTES,
+           density_threshold: float = DENSITY_THRESHOLD,
+           skew_threshold: float = SKEW_THRESHOLD) -> Choice:
+    """Pick a registered format name for this graph."""
+    s = measure(graph)
+    if (s.bitmap_bytes <= bitmap_budget_bytes
+            and s.density >= density_threshold):
+        return Choice("bitmap",
+                      f"dense regime: density {s.density:.3f} >= "
+                      f"{density_threshold} and adjacency bitmap "
+                      f"{s.bitmap_bytes/2**20:.2f} MiB fits budget", s)
+    if s.degree_skew >= skew_threshold:
+        return Choice("sell",
+                      f"skewed degrees: max/mean {s.degree_skew:.1f} >= "
+                      f"{skew_threshold} — σ-sorted slices absorb the "
+                      f"skew (SlimSell)", s)
+    return Choice("csr",
+                  f"near-uniform degrees (skew {s.degree_skew:.1f}), "
+                  f"sparse (density {s.density:.4f}): frontier-"
+                  f"proportional gather wins", s)
+
+
+def build(graph, name: str = "auto", **choose_kwargs) -> GraphFormat:
+    """Build the chosen (or named) format — preprocess-on-load entry.
+
+    ``name="auto"`` runs `choose`; any registered name forces that
+    layout.  Accepts Csr / EdgeList / an already-built format (kept
+    as-is under "auto" or its own name; re-laying out a built format
+    needs its `to_csr` — see `GraphFormat.from_graph`).
+    """
+    if isinstance(graph, GraphFormat) and name in ("auto", graph.name):
+        return graph
+    if name == "auto":
+        name = choose(graph, **choose_kwargs).format
+    return registry.get(name).from_graph(graph)

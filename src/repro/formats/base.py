@@ -1,0 +1,187 @@
+"""Graph-format protocol — the paper's §4.2 layout axis made pluggable.
+
+§4.2 spends a full section on data alignment and padding so the Xeon
+Phi's gathers never fall into peel/remainder loops; our CSR mimics
+that with 128-lane sentinel padding (core/csr.py).  SlimSell
+[Besta et al., arXiv:2010.09913] shows the *layout itself* is a free
+variable: a sliced-ELLPACK (SELL-C-σ) adjacency is strictly better
+suited to wide-SIMD BFS on skewed-degree graphs, and the hybrid
+follow-up [Paredes et al., arXiv:1704.02259] notes the bottom-up
+phase wants a different layout than top-down.
+
+`GraphFormat` is the contract the traversal engine consumes:
+
+* **build**     — ``from_edges`` / ``from_graph`` (preprocess-on-load;
+  Graph500 kernel-2 territory, untimed in the benchmark).
+* **gather**    — ``make_steps`` returns the batched per-layer step
+  for each engine mode (scalar / SIMD-kernel / bottom-up), the
+  format-specialized replacement for the raw ``colstarts/rows``
+  apportionment.  All steps share one signature
+  ``(frontier, visited, parent) -> (out, visited, parent)`` with a
+  leading root axis, so direction policies work unmodified.
+* **counters**  — ``degrees`` feeds the engine's on-device Table 1
+  workload counters; ``edge_slots``/``layer_bytes`` are the format's
+  per-layer stream-width and bytes-moved accounting.
+* **footprint** — ``footprint`` reports device bytes per array so the
+  autotuner and benchmarks can compare layouts.
+
+Formats are registered JAX pytrees (arrays as leaves, static shape
+metadata as aux data), so a format instance can be passed straight
+into the jitted fused engine (`engine.traverse_format`).
+"""
+from __future__ import annotations
+
+import abc
+from typing import ClassVar, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import Csr, padded_vertex_count, \
+    padding_premarked_visited
+from repro.core.rmat import EdgeList
+
+
+class Footprint(NamedTuple):
+    """Device-memory report for one built format."""
+    format: str
+    arrays: tuple[tuple[str, int], ...]   # (array name, bytes)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b for _, b in self.arrays)
+
+    def summary(self) -> str:
+        parts = ", ".join(f"{n}={b/2**20:.2f}MiB" for n, b in self.arrays)
+        return (f"{self.format}: {self.total_bytes/2**20:.2f} MiB "
+                f"({parts})")
+
+
+def nbytes(arr: jax.Array) -> int:
+    return int(arr.size) * arr.dtype.itemsize
+
+
+def csr_to_edges(csr: Csr) -> EdgeList:
+    """Recover the (sorted, symmetrized) COO edge list from a CSR.
+
+    Sentinel padding lives at the tail of ``rows``, so the first
+    ``n_edges`` entries are exactly the real destination list.
+    """
+    src = jnp.repeat(jnp.arange(csr.n_vertices, dtype=jnp.int32),
+                     csr.degrees(),
+                     total_repeat_length=csr.n_edges_padded)
+    return EdgeList(src=src[:csr.n_edges],
+                    dst=csr.rows[:csr.n_edges],
+                    n_vertices=csr.n_vertices)
+
+
+class GraphFormat(abc.ABC):
+    """Abstract adjacency layout consumed by the traversal engine.
+
+    Subclasses are pytree-registered dataclass-likes: jax arrays in
+    ``tree_flatten`` leaves, static ints (vertex/edge counts, slice
+    geometry) in aux data — which is what lets `engine.traverse_format`
+    jit over a format instance directly.
+    """
+
+    name: ClassVar[str]
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    @abc.abstractmethod
+    def from_edges(cls, edges: EdgeList, **kwargs) -> "GraphFormat":
+        """Build the layout from a COO edge list (preprocess-on-load)."""
+
+    @classmethod
+    def from_graph(cls, graph, **kwargs) -> "GraphFormat":
+        """Build from whatever the caller holds: EdgeList, Csr, an
+        already-built format of this class (passthrough), or a built
+        format that can recover its CSR (``to_csr``)."""
+        if isinstance(graph, cls):
+            return graph
+        if isinstance(graph, GraphFormat):
+            to_csr = getattr(graph, "to_csr", None)
+            if to_csr is None:
+                raise TypeError(
+                    f"cannot re-lay-out a built {type(graph).__name__} "
+                    f"as {cls.__name__}; pass the Csr or EdgeList it "
+                    f"was built from")
+            graph = to_csr()
+        if isinstance(graph, Csr):
+            from_csr = getattr(cls, "from_csr", None)
+            if from_csr is not None:     # skip the edge-list round trip
+                return from_csr(graph, **kwargs)
+            return cls.from_edges(csr_to_edges(graph), **kwargs)
+        if isinstance(graph, EdgeList):
+            return cls.from_edges(graph, **kwargs)
+        raise TypeError(
+            f"cannot build {cls.__name__} from {type(graph).__name__}")
+
+    # -- static geometry -------------------------------------------------
+    @property
+    @abc.abstractmethod
+    def n_vertices(self) -> int:
+        """Real vertex count V (the sentinel id)."""
+
+    @property
+    @abc.abstractmethod
+    def n_edges(self) -> int:
+        """Real directed edge count (un-padded)."""
+
+    @property
+    def n_vertices_padded(self) -> int:
+        """Vertex-array size — the engine-wide §4.2 padding convention."""
+        return padded_vertex_count(self.n_vertices)
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_vertices
+
+    # -- engine contract -------------------------------------------------
+    @abc.abstractmethod
+    def degrees(self) -> jax.Array:
+        """(V,) int32 out-degrees — the Table 1 workload counter input."""
+
+    @abc.abstractmethod
+    def make_steps(self, *, algorithm: str, tile: int) -> dict:
+        """Batched per-layer steps keyed by engine mode.
+
+        Returns ``{MODE_SCALAR: fn, MODE_SIMD: fn, MODE_BOTTOMUP: fn}``
+        where each ``fn(frontier, visited, parent)`` advances every
+        root in the leading batch axis by one layer and returns
+        ``(out, visited, parent)``.
+        """
+
+    def resolve_tile(self, tile: int | None) -> int:
+        """The format owns tile selection (§4.2: the layout fixes the
+        aligned unit).  ``tile`` is the user's override where the
+        format honors one; the default accepts any and returns 1."""
+        return int(tile) if tile else 1
+
+    # -- accounting ------------------------------------------------------
+    @abc.abstractmethod
+    def footprint(self) -> Footprint:
+        """Per-array device bytes."""
+
+    @property
+    @abc.abstractmethod
+    def edge_slots(self) -> int:
+        """Edge-stream slots one SIMD layer examines (incl. padding)."""
+
+    def layer_bytes(self) -> int:
+        """Analytic bytes one SIMD layer streams from HBM (the
+        bytes-moved counter of benchmarks/bfs_formats.py).  Default:
+        the edge stream at 4 B/slot for the (nbr, cand, valid)
+        triple."""
+        return 3 * 4 * self.edge_slots
+
+    # -- shared init helpers --------------------------------------------
+    def init_visited(self) -> jax.Array:
+        """Visited bitmap with every padding vertex pre-marked — the
+        mask-replaces-remainder-loops convention of §4.2 (shared with
+        the CSR drivers via `csr.padding_premarked_visited`)."""
+        return padding_premarked_visited(self.n_vertices)
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}(V={self.n_vertices}, "
+                f"E={self.n_edges})")

@@ -1,0 +1,93 @@
+"""CsrFormat — the existing §3.3.1 CSR as a registered GraphFormat.
+
+A thin adapter around `core/csr.py`: the arrays and the §4.2 padding
+convention are unchanged; the gather primitive is the engine's
+bitmap->apportion edge stream (`engine.edge_stream`), so per-layer
+work is O(frontier edges) at the price of the apportionment pass
+(compaction + prefix-sum) every layer.  The baseline every other
+format is measured against.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.csr import Csr, from_edges as csr_from_edges
+from repro.core.rmat import EdgeList
+from repro.formats.base import Footprint, GraphFormat, nbytes
+from repro.formats.registry import register
+
+
+@register
+@jax.tree_util.register_pytree_node_class
+class CsrFormat(GraphFormat):
+    name = "csr"
+
+    def __init__(self, colstarts, rows, n_vertices: int, n_edges: int):
+        self.colstarts = colstarts
+        self.rows = rows
+        self._n_vertices = int(n_vertices)
+        self._n_edges = int(n_edges)
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        return ((self.colstarts, self.rows),
+                (self._n_vertices, self._n_edges))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], leaves[1], *aux)
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_edges(cls, edges: EdgeList) -> "CsrFormat":
+        # no build options: unknown kwargs fail loudly at the call
+        return cls.from_csr(csr_from_edges(edges))
+
+    @classmethod
+    def from_csr(cls, csr: Csr) -> "CsrFormat":
+        return cls(csr.colstarts, csr.rows, csr.n_vertices, csr.n_edges)
+
+    def to_csr(self) -> Csr:
+        return Csr(rows=self.rows, colstarts=self.colstarts,
+                   n_vertices=self._n_vertices, n_edges=self._n_edges)
+
+    # -- static geometry -------------------------------------------------
+    @property
+    def n_vertices(self) -> int:
+        return self._n_vertices
+
+    @property
+    def n_edges(self) -> int:
+        return self._n_edges
+
+    @property
+    def n_edges_padded(self) -> int:
+        return int(self.rows.shape[0])
+
+    # -- engine contract -------------------------------------------------
+    def degrees(self) -> jax.Array:
+        return self.colstarts[1:] - self.colstarts[:-1]
+
+    def make_steps(self, *, algorithm: str, tile: int) -> dict:
+        from repro.core import engine
+        return engine._make_steps(self.colstarts, self.rows,
+                                  self._n_vertices,
+                                  self.n_vertices_padded,
+                                  self.n_edges_padded, algorithm, tile)
+
+    def resolve_tile(self, tile: int | None) -> int:
+        # CSR tiles the apportioned edge stream; the shared auto rule
+        # (interpret-mode grid clamp) lives in engine and stays the
+        # `traverse_hostloop` behavior too.
+        from repro.core import engine
+        return engine._resolve_tile(tile, self.n_edges_padded)
+
+    # -- accounting ------------------------------------------------------
+    def footprint(self) -> Footprint:
+        return Footprint(self.name,
+                         (("rows", nbytes(self.rows)),
+                          ("colstarts", nbytes(self.colstarts))))
+
+    @property
+    def edge_slots(self) -> int:
+        return self.n_edges_padded

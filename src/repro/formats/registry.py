@@ -1,0 +1,46 @@
+"""Format registry: name -> GraphFormat class.
+
+Formats self-register at import time (the ``@register`` decorator in
+each format module); `repro.formats.__init__` imports every built-in
+module so ``available()`` is complete after ``import repro.formats``.
+"""
+from __future__ import annotations
+
+from repro.formats.base import GraphFormat
+
+_REGISTRY: dict[str, type[GraphFormat]] = {}
+
+
+def register(cls: type[GraphFormat]) -> type[GraphFormat]:
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    name = getattr(cls, "name", None)
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"{cls.__name__} needs a non-empty `name`")
+    if name in _REGISTRY and _REGISTRY[name] is not cls:
+        raise ValueError(f"format {name!r} already registered "
+                         f"({_REGISTRY[name].__name__})")
+    _REGISTRY[name] = cls
+    return cls
+
+
+def get(name: str) -> type[GraphFormat]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown graph format {name!r}; "
+                       f"available: {available()}") from None
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def build(graph, name: str = "auto", **kwargs) -> GraphFormat:
+    """Build a named format from an EdgeList/Csr/format instance.
+
+    ``name="auto"`` delegates to the autotuner (`autotune.build`).
+    """
+    if name == "auto":
+        from repro.formats import autotune
+        return autotune.build(graph, **kwargs)
+    return get(name).from_graph(graph, **kwargs)

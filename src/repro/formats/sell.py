@@ -1,0 +1,257 @@
+"""SellFormat — SELL-C-σ adjacency (SlimSell) for wide-SIMD BFS.
+
+SELL-C-σ [Kreutzer et al.; SlimSell, Besta et al. arXiv:2010.09913]:
+
+* split each vertex's adjacency into **virtual rows** of at most
+  ``max_width`` neighbors (row splitting — bounds the slice width by
+  the chunk size instead of the hub degree on power-law graphs);
+* sort virtual rows by length (descending) inside windows of **σ**
+  rows — local sorting keeps similar-length rows adjacent without
+  destroying locality globally;
+* group the sorted rows into **slices** of C=128 (one slice = one TPU
+  lane set, the AVX-512 register analogue of the paper's §4);
+* store each slice's adjacency **column-major**, padded to the slice's
+  own maximum row length — so one vector load reads one neighbor of
+  128 different rows, fully aligned, and the padding cost is per-slice
+  instead of the global ELLPACK max-degree.
+
+We quantize slice widths to W_QUANT=8 columns so the storage unit is a
+**slab**: an (8, 128) int32 block — exactly one aligned 8x128 vector
+tile, the §4.2 alignment goal by construction.  Degree sorting (σ)
+is what keeps the quantized padding small on skewed-degree graphs:
+hub vertices share slices with hub vertices, so a slice of leaves is
+1 slab wide instead of max-degree wide.
+
+Traversal is the SpMV-style sweep of `kernels/sell_expand.py`: every
+layer touches every slab (O(nnz_sell) work, vs CSR's O(frontier
+edges)), but pays **no apportionment pass** (CSR's per-layer
+compaction + prefix-sum over the edge stream) and no gather
+irregularity in the stream itself.  On skewed small-diameter graphs
+(RMAT) almost all edges sit in 2-3 fat layers anyway, so the sweep's
+extra touched slots are small while its aligned loads are strictly
+cheaper — the SlimSell argument.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import Csr, from_edges as csr_from_edges, round_up
+from repro.core.rmat import EdgeList
+from repro.formats.base import Footprint, GraphFormat, nbytes
+from repro.formats.registry import register
+from repro.kernels import ops
+from repro.kernels.sell_expand import SLICE_C, W_QUANT
+
+
+@register
+@jax.tree_util.register_pytree_node_class
+class SellFormat(GraphFormat):
+    name = "sell"
+
+    DEFAULT_SIGMA = 8 * SLICE_C   # SlimSell's typical local-sort window
+
+    def __init__(self, cols, slab_rows, deg, n_vertices: int,
+                 n_edges: int, sigma: int, nnz_stored: int):
+        self.cols = cols            # (n_slabs, W_QUANT, C) int32
+        self.slab_rows = slab_rows  # (n_slabs, C) int32
+        self.deg = deg              # (V,) int32
+        self._n_vertices = int(n_vertices)
+        self._n_edges = int(n_edges)
+        self.sigma = int(sigma)
+        self.nnz_stored = int(nnz_stored)   # un-quantized padded slots
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        return ((self.cols, self.slab_rows, self.deg),
+                (self._n_vertices, self._n_edges, self.sigma,
+                 self.nnz_stored))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_edges(cls, edges: EdgeList, *, sigma: int | None = None,
+                   max_width: int = 64) -> "SellFormat":
+        return cls.from_csr(csr_from_edges(edges), sigma=sigma,
+                            max_width=max_width)
+
+    @classmethod
+    def from_csr(cls, csr: Csr, *, sigma: int | None = None,
+                 max_width: int = 64) -> "SellFormat":
+        """Row-split, degree-sort, slice, quantize and pack — Graph500
+        kernel-2 preprocessing, vectorized in numpy on the host.
+
+        **Row splitting**: a vertex of degree d becomes ceil(d /
+        ``max_width``) *virtual rows* of at most ``max_width``
+        neighbors each.  On a power-law graph this is what keeps the
+        per-slice width (= max row length in the slice) bounded by
+        ``max_width`` instead of by the hub degree — without it a
+        single SCALE-12 RMAT hub pads its whole 128-lane slice to
+        ~2000 columns and the sweep touches ~10x more slots than CSR.
+        With splitting, padding is bounded by the W_QUANT quantum per
+        virtual row, so stored slots ~= E + O(V).  The σ-sort then
+        groups full-width chunks (zero padding) apart from the sorted
+        tails (padding < W_QUANT per row).
+        """
+        c, wq = SLICE_C, W_QUANT
+        assert max_width % wq == 0 and max_width > 0
+        v = csr.n_vertices
+        deg = np.asarray(csr.degrees(), dtype=np.int64)
+        colstarts = np.asarray(csr.colstarts, dtype=np.int64)
+        dst = np.asarray(csr.rows[:csr.n_edges], dtype=np.int32)
+
+        # virtual row table: vertex id + chunk length per row
+        n_full = deg // max_width
+        tail = deg % max_width
+        rows_per_vertex = n_full + (tail > 0)
+        n_vrows = int(rows_per_vertex.sum())
+        n_rows = round_up(max(n_vrows, 1), c)
+        vrow_vertex = np.full(n_rows, v, np.int64)      # sentinel pad
+        vrow_len = np.zeros(n_rows, np.int64)
+        if n_vrows:
+            vrow_vertex[:n_vrows] = np.repeat(
+                np.arange(v, dtype=np.int64), rows_per_vertex)
+            row_start = np.concatenate(
+                [np.zeros(1, np.int64), np.cumsum(rows_per_vertex)])
+            chunk = np.arange(n_vrows, dtype=np.int64) \
+                - row_start[vrow_vertex[:n_vrows]]
+            vrow_len[:n_vrows] = np.where(
+                chunk < n_full[vrow_vertex[:n_vrows]], max_width,
+                tail[vrow_vertex[:n_vrows]])
+
+        sig = cls.DEFAULT_SIGMA if sigma is None else int(sigma)
+        sig = min(round_up(max(sig, c), c), n_rows)
+
+        # σ-windowed descending length sort (stable: ties keep order)
+        order = np.arange(n_rows, dtype=np.int64)
+        for w0 in range(0, n_rows, sig):
+            sl = slice(w0, min(w0 + sig, n_rows))
+            order[sl] = order[sl][np.argsort(-vrow_len[sl],
+                                             kind="stable")]
+
+        n_slices = n_rows // c
+        widths = vrow_len[order].reshape(n_slices, c).max(axis=1)
+        slab_counts = (widths + wq - 1) // wq            # quantized
+        slab_base = np.concatenate(
+            [np.zeros(1, np.int64), np.cumsum(slab_counts)])
+        n_slabs = int(slab_base[-1])
+        nnz_stored = int((widths * c).sum())
+
+        rows_sorted = np.where(vrow_vertex[order] < v, vrow_vertex[order],
+                               v).astype(np.int32)
+        if n_slabs == 0:       # edgeless graph: one all-sentinel slab
+            cols = np.full((1, wq, c), v, np.int32)
+            slab_rows = np.full((1, c), v, np.int32)
+        else:
+            cols = np.full((n_slabs, wq, c), v, np.int32)
+            slab_rows = np.repeat(rows_sorted.reshape(n_slices, c),
+                                  slab_counts, axis=0)
+            # scatter every real edge to its (slab, column, lane) slot
+            if csr.n_edges:
+                src = np.repeat(np.arange(v, dtype=np.int64), deg)
+                j = np.arange(csr.n_edges, dtype=np.int64) \
+                    - colstarts[src]                     # nth neighbor
+                vrow = row_start[src] + j // max_width
+                jj = j % max_width                       # col in chunk
+                inv = np.empty(n_rows, np.int64)
+                inv[order] = np.arange(n_rows, dtype=np.int64)
+                pos = inv[vrow]
+                slab_idx = slab_base[pos // c] + jj // wq
+                cols[slab_idx, jj % wq, pos % c] = dst
+        return cls(jnp.asarray(cols), jnp.asarray(slab_rows),
+                   jnp.asarray(deg, jnp.int32), v, csr.n_edges,
+                   sig, nnz_stored)
+
+    # -- static geometry -------------------------------------------------
+    @property
+    def n_vertices(self) -> int:
+        return self._n_vertices
+
+    @property
+    def n_edges(self) -> int:
+        return self._n_edges
+
+    @property
+    def n_slabs(self) -> int:
+        return int(self.cols.shape[0])
+
+    @property
+    def fill_ratio(self) -> float:
+        """Real edges / stored (quantized) slots — the σ payoff."""
+        return self._n_edges / max(self.edge_slots, 1)
+
+    # -- engine contract -------------------------------------------------
+    def degrees(self) -> jax.Array:
+        return self.deg
+
+    def _sweep_jnp(self, frontier, visited, parent, algorithm: str):
+        """Pure-jnp reference sweep (one root) — the scalar-mode step
+        and the oracle for the Pallas kernel.  SELL's gather (the
+        flattened slab stream with the source-in-frontier lane mask)
+        feeding the shared Algorithm 2/3 body."""
+        from repro.core import bitmap as bm
+        from repro.core.engine import expand_candidates
+        v = self._n_vertices
+        nbr = self.cols.reshape(-1)
+        src = jnp.broadcast_to(self.slab_rows[:, None, :],
+                               self.cols.shape).reshape(-1)
+        in_front = bm.test_bits(frontier, src) & (src < v)
+        valid = in_front & (nbr < v)
+        return expand_candidates(src, nbr, valid, frontier, visited,
+                                 parent, v, algorithm)
+
+    def make_steps(self, *, algorithm: str, tile: int) -> dict:
+        from repro.core import engine
+        v = self._n_vertices
+
+        def kernel_step(frontier, visited, parent):
+            out_racy, p_racy = ops.sell_batched(
+                self.cols, self.slab_rows, frontier, visited,
+                jnp.zeros_like(frontier), parent, n_vertices=v,
+                slabs_per_step=tile)
+            p_fixed, delta = ops.restore(p_racy, n_vertices=v)
+            return out_racy | delta, visited | delta, p_fixed
+
+        # The sweep is direction-agnostic on the symmetrized adjacency
+        # (see kernels/sell_expand.py): bottom-up == the same kernel.
+        # MODE_SCALAR also maps to the kernel — SELL has no cheaper
+        # "scalar" gather, so a thin layer costs the same sweep either
+        # way — except under algorithm="nonsimd", whose Algorithm-2
+        # exact-update semantics need the dense jnp path.
+        scalar_step = kernel_step if algorithm == "simd" else jax.vmap(
+            lambda f, vi, p: self._sweep_jnp(f, vi, p, algorithm))
+        return {engine.MODE_SCALAR: scalar_step,
+                engine.MODE_SIMD: kernel_step,
+                engine.MODE_BOTTOMUP: kernel_step}
+
+    def resolve_tile(self, tile: int | None) -> int:
+        """SELL's tile is *slabs per grid step*; the slice geometry
+        fixes the aligned unit, so on TPU the grid is literally one
+        slab (= one slice column-group) per step.  Interpret mode
+        unrolls the grid at trace time, so clamp to <=32 steps there
+        (the engine's `_auto_tile` rule, in slab units)."""
+        n_slabs = self.n_slabs
+        interpret = jax.default_backend() != "tpu"
+        floor = max(1, -(-n_slabs // 32)) if interpret else 1
+        if tile is None:
+            return floor
+        return max(int(tile), floor) if interpret else max(1, int(tile))
+
+    # -- accounting ------------------------------------------------------
+    def footprint(self) -> Footprint:
+        return Footprint(self.name,
+                         (("cols", nbytes(self.cols)),
+                          ("slab_rows", nbytes(self.slab_rows)),
+                          ("degrees", nbytes(self.deg))))
+
+    @property
+    def edge_slots(self) -> int:
+        return self.n_slabs * W_QUANT * SLICE_C
+
+    def layer_bytes(self) -> int:
+        # one sweep streams every cols slab + its slab_rows ids
+        return 4 * self.n_slabs * (W_QUANT + 1) * SLICE_C

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core.bitmap import BITS_PER_WORD
 from repro.kernels import bitmap_kernels, frontier_expand as fe
 from repro.kernels import restoration as rest
+from repro.kernels import sell_expand as se
 
 VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core
 _VMEM_HEADROOM = 0.75          # leave room for pipeline double-buffers
@@ -78,6 +79,64 @@ def expand_batched(nbr, cand, valid, frontier, visited, out_init, p_init,
         nbr, cand, valid.astype(jnp.int32), frontier, visited, out_init,
         p_init, n_vertices=n_vertices, tile=tile,
         check_frontier=check_frontier, interpret=interpret)
+
+
+def _pad_slabs(cols, slab_rows, n_vertices: int, step: int):
+    """Pad the slab axis to a multiple of ``step`` with sentinel slabs
+    (all-V neighbor ids and row ids mask out entirely in-kernel)."""
+    n_slabs = cols.shape[0]
+    pad = (-n_slabs) % step
+    if pad:
+        cols = jnp.concatenate(
+            [cols, jnp.full((pad,) + cols.shape[1:], n_vertices,
+                            jnp.int32)])
+        slab_rows = jnp.concatenate(
+            [slab_rows, jnp.full((pad, slab_rows.shape[1]), n_vertices,
+                                 jnp.int32)])
+    return cols, slab_rows
+
+
+def _sell_budget_check(n_words: int, v_pad: int, step: int) -> None:
+    budget = se.vmem_budget(n_words, v_pad, step)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"sell_expand working set {budget/2**20:.1f} MiB exceeds "
+            f"VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py) or reduce slabs_per_step")
+
+
+def sell(cols, slab_rows, frontier, visited, out_init, p_init, *,
+         n_vertices: int, slabs_per_step: int = 1,
+         interpret: bool | None = None):
+    """Pad + run the single-root SELL-C-σ sweep kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    _sell_budget_check(visited.shape[0], p_init.shape[0], slabs_per_step)
+    cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
+                                 slabs_per_step)
+    return se.sell_expand(
+        cols, slab_rows, frontier, visited, out_init, p_init,
+        n_vertices=n_vertices, slabs_per_step=slabs_per_step,
+        interpret=interpret)
+
+
+def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
+                 *, n_vertices: int, slabs_per_step: int = 1,
+                 interpret: bool | None = None):
+    """Pad + run the batched (leading root-axis) SELL-C-σ sweep.
+
+    The adjacency slabs carry no root axis (the layout is shared);
+    bitmaps/P are (B, W) / (B, V_pad).  VMEM budget is per-root.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    _sell_budget_check(visited.shape[1], p_init.shape[1], slabs_per_step)
+    cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
+                                 slabs_per_step)
+    return se.sell_expand_batched(
+        cols, slab_rows, frontier, visited, out_init, p_init,
+        n_vertices=n_vertices, slabs_per_step=slabs_per_step,
+        interpret=interpret)
 
 
 def restore(parent, *, n_vertices: int, tile: int = rest.DEFAULT_TILE,

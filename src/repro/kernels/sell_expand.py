@@ -1,0 +1,223 @@
+"""Pallas TPU kernel: SELL-C-σ slice expansion (SlimSell traversal).
+
+The format-specialized counterpart of `frontier_expand.py`.  The CSR
+kernel consumes an *apportioned* edge stream built on the host side of
+the layer (compaction + prefix-sum over the frontier); the SELL kernel
+instead sweeps the SELL-C-σ adjacency itself, SpMV-style [SlimSell,
+arXiv:2010.09913]: every layer touches every stored slot, but every
+load is a fully aligned slab and the frontier test is a lane mask —
+no gather irregularity in the stream, no apportionment pass at all.
+
+Layout (built in formats/sell.py):
+
+* vertices are degree-sorted within σ-windows and grouped into
+  **slices** of C=128 rows (one slice row set = one TPU lane set);
+* each slice stores its adjacency column-major, padded to the slice's
+  own width rounded up to W_Q=8 columns — so the unit of storage is a
+  **slab**: an (8, 128) int32 block, exactly one aligned 8x128 vector
+  tile.  ``cols[slab, q, lane]`` is a neighbor id (sentinel V pads),
+  ``slab_rows[slab, lane]`` the owning vertex id.
+
+Grid = slices (``slabs_per_step`` slabs per grid step; on TPU one
+step per slab, i.e. literally one slice column-group).  Per step:
+
+  1. load the slab's neighbor ids + row ids  (aligned vector loads —
+     the §4.2 alignment goal with zero peel/remainder handling)
+  2. lane mask: row in frontier  AND  neighbor unvisited  AND  not
+     sentinel — masks replace the paper's peel/remainder loops exactly
+     as §4.2's padding does
+  3. masked scatter P[nbr] = row - |V|   (negative mark, §3.3.2)
+  4. masked racy word scatter out |= bit (Fig. 6 race; restoration
+     repairs)
+
+Because the (row, nbr) direction of the test is symmetric in the
+symmetrized Graph500 adjacency, the same sweep serves top-down and
+bottom-up: "row in frontier, neighbor undiscovered" is exactly the
+bottom-up "candidate unvisited, parent in frontier" read along the
+reverse edge.  `formats/sell.py` therefore maps both engine modes
+onto this one kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitmap import WORD_MASK, WORD_SHIFT
+from repro.kernels.pallas_compat import CompilerParams
+
+SLICE_C = 128   # rows per slice = TPU vector lane count (csr.LANES)
+W_QUANT = 8     # columns per slab: 8x128 int32 = one aligned tile
+
+
+def _sell_tile(n_vertices: int, cols, rows, frontier, vis, out, p):
+    """One grid step of the sweep on loaded VMEM values.
+
+    cols: (S, W_QUANT, C) neighbor ids; rows: (S, C) owning vertex ids.
+    Returns the updated (out, p) for this step's writes.
+    """
+    nbr = cols
+    src = jnp.broadcast_to(rows[:, None, :], cols.shape)
+
+    # lane mask 1: owning row in the frontier (the top-down test; along
+    # the reverse edge this is the bottom-up parent test)
+    sw = jnp.clip(src >> WORD_SHIFT, 0, frontier.shape[0] - 1)
+    sb = (src & WORD_MASK).astype(jnp.uint32)
+    in_front = (frontier[sw] >> sb) & jnp.uint32(1) != 0
+
+    # lane mask 2: neighbor undiscovered; sentinel lanes filter out
+    word = nbr >> WORD_SHIFT
+    bit = (nbr & WORD_MASK).astype(jnp.uint32)
+    bits = jnp.uint32(1) << bit
+    w_clip = jnp.clip(word, 0, out.shape[0] - 1)
+    out_words = out[w_clip]
+    undiscovered = ((vis[w_clip] | out_words) & bits) == 0
+
+    mask = (in_front & undiscovered
+            & (nbr < n_vertices) & (src < n_vertices))
+
+    # masked scatter of P (negative marking) — benign duplicate race
+    p_idx = jnp.where(mask, nbr, p.shape[0])
+    new_p = p.at[p_idx].set(src - n_vertices, mode="drop")
+
+    # masked racy word scatter of the output queue (Fig. 6 race)
+    new_words = out_words | bits
+    w_idx = jnp.where(mask, word, out.shape[0])
+    new_out = out.at[w_idx].set(new_words, mode="drop")
+    return new_out, new_p
+
+
+def _sell_kernel(n_vertices: int, cols_ref, rows_ref, frontier_ref,
+                 vis_ref, out0_ref, p0_ref, out_ref, p_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():  # carry initial out/P into the accumulating outputs
+        out_ref[...] = out0_ref[...]
+        p_ref[...] = p0_ref[...]
+
+    out, p = _sell_tile(n_vertices, cols_ref[...], rows_ref[...],
+                        frontier_ref[...], vis_ref[...],
+                        out_ref[...], p_ref[...])
+    out_ref[...] = out
+    p_ref[...] = p
+
+
+def _sell_batched_kernel(n_vertices: int, cols_ref, rows_ref,
+                         frontier_ref, vis_ref, out0_ref, p0_ref,
+                         out_ref, p_ref):
+    """Batched variant: grid (roots, slice steps).  The adjacency slabs
+    are root-independent (shared blocks); bitmaps/P carry a leading
+    size-1 root axis, each root accumulating into its own rows."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = out0_ref[...]
+        p_ref[...] = p0_ref[...]
+
+    out, p = _sell_tile(n_vertices, cols_ref[...], rows_ref[...],
+                        frontier_ref[0], vis_ref[0],
+                        out_ref[0], p_ref[0])
+    out_ref[...] = out[None]
+    p_ref[...] = p[None]
+
+
+def vmem_budget(n_words: int, v_pad: int, slabs_per_step: int) -> int:
+    """Bytes of VMEM pinned (bitmaps x4 + P x2 + double-buffered slabs)."""
+    slab = slabs_per_step * (W_QUANT + 1) * SLICE_C * 4
+    return 4 * (4 * n_words + 2 * v_pad) + 2 * slab
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices",
+                                             "slabs_per_step",
+                                             "interpret"))
+def sell_expand(cols, slab_rows, frontier, visited, out_init, p_init,
+                *, n_vertices: int, slabs_per_step: int = 1,
+                interpret: bool = True):
+    """Single-root SELL sweep.
+
+    Args:
+      cols: (n_slabs, W_QUANT, C) int32 neighbor slabs (sentinel-padded;
+        n_slabs must be a multiple of ``slabs_per_step``).
+      slab_rows: (n_slabs, C) int32 owning vertex ids per slab.
+      frontier, visited, out_init: (W,) uint32 bitmaps.
+      p_init: (V_pad,) int32 predecessor array.
+    Returns:
+      (out, parent) after the racy sweep (restoration NOT applied) —
+      the same contract as `frontier_expand.frontier_expand`.
+    """
+    n_slabs = cols.shape[0]
+    assert n_slabs % slabs_per_step == 0, \
+        "pad the slab count to the step size"
+    n_steps = n_slabs // slabs_per_step
+    n_words = visited.shape[0]
+    v_pad = p_init.shape[0]
+
+    cols_spec = pl.BlockSpec((slabs_per_step, W_QUANT, SLICE_C),
+                             lambda t: (t, 0, 0))
+    rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C), lambda t: (t, 0))
+    whole = lambda n: pl.BlockSpec((n,), lambda t: (0,))
+
+    kernel = functools.partial(_sell_kernel, n_vertices)
+    out, parent = pl.pallas_call(
+        kernel,
+        grid=(n_steps,),
+        in_specs=[cols_spec, rows_spec, whole(n_words), whole(n_words),
+                  whole(n_words), whole(v_pad)],
+        out_specs=[whole(n_words), whole(v_pad)],
+        out_shape=[jax.ShapeDtypeStruct((n_words,), jnp.uint32),
+                   jax.ShapeDtypeStruct((v_pad,), jnp.int32)],
+        compiler_params=CompilerParams(
+            # accumulating outputs => sequential grid on the core
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="bfs_sell_expand",
+    )(cols, slab_rows, frontier, visited, out_init, p_init)
+    return out, parent
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices",
+                                             "slabs_per_step",
+                                             "interpret"))
+def sell_expand_batched(cols, slab_rows, frontier, visited, out_init,
+                        p_init, *, n_vertices: int,
+                        slabs_per_step: int = 1,
+                        interpret: bool = True):
+    """Multi-root SELL sweep: one launch expands B independent searches.
+
+    The adjacency (cols, slab_rows) has NO root axis — the layout is
+    shared; bitmaps/P carry a leading (B,).  Grid is (B, slice steps):
+    the root axis is embarrassingly parallel, the slice axis stays
+    sequential so later slabs observe earlier slabs' updates.
+    """
+    n_slabs = cols.shape[0]
+    assert n_slabs % slabs_per_step == 0, \
+        "pad the slab count to the step size"
+    n_steps = n_slabs // slabs_per_step
+    n_batch, n_words = visited.shape
+    v_pad = p_init.shape[1]
+
+    cols_spec = pl.BlockSpec((slabs_per_step, W_QUANT, SLICE_C),
+                             lambda b, t: (t, 0, 0))
+    rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C),
+                             lambda b, t: (t, 0))
+    whole = lambda n: pl.BlockSpec((1, n), lambda b, t: (b, 0))
+
+    kernel = functools.partial(_sell_batched_kernel, n_vertices)
+    out, parent = pl.pallas_call(
+        kernel,
+        grid=(n_batch, n_steps),
+        in_specs=[cols_spec, rows_spec, whole(n_words), whole(n_words),
+                  whole(n_words), whole(v_pad)],
+        out_specs=[whole(n_words), whole(v_pad)],
+        out_shape=[jax.ShapeDtypeStruct((n_batch, n_words), jnp.uint32),
+                   jax.ShapeDtypeStruct((n_batch, v_pad), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="bfs_sell_expand_batched",
+    )(cols, slab_rows, frontier, visited, out_init, p_init)
+    return out, parent

@@ -6,13 +6,19 @@ from the queue on the next tick — "continuous batching"), and a batch
 shape that never changes so the jitted tick compiles exactly once.
 
 One tick == one BFS layer for EVERY active slot, via the engine's
-batched `layer_step` (leading root axis).  Slots whose frontier has
-emptied flow through as no-ops — their edge stream is all sentinel —
-until the host harvests the parent array and refills the slot.  The
-per-tick host sync (a (B,) frontier-count readback) is the serving
-tick boundary, exactly like ServeEngine's per-token logits readback;
-whole-query throughput without any tick sync is what
-`engine.traverse` with a root batch provides.
+batched format-generic `layer_step_format` (leading root axis).
+Slots whose frontier has emptied flow through as no-ops — their edge
+stream is all sentinel — until the host harvests the parent array and
+refills the slot.  The per-tick host sync (a (B,) frontier-count
+readback) is the serving tick boundary, exactly like ServeEngine's
+per-token logits readback; whole-query throughput without any tick
+sync is what `engine.traverse` with a root batch provides.
+
+**Preprocess-on-load** (the formats scenario axis): the engine picks
+a graph layout per resident graph at construction —
+``graph_format="auto"`` runs the `formats.autotune` decision on the
+graph's degree statistics; any registered name forces that layout.
+The jitted tick then runs on the chosen format's step.
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ import numpy as np
 
 from repro.core import bitmap as bm
 from repro.core import engine
-from repro.core.csr import Csr, init_visited
+from repro.core.csr import Csr
 
 
 @functools.partial(jax.jit, static_argnames=("slot", "n_vertices"))
@@ -58,27 +64,46 @@ class BfsQuery:
 
 
 class GraphEngine:
-    """Serve many concurrent BFS queries against one device-resident CSR.
+    """Serve many concurrent BFS queries against one device-resident
+    graph.
 
     Args:
-      csr: the graph (stays on device for the engine's lifetime).
+      graph: the resident graph — a `Csr` or an already-built
+        `formats.GraphFormat` (stays on device for the engine's
+        lifetime).
       batch_slots: fixed query-batch width (compiled once).
       algorithm: scalar expander flavour for the layer step.
       max_layers: per-query layer budget (safety valve).
+      graph_format: layout for the tick — "auto" (autotune from graph
+        statistics, the default), any registered format name, or None
+        to wrap a Csr as-is.  A passed-in built format is kept under
+        "auto"/None (the caller already chose); forcing a *different*
+        name re-lays it out when the format can recover its CSR
+        (`to_csr`) and raises a TypeError otherwise.
     """
 
-    def __init__(self, csr: Csr, batch_slots: int = 8,
-                 algorithm: str = "simd", max_layers: int = 64):
-        self.csr = csr
+    def __init__(self, graph, batch_slots: int = 8,
+                 algorithm: str = "simd", max_layers: int = 64,
+                 graph_format: str | None = "auto"):
+        from repro.formats import GraphFormat, autotune
+        if isinstance(graph, GraphFormat):
+            self.csr = None
+            self.fmt = (graph if graph_format in (None, "auto",
+                                                  graph.name)
+                        else autotune.build(graph, graph_format))
+        else:
+            self.csr = graph
+            self.fmt = autotune.build(graph, graph_format or "csr")
         self.max_layers = max_layers
         self.algorithm = algorithm
         b = batch_slots
-        v_pad = csr.n_vertices_padded
+        self.n_vertices = self.fmt.n_vertices
+        v_pad = self.fmt.n_vertices_padded
         w = v_pad // bm.BITS_PER_WORD
         self.frontier = jnp.zeros((b, w), jnp.uint32)
         self.visited = jnp.zeros((b, w), jnp.uint32)
-        self.parent = jnp.full((b, v_pad), csr.n_vertices, jnp.int32)
-        self._base_visited = init_visited(csr)
+        self.parent = jnp.full((b, v_pad), self.n_vertices, jnp.int32)
+        self._base_visited = self.fmt.init_visited()
         self.slots: list[BfsQuery | None] = [None] * b
         self.queue: list[BfsQuery] = []
         self.finished: list[BfsQuery] = []
@@ -94,11 +119,11 @@ class GraphEngine:
                 self.frontier, self.visited, self.parent = _reset_slot(
                     self.frontier, self.visited, self.parent,
                     self._base_visited, jnp.asarray(nxt.root, jnp.int32),
-                    slot=i, n_vertices=self.csr.n_vertices)
+                    slot=i, n_vertices=self.n_vertices)
 
     def _harvest(self, i: int, q: BfsQuery, truncated: bool = False):
-        p = np.asarray(self.parent[i, :self.csr.n_vertices])
-        q.parent = np.where(p >= self.csr.n_vertices, -1, p)
+        p = np.asarray(self.parent[i, :self.n_vertices])
+        q.parent = np.where(p >= self.n_vertices, -1, p)
         q.truncated = truncated
         q.done = True
         self.finished.append(q)
@@ -106,10 +131,10 @@ class GraphEngine:
     def step(self):
         """One engine tick: advance every active query by one layer."""
         self._fill_slots()
-        self.frontier, self.visited, self.parent = engine.layer_step(
-            self.csr.colstarts, self.csr.rows, self.frontier,
-            self.visited, self.parent, n_vertices=self.csr.n_vertices,
-            algorithm=self.algorithm)
+        self.frontier, self.visited, self.parent = \
+            engine.layer_step_format(
+                self.fmt, self.frontier, self.visited, self.parent,
+                algorithm=self.algorithm)
         counts = np.asarray(engine.row_popcounts(self.frontier))
         for i, q in enumerate(self.slots):
             if q is None or q.done:

@@ -1,0 +1,273 @@
+"""Oracle-equivalence + unit tests for the graph-format subsystem.
+
+Every registered format must produce parents/levels identical to the
+serial oracle (validated through `core/validate.py`) on all four graph
+families — RMAT, star, path, disconnected — for every direction
+policy, including the batched multi-root path; plus autotuner,
+registry, footprint and kernel/jnp-sweep parity checks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csr as csr_mod
+from repro.core import engine, rmat
+from repro.core.bfs_parallel import parents_graph500
+from repro.core.bfs_serial import bfs_serial
+from repro.core.rmat import EdgeList
+from repro.core.validate import validate
+from repro.formats import SellFormat, autotune, registry
+from repro.kernels import ops
+from repro.serve.graph_engine import BfsQuery, GraphEngine
+
+POLICIES = [
+    engine.TopDown(),
+    engine.ThresholdSimd(1024),
+    engine.PaperLiteralLayers((1, 2)),
+    engine.BeamerHybrid(),
+]
+
+
+def _csr_from_pairs(pairs, n):
+    src = jnp.asarray([a for a, b in pairs] + [b for a, b in pairs],
+                      jnp.int32)
+    dst = jnp.asarray([b for a, b in pairs] + [a for a, b in pairs],
+                      jnp.int32)
+    return csr_mod.from_edges(EdgeList(src, dst, n))
+
+
+def star_graph(n=128):
+    """Hub 0 <-> 1..n-1: maximal degree skew — the SELL row-splitting
+    case (the hub becomes many virtual rows) and the Fig. 6 race."""
+    return _csr_from_pairs([(0, i) for i in range(1, n)], n)
+
+
+def path_graph(n=64):
+    """A chain: one vertex per layer — maximal layer count, zero skew."""
+    return _csr_from_pairs([(i, i + 1) for i in range(n - 1)], n)
+
+
+def disconnected_graph(n=128):
+    """Two components: a star [0, n/2) and a path [n/2, n)."""
+    half = n // 2
+    pairs = [(0, i) for i in range(1, half)]
+    pairs += [(i, i + 1) for i in range(half, n - 1)]
+    return _csr_from_pairs(pairs, n)
+
+
+GRAPHS = {
+    "rmat9": lambda: csr_mod.from_edges(
+        rmat.generate(jax.random.PRNGKey(3), scale=9, edgefactor=16)),
+    "star": star_graph,
+    "path": path_graph,
+    "disconnected": disconnected_graph,
+}
+ROOTS = {"rmat9": 17, "star": 0, "path": 0, "disconnected": 0}
+FORMATS = ("csr", "sell", "bitmap")
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {k: v() for k, v in GRAPHS.items()}
+
+
+@pytest.fixture(scope="module")
+def formats(graphs):
+    return {(gname, fname): registry.get(fname).from_graph(g)
+            for gname, g in graphs.items() for fname in FORMATS}
+
+
+def check_oracle(csr, parent_g500, root):
+    _, ref_depth = bfs_serial(np.asarray(csr.rows),
+                              np.asarray(csr.colstarts),
+                              csr.n_vertices, root)
+    res = validate(csr, parent_g500, root, reference_depth=ref_depth)
+    assert res.ok, res
+
+
+# ---------------------------------------------------------------------------
+# Oracle equivalence: every format x graph family x direction policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES,
+                         ids=lambda p: type(p).__name__)
+@pytest.mark.parametrize("fmt_name", FORMATS)
+@pytest.mark.parametrize("graph_name", list(GRAPHS))
+def test_every_format_matches_oracle(graphs, formats, graph_name,
+                                     fmt_name, policy):
+    g = graphs[graph_name]
+    fmt = formats[(graph_name, fmt_name)]
+    res = engine.traverse(fmt, ROOTS[graph_name], policy=policy,
+                          max_layers=128)
+    check_oracle(g, np.asarray(parents_graph500(res.state,
+                                                g.n_vertices)),
+                 ROOTS[graph_name])
+
+
+@pytest.mark.parametrize("policy", POLICIES,
+                         ids=lambda p: type(p).__name__)
+@pytest.mark.parametrize("fmt_name", FORMATS)
+def test_batched_multiroot_matches_oracle(graphs, formats, fmt_name,
+                                          policy):
+    g = graphs["rmat9"]
+    fmt = formats[("rmat9", fmt_name)]
+    roots = [3, 7, 100, 42, 42]          # dup roots are legal
+    res = engine.traverse(fmt, roots, policy=policy)
+    assert res.state.parent.shape[0] == len(roots)
+    for b, root in enumerate(roots):
+        st = engine.BfsState(res.state.frontier[b], res.state.visited[b],
+                             res.state.parent[b], res.state.layer)
+        check_oracle(g, np.asarray(parents_graph500(st, g.n_vertices)),
+                     root)
+
+
+@pytest.mark.parametrize("fmt_name", ("sell", "bitmap"))
+def test_format_agrees_with_csr_depths(graphs, formats, fmt_name):
+    g = graphs["disconnected"]
+    ref = engine.traverse(formats[("disconnected", "csr")], 0)
+    res = engine.traverse(formats[("disconnected", fmt_name)], 0)
+    p1 = np.asarray(parents_graph500(ref.state, g.n_vertices))
+    p2 = np.asarray(parents_graph500(res.state, g.n_vertices))
+    np.testing.assert_array_equal(p1 >= 0, p2 >= 0)
+    assert (p2[64:] == -1).all(), "other component must stay unreached"
+
+
+def test_nonsimd_algorithm_exact_updates(graphs, formats):
+    """Algorithm-2 semantics survive the format dispatch."""
+    g = graphs["star"]
+    for fmt_name in FORMATS:
+        res = engine.traverse(formats[("star", fmt_name)], 0,
+                              algorithm="nonsimd")
+        check_oracle(g, np.asarray(parents_graph500(res.state,
+                                                    g.n_vertices)), 0)
+
+
+# ---------------------------------------------------------------------------
+# SELL-C-σ specifics
+# ---------------------------------------------------------------------------
+
+def test_sell_kernel_matches_jnp_sweep(graphs, formats):
+    """The Pallas slab sweep and the pure-jnp reference sweep discover
+    the same layer (after restoration repairs the Fig. 6 race)."""
+    g = graphs["star"]
+    fmt = formats[("star", "sell")]
+    v_pad = g.n_vertices_padded
+    frontier, visited, parent = engine.init_root_state(
+        jnp.int32(0), fmt.init_visited(), g.n_vertices)
+    out_k, p_k = ops.sell(fmt.cols, fmt.slab_rows, frontier, visited,
+                          jnp.zeros_like(frontier), parent,
+                          n_vertices=g.n_vertices, slabs_per_step=1)
+    p_k, delta = ops.restore(p_k, n_vertices=g.n_vertices)
+    out_k = out_k | delta
+    out_j, _, p_j = fmt._sweep_jnp(frontier, visited, parent, "simd")
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_j))
+    np.testing.assert_array_equal(np.asarray(p_k) >= 0,
+                                  np.asarray(p_j) >= 0)
+
+
+def test_sell_row_splitting_bounds_padding(graphs):
+    """Row splitting bounds the slice width by the chunk size instead
+    of the hub degree: on the maximally skewed star graph the split
+    layout stores strictly fewer slots than the unsplit one, and every
+    real edge exactly once."""
+    g = graphs["star"]
+    split = SellFormat.from_csr(g, max_width=32)
+    unsplit = SellFormat.from_csr(g, max_width=128)  # >= hub degree
+    assert split.edge_slots < unsplit.edge_slots
+    for fmt in (split, unsplit):
+        cols = np.asarray(fmt.cols).reshape(-1)
+        assert (cols < g.n_vertices).sum() == g.n_edges
+    # on the skewed RMAT family the quantized padding stays small
+    rmat_fmt = SellFormat.from_csr(graphs["rmat9"])
+    assert rmat_fmt.fill_ratio >= 0.5
+
+
+def test_sell_slab_geometry(graphs, formats):
+    fmt = formats[("rmat9", "sell")]
+    from repro.kernels.sell_expand import SLICE_C, W_QUANT
+    assert fmt.cols.shape[1:] == (W_QUANT, SLICE_C)
+    assert fmt.slab_rows.shape == (fmt.cols.shape[0], SLICE_C)
+    assert 0 < fmt.fill_ratio <= 1.0
+
+
+def test_sell_resolve_tile_owns_grid(graphs, formats):
+    """The format owns tile selection: auto stays within the interpret
+    unroll budget, explicit tiles are honored (clamped up only)."""
+    fmt = formats[("rmat9", "sell")]
+    auto = fmt.resolve_tile(None)
+    assert -(-fmt.n_slabs // auto) <= 32
+    assert fmt.resolve_tile(fmt.n_slabs) == fmt.n_slabs
+
+
+# ---------------------------------------------------------------------------
+# Registry / autotuner / footprint
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert set(FORMATS) <= set(registry.available())
+    with pytest.raises(KeyError):
+        registry.get("no-such-format")
+
+
+def test_autotuner_choices(graphs):
+    assert autotune.choose(graphs["star"]).format == "sell"   # skew
+    assert autotune.choose(graphs["path"]).format == "csr"    # uniform
+    clique = _csr_from_pairs([(i, j) for i in range(32)
+                              for j in range(i + 1, 32)], 32)
+    assert autotune.choose(clique).format == "bitmap"         # dense
+
+
+def test_autotune_build_passthrough(graphs, formats):
+    fmt = formats[("rmat9", "sell")]
+    assert autotune.build(fmt) is fmt
+    built = autotune.build(graphs["path"])
+    assert built.name == "csr"
+
+
+def test_format_relayout_via_to_csr(graphs, formats):
+    """A built CsrFormat can be re-laid-out (it recovers its Csr); a
+    layout without `to_csr` raises a clear TypeError."""
+    csr_fmt = formats[("rmat9", "csr")]
+    relaid = registry.get("sell").from_graph(csr_fmt)
+    assert relaid.name == "sell" and relaid.n_edges == csr_fmt.n_edges
+    with pytest.raises(TypeError, match="re-lay-out"):
+        registry.get("csr").from_graph(formats[("rmat9", "sell")])
+
+
+def test_footprint_reports(graphs, formats):
+    for fmt_name in FORMATS:
+        fp = formats[("rmat9", fmt_name)].footprint()
+        assert fp.total_bytes > 0 and fp.format == fmt_name
+        assert fmt_name in fp.summary()
+
+
+def test_traverse_tile_argument_still_works(graphs):
+    """The `tile=` A/B knob keeps working through the format layer for
+    both the fused engine and the hostloop driver."""
+    g = graphs["rmat9"]
+    res = engine.traverse(g, 17, tile=512)
+    state, _, _ = engine.traverse_hostloop(g, 17, tile=512)
+    p1 = np.asarray(parents_graph500(res.state, g.n_vertices))
+    p2 = np.asarray(parents_graph500(state, g.n_vertices))
+    np.testing.assert_array_equal(p1 >= 0, p2 >= 0)
+
+
+# ---------------------------------------------------------------------------
+# Serve layer: preprocess-on-load format choice
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("graph_format", ("auto", "csr", "sell",
+                                          "bitmap"))
+def test_serve_engine_with_formats(graphs, graph_format):
+    g = graphs["rmat9"]
+    eng = GraphEngine(g, batch_slots=2, graph_format=graph_format)
+    if graph_format != "auto":
+        assert eng.fmt.name == graph_format
+    roots = [3, 7, 100]
+    for uid, r in enumerate(roots):
+        eng.submit(BfsQuery(uid=uid, root=r))
+    eng.run_until_done()
+    assert len(eng.finished) == len(roots)
+    for q in sorted(eng.finished, key=lambda q: q.uid):
+        check_oracle(g, q.parent, roots[q.uid])
