@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-quick bench bench-quick bench-formats
+.PHONY: test test-quick bench bench-quick bench-formats bench-gate
 
 test:            ## full tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -9,14 +9,18 @@ test:            ## full tier-1 suite (ROADMAP verify command)
 test-quick:      ## BFS substrate + engine + formats (fast inner loop)
 	$(PY) -m pytest -x -q tests/test_bitmap.py tests/test_kernels.py \
 	    tests/test_bfs_correctness.py tests/test_engine.py \
-	    tests/test_formats.py
+	    tests/test_formats.py tests/test_gather_pipeline.py
 
 bench:           ## full benchmark harness
 	$(PY) -m benchmarks.run
 
-bench-quick:     ## batched-BFS + tiny graph-format sweep at CI scale
+bench-quick:     ## batched + formats + layer/bytes probe (updates BENCH_bfs.json)
 	$(PY) -m benchmarks.run --quick --only bfs_batched
 	$(PY) -m benchmarks.run --quick --only bfs_formats
+	$(PY) -m benchmarks.run --quick --only bfs_layers
 
 bench-formats:   ## the graph-format sweep (TEPS + bytes per layout)
 	$(PY) -m benchmarks.run --only bfs_formats
+
+bench-gate:      ## CI: fused bytes-moved vs committed BENCH_bfs.json
+	$(PY) -m benchmarks.check_bytes_regression

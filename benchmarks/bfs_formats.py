@@ -11,7 +11,10 @@ Reported per (format, policy):
   from the reached set's degrees — layout-independent, so rows are
   directly comparable);
 * ``mb_moved``     — analytic bytes the expansion steps streamed
-  (``fmt.layer_bytes() x layers``; each layout's §4.2 accounting);
+  under the *fused_gather* pipeline the traversal actually ran
+  (measured per-layer active tiles x the layout's tile bytes +
+  planning; `formats.traversal_bytes`), with ``mb_mat`` the
+  materialized full-stream counterfactual alongside;
 * ``fp_mb``        — device footprint of the built layout.
 
 Plus one build-time line per format (preprocess-on-load cost,
@@ -32,7 +35,7 @@ from benchmarks.common import emit, graph
 from repro.configs.bfs_graph500 import FORMAT_SWEEP
 from repro.core import engine
 from repro.core.csr import traversed_edges
-from repro.formats import autotune, registry
+from repro.formats import autotune, registry, traversal_bytes
 
 
 SELL_VS_CSR_FLOOR = 0.5   # hard-fail ratio; see module docstring
@@ -84,13 +87,20 @@ def main(scale: int = 12, cfg=FORMAT_SWEEP) -> None:
             reached = np.asarray(p) < g.n_vertices
             n_layers = int(res.state.layer)
             edges = int(traversed_edges(g, reached))
+            stats = engine.layer_stats(res)
+            tile = fmt.resolve_tile(None)
+            mb = traversal_bytes(fmt, stats, tile=tile,
+                                 pipeline="fused_gather") / 2**20
+            mb_mat = traversal_bytes(fmt, stats, tile=tile,
+                                     pipeline="materialized") / 2**20
             t = _time(lambda f=fmt, pol=policy: jax.block_until_ready(
                 engine.traverse(f, root, policy=pol).state.parent))
             best[name] = min(best.get(name, np.inf), t)
             emit(f"bfs_fmt_{name}_{pname}_s{scale}", t * 1e6,
                  f"teps={edges / t:.3e};layers={n_layers};"
-                 f"mb_moved={fmt.layer_bytes() * n_layers / 2**20:.2f};"
-                 f"fp_mb={fp.total_bytes/2**20:.2f}")
+                 f"mb_moved={mb:.2f};mb_mat={mb_mat:.2f};"
+                 f"fp_mb={fp.total_bytes/2**20:.2f}",
+                 value=edges / t)
 
     if "csr" in best and "sell" in best:
         speedup = best["csr"] / best["sell"]

@@ -1,16 +1,82 @@
-"""Paper Table 1: traversed vertices/edges per BFS layer.
+"""Paper Table 1: traversed vertices/edges per BFS layer — plus the
+ISSUE 3 active-tile / bytes-moved instrumentation.
 
 Reproduces the layer-profile measurement that justifies §4.1's
 layer-adaptive vectorization: the fat middle layers carry ~95% of the
 edge traffic.  Run at the paper's SCALE=20 with --scale 20 (needs
 ~4 GB); default 16 for CPU-friendliness.
+
+The layer table now carries the fused pipeline's per-layer
+``active_tiles`` counter (how many rows-blocks the layer's work-list
+actually scheduled) — the analytic evidence that per-layer HBM
+traffic is frontier-proportional, visible even in interpret mode.
+
+`path_probe` is the high-diameter acceptance probe: a path graph
+(SCALE >= 10, one vertex per layer — the materialized pipeline's
+worst case, every thin layer re-streams the full padded E) traversed
+with the SIMD kernel forced on.  It reports analytic bytes-moved for
+both pipelines; the fused number is the baseline the CI regression
+gate (`benchmarks.check_bytes_regression`) compares against.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, graph
+from repro.core import csr as csr_mod, engine
 from repro.core.bfs_parallel import run_bfs
+from repro.core.rmat import EdgeList
+from repro.formats.base import traversal_bytes
+from repro.formats.csr_format import CsrFormat
+
+PATH_SCALE = 10    # fixed: the probe is the CI baseline, not --quick'd
+PATH_TILE = 128    # one lane set — the probe's prefetch distance
+
+
+def build_path_graph(n: int):
+    """Symmetrized chain 0-1-...-(n-1): one vertex per layer."""
+    i = jnp.arange(n - 1, dtype=jnp.int32)
+    return csr_mod.from_edges(
+        EdgeList(src=jnp.concatenate([i, i + 1]),
+                 dst=jnp.concatenate([i + 1, i]),
+                 n_vertices=n))
+
+
+def path_probe(scale: int = PATH_SCALE, tile: int = PATH_TILE,
+               quiet: bool = False) -> dict:
+    """Analytic bytes-moved for a high-diameter traversal, per
+    pipeline.  Deterministic (no timing) — safe as a CI gate."""
+    n = 1 << scale
+    g = build_path_graph(n)
+    fmt = CsrFormat.from_csr(g)
+    t = fmt.resolve_tile(tile)
+    res = engine.traverse(g, 0, policy=engine.ThresholdSimd(0),
+                          tile=tile, max_layers=n + 2,
+                          pipeline="fused_gather")
+    stats = engine.layer_stats(res)
+    fused = traversal_bytes(fmt, stats, tile=t,
+                            pipeline="fused_gather")
+    mat = traversal_bytes(fmt, stats, tile=t, pipeline="materialized")
+    out = {
+        "layers": len(stats),
+        "tile": t,
+        "bytes_fused": fused,
+        "bytes_materialized": mat,
+        "ratio": mat / max(fused, 1),
+        "max_layer_tiles": max(s.active_tiles for s in stats),
+    }
+    if not quiet:
+        emit("bfs_layers.path_bytes_fused", 0.0,
+             f"scale={scale};tile={t};bytes={fused}", value=fused)
+        emit("bfs_layers.path_bytes_materialized", 0.0,
+             f"scale={scale};tile={t};bytes={mat}", value=mat)
+        emit("bfs_layers.path_bytes_ratio", 0.0,
+             f"{out['ratio']:.1f}x", value=out["ratio"])
+        emit("bfs_layers.path_max_layer_tiles", 0.0,
+             str(out["max_layer_tiles"]),
+             value=out["max_layer_tiles"])
+    return out
 
 
 def main(scale: int = 16, root_seed: int = 0):
@@ -18,19 +84,34 @@ def main(scale: int = 16, root_seed: int = 0):
     rng = np.random.default_rng(root_seed)
     deg = np.asarray(g.degrees())
     root = int(rng.choice(np.nonzero(deg > 0)[0]))
-    _, stats = run_bfs(g, root, algorithm="simd", collect_stats=True)
+    _, stats = run_bfs(g, root, algorithm="simd", collect_stats=True,
+                       policy=engine.ThresholdSimd(0))
 
     print(f"# Table 1 analog: SCALE={scale} edgefactor=16 root={root}")
-    print("layer,vertices,edges,traversed")
+    print("layer,vertices,edges,traversed,active_tiles")
     total_e = sum(s.edges_examined for s in stats)
-    fat = 0
     for s in stats:
         print(f"{s.layer},{s.frontier_vertices},{s.edges_examined},"
-              f"{s.discovered}")
+              f"{s.discovered},{s.active_tiles}")
     top2 = sorted(s.edges_examined for s in stats)[-2:]
     fat_frac = sum(top2) / max(total_e, 1)
-    emit("bfs_layers.fat2_edge_fraction", 0.0, f"{fat_frac:.3f}")
-    emit("bfs_layers.diameter", 0.0, str(len(stats)))
+    emit("bfs_layers.fat2_edge_fraction", 0.0, f"{fat_frac:.3f}",
+         value=fat_frac)
+    emit("bfs_layers.diameter", 0.0, str(len(stats)),
+         value=len(stats))
+    total_tiles = sum(s.active_tiles for s in stats)
+    emit("bfs_layers.total_active_tiles", 0.0, str(total_tiles),
+         value=total_tiles)
+
+    # the high-diameter probe: the paper's prefetch lesson, measured
+    # as frontier-proportional bytes.  Fixed scale/tile — this is the
+    # committed baseline the CI bytes-moved gate compares against.
+    probe = path_probe()
+    print(f"# path probe s={PATH_SCALE}: fused "
+          f"{probe['bytes_fused']/2**20:.2f} MiB vs materialized "
+          f"{probe['bytes_materialized']/2**20:.2f} MiB "
+          f"({probe['ratio']:.1f}x), max {probe['max_layer_tiles']} "
+          f"tile(s)/layer")
     return fat_frac
 
 

@@ -14,6 +14,14 @@ TPU analogues (DESIGN.md §2):
   (3) + deep edge-stream tiles = Mosaic double-buffering distance, the
       software-prefetch analogue.
 
+Plus the ISSUE 3 **pipeline axis** through the fused engine:
+``fused_gather`` (in-kernel CSR gather + active-tile work-list) vs
+``materialized`` (the legacy full-E (u, v, valid) HBM round trip) at
+the same policy/tile — timed, and with the analytic bytes-moved of
+each pipeline emitted (the number that transfers to TPU; interpret
+wall time does not, the fused kernel's in-kernel owner search is pure
+Python overhead there).
+
 Numbers on this container come from interpret-mode kernels on CPU, so
 ONLY the relative ordering is meaningful; the structure (which knob
 buys what) is what transfers to TPU.
@@ -57,6 +65,31 @@ def main(scale: int = 13, n_roots: int = 3):
     # (Fig. 9 shape); 1.3x slack absorbs shared-CPU timing noise
     assert results["simd_align_mask"] <= 1.3 * results["simd_no_opt"], \
         "layer-adaptive switch regressed vs always-on SIMD"
+
+    # pipeline ablation (ISSUE 3): fused in-kernel gather vs the
+    # legacy materialized stream through the fused engine, SIMD
+    # kernel forced on so the pipelines actually diverge
+    from repro.formats.base import traversal_bytes
+    from repro.formats.csr_format import CsrFormat
+    fmt = CsrFormat.from_csr(g)
+    tile = fmt.resolve_tile(None)
+    for pipe in ("fused_gather", "materialized"):
+        res = engine.traverse(g, int(roots[0]),
+                              policy=engine.ThresholdSimd(0),
+                              pipeline=pipe)
+        n_layers = len(engine.layer_stats(res))
+        mb = traversal_bytes(fmt, engine.layer_stats(res), tile=tile,
+                             pipeline=pipe) / 2**20
+        sec = time_bfs(
+            lambda c, r, pipe=pipe: engine.traverse(
+                c, r, policy=engine.ThresholdSimd(0),
+                pipeline=pipe).state,
+            g, roots)
+        results[f"pipeline_{pipe}"] = sec
+        teps = g.n_edges / 2 / sec
+        emit(f"bfs_opt_ablation.pipeline_{pipe}", sec * 1e6,
+             f"{teps:.3e}_teps;layers={n_layers};mb_moved={mb:.2f}",
+             value=mb)
     return results
 
 

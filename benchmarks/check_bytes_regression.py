@@ -1,0 +1,77 @@
+"""CI gate: the fused pipeline's analytic bytes-moved must not regress.
+
+Recomputes the high-diameter probe (`bfs_layers.path_probe`: path
+graph SCALE-10, SIMD forced, fixed tile) with the *current* code and
+compares against the committed baseline in ``BENCH_bfs.json``.  The
+number is analytic — per-layer active tiles x tile bytes + planning —
+so the gate is deterministic and immune to CI timing noise, yet any
+structural regression (a step that stops scheduling work-lists, a
+planner that marks everything active, a kernel that re-materializes
+the stream) inflates it immediately.
+
+Run BEFORE ``make bench-quick`` in CI: the bench run merge-updates
+BENCH_bfs.json, and the gate must read the committed baseline.
+
+Two checks, because the baseline can be (legitimately) refreshed by
+committing a new BENCH_bfs.json — which would otherwise let a
+regression ratchet itself in:
+
+1. relative — current fused bytes vs the committed baseline (>10%
+   worse fails);
+2. absolute — the fused-vs-materialized ratio must stay >= MIN_RATIO
+   (the ISSUE 3 acceptance floor).  This one cannot be ratcheted
+   away: a planner that marks everything active fails it no matter
+   what baseline is committed.
+
+    PYTHONPATH=src python -m benchmarks.check_bytes_regression
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+TOLERANCE = 1.10   # fail if current bytes exceed baseline by >10%
+MIN_RATIO = 5.0    # acceptance floor: fused >= 5x less than stream
+BASELINE_KEY = "bfs_layers.path_bytes_fused"
+
+
+def main() -> int:
+    from benchmarks.bfs_layers import path_probe
+    from benchmarks.common import BENCH_JSON
+
+    if not BENCH_JSON.exists():
+        print(f"no {BENCH_JSON.name} baseline committed yet — run "
+              f"`make bench-quick` and commit the file")
+        return 1
+    data = json.loads(BENCH_JSON.read_text())
+    if BASELINE_KEY not in data or "value" not in data[BASELINE_KEY]:
+        print(f"{BENCH_JSON.name} has no {BASELINE_KEY!r} value — run "
+              f"`make bench-quick` and commit the update")
+        return 1
+    baseline = float(data[BASELINE_KEY]["value"])
+
+    probe = path_probe(quiet=True)
+    current = float(probe["bytes_fused"])
+    ratio = current / baseline
+    print(f"{BASELINE_KEY}: baseline={baseline:.0f} B "
+          f"current={current:.0f} B ({ratio:.3f}x, "
+          f"fused-vs-materialized {probe['ratio']:.1f}x)")
+    if current > baseline * TOLERANCE:
+        print(f"FAIL: analytic bytes-moved regressed >"
+              f"{(TOLERANCE - 1) * 100:.0f}% — the fused pipeline "
+              f"stopped being frontier-proportional")
+        return 1
+    if probe["ratio"] < MIN_RATIO:
+        print(f"FAIL: fused-vs-materialized ratio "
+              f"{probe['ratio']:.1f}x fell below the {MIN_RATIO:.0f}x "
+              f"acceptance floor (baseline-independent check)")
+        return 1
+    if current < baseline / TOLERANCE:
+        print("note: improved beyond tolerance — commit the new "
+              "baseline via `make bench-quick`")
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

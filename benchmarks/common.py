@@ -1,6 +1,14 @@
-"""Shared benchmark utilities: graph cache, timing, CSV emission."""
+"""Shared benchmark utilities: graph cache, timing, CSV emission.
+
+Every `emit` is also recorded in the in-process ``RESULTS`` registry;
+`benchmarks.run` persists the registry to ``BENCH_bfs.json`` at the
+repo root after each run (merge-update, so partial ``--only`` runs
+refresh just their keys) — the cross-PR perf trajectory file the CI
+bytes-moved gate reads."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -9,6 +17,12 @@ from repro.core import csr as csr_mod
 from repro.core import rmat
 
 _GRAPH_CACHE: dict = {}
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_bfs.json"
+
+#: name -> {"us_per_call": float, "derived": str, "value": float?}
+RESULTS: dict[str, dict] = {}
 
 
 def graph(scale: int, edgefactor: int = 16, seed: int = 2):
@@ -30,6 +44,26 @@ def time_bfs(fn, csr, roots, warmup_root=None) -> float:
     return (time.perf_counter() - t0) / len(roots)
 
 
-def emit(name: str, us_per_call: float, derived: str):
-    """The run.py contract: ``name,us_per_call,derived`` CSV."""
+def emit(name: str, us_per_call: float, derived: str,
+         value: float | None = None):
+    """The run.py contract: ``name,us_per_call,derived`` CSV.
+
+    ``value`` optionally attaches a machine-readable number (TEPS,
+    analytic bytes, tile counts) to the ``RESULTS``/BENCH_bfs.json
+    record — what regression gates compare instead of parsing the
+    derived string."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    rec = {"us_per_call": round(us_per_call, 1), "derived": derived}
+    if value is not None:
+        rec["value"] = float(value)
+    RESULTS[name] = rec
+
+
+def save_results() -> None:
+    """Merge ``RESULTS`` into BENCH_bfs.json (sorted, stable diffs)."""
+    data = {}
+    if BENCH_JSON.exists():
+        data = json.loads(BENCH_JSON.read_text())
+    data.update(RESULTS)
+    BENCH_JSON.write_text(json.dumps(data, indent=1, sort_keys=True)
+                          + "\n")

@@ -58,6 +58,14 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    # persist whatever succeeded: BENCH_bfs.json tracks the perf
+    # trajectory (TEPS, analytic bytes-moved, active-tile counts)
+    # across PRs; merge-update keeps other benchmarks' entries
+    from benchmarks import common
+    if common.RESULTS:
+        common.save_results()
+        print(f"# wrote {len(common.RESULTS)} metrics to "
+              f"{common.BENCH_JSON.name}")
     if failed:
         print(f"\nFAILED benchmarks: {failed}")
         sys.exit(1)

@@ -11,8 +11,10 @@ makes replication affordable and is the distributed payoff of the
 paper's §3.3.1 data structure.
 
 Per layer, under ``shard_map`` over the full mesh:
-  1. each chip compacts its slice of the (replicated) frontier and
-     apportions its local adjacency — all compute stays local;
+  1. each chip sweeps its local adjacency in rows order, gating every
+     edge on its slice of the (replicated) frontier bitmap
+     (`engine.rowsweep_stream` — the fused-gather pipeline's jnp arm;
+     no compaction/apportionment intermediates) — all compute local;
   2. local discoveries are written into an *encoded parent-candidate*
      array (``INF = V`` for "no update", else the parent id) with a
      deterministic ``.at[].min`` to resolve intra-chip duplicates;
@@ -102,17 +104,22 @@ def partition_csr(csr: Csr, n_devices: int, slack: float = 1.5):
 def _local_step(rows_l, colstarts_l, frontier, visited, v_loc: int,
                 n_vertices: int, v_cap: int, base):
     """One chip's expansion, built from the engine's step pieces:
-    `engine.edge_stream` gathers the local frontier slice's adjacency
-    (in LOCAL vertex ids, sentinel == v_loc) and
-    `engine.candidate_scatter` encodes discoveries as the min-parent
-    candidate array the collective merge resolves deterministically."""
+    `engine.rowsweep_stream` gathers the local frontier slice's
+    adjacency in rows order (LOCAL owner ids, GLOBAL neighbor ids) —
+    the per-chip arm of the ISSUE 3 fused pipeline: one pass over the
+    local rows with a per-edge bitmap gate, no compaction and no
+    marker/prefix-sum intermediates — and `engine.candidate_scatter`
+    encodes discoveries as the min-parent candidate array the
+    collective merge resolves deterministically."""
     w_loc = v_loc // bm.BITS_PER_WORD
     local_words = jax.lax.dynamic_slice(
         frontier, (base // bm.BITS_PER_WORD,), (w_loc,))
-    u_loc, v_nbr, valid = engine.edge_stream(
-        colstarts_l, rows_l, local_words, v_loc, v_loc,
-        rows_l.shape[0])
-    u_glob = jnp.where(u_loc < v_loc, u_loc + base, n_vertices)
+    u_loc, v_nbr, valid = engine.rowsweep_stream(
+        colstarts_l, rows_l, local_words, v_loc,
+        nbr_limit=n_vertices)
+    # u is consumed only under ``valid`` by the candidate scatter, so
+    # the unconditional rebase is safe for padding slots
+    u_glob = u_loc + base
     return engine.candidate_scatter(u_glob, v_nbr, valid, visited,
                                     n_vertices, v_cap)
 

@@ -45,7 +45,7 @@ def expand_simd_semantics(colstarts, rows, n_vertices: int,
                           state: BfsState, frontier_size: int,
                           edge_slots: int) -> BfsState:
     """One layer of Algorithm 3 (bitmaps, racy scatter, restoration)."""
-    out, visited, parent = engine.scalar_expand(
+    out, visited, parent, _ = engine.scalar_expand(
         colstarts, rows, n_vertices, state.frontier, state.visited,
         state.parent, frontier_size, edge_slots, "simd")
     return BfsState(out, visited, parent, state.layer + 1)
@@ -54,7 +54,7 @@ def expand_simd_semantics(colstarts, rows, n_vertices: int,
 def expand_nonsimd(colstarts, rows, n_vertices: int, state: BfsState,
                    frontier_size: int, edge_slots: int) -> BfsState:
     """One layer of Algorithm 2 on dense bool arrays (exact updates)."""
-    out, visited, parent = engine.scalar_expand(
+    out, visited, parent, _ = engine.scalar_expand(
         colstarts, rows, n_vertices, state.frontier, state.visited,
         state.parent, frontier_size, edge_slots, "nonsimd")
     return BfsState(out, visited, parent, state.layer + 1)

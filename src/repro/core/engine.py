@@ -21,8 +21,24 @@ map onto engine phases as follows:
   Policies are small frozen objects deciding from on-device counters,
   so the decision traces into the fused loop — no host round-trip.
 * **expand**: the racy gather-test-mask-scatter hot loop (§3.2, §3.3.2
-  Fig. 6).  The scalar and SIMD paths share the apportionment machinery
-  (`edge_stream`); the batched kernel adds a leading root axis so many
+  Fig. 6).  Two pipelines exist (the ``pipeline`` axis):
+
+  - ``fused_gather`` (default, ISSUE 3) — HBM traffic proportional to
+    the live frontier: a tiny on-device planning pass
+    (`plan_active_tiles`) builds a work-list of the rows-blocks the
+    frontier's adjacency touches, and the kernel
+    (kernels/gather_expand.py) gathers candidate edges HBM->VMEM
+    in-kernel, recomputing edge->owner with a binary search over the
+    VMEM-resident ``colstarts``.  Inactive tiles are clamped to a
+    sentinel block by the scalar-prefetched index map (the DMA is
+    elided) and skipped by a ``pl.when`` guard, so a thin layer costs
+    ~1 tile instead of E_pad/tile tiles.
+  - ``materialized`` (legacy, kept for the ablation axis) — the
+    apportionment machinery (`edge_stream`) writes a full-E ``(u, v,
+    valid)`` stream to HBM which the kernel then re-reads.
+
+  The scalar (plain-jnp) layer keeps the materialized apportionment in
+  both pipelines; the batched kernels add a leading root axis so many
   searches expand in one launch.
 * **restore** (§3.3.2, Alg. 3 lines 15-29): every vertex discovered
   this layer is identified by its negative ``P`` entry and its bit is
@@ -44,7 +60,7 @@ Two drivers expose the pipeline:
 The public drivers ``bfs_parallel.run_bfs``,
 ``bfs_vectorized.run_bfs_vectorized`` and ``bfs_hybrid.run_bfs_hybrid``
 are thin wrappers selecting a policy; ``bfs_distributed`` builds its
-shard_map per-chip step from `edge_stream` + `candidate_scatter`.
+shard_map per-chip step from `rowsweep_stream` + `candidate_scatter`.
 
 The engine is **format-generic** (repro/formats/): the per-layer
 expansion steps are built by the graph format object — CSR keeps the
@@ -75,8 +91,12 @@ MODE_BOTTOMUP = 2   # frontier-testing kernel (hybrid bottom-up)
 MODE_NAMES = {MODE_SCALAR: "topdown", MODE_SIMD: "topdown",
               MODE_BOTTOMUP: "bottomup"}
 
+PIPELINES = ("fused_gather", "materialized")
+
 # on-device per-layer stats buffer columns
-_ST_FRONTIER, _ST_EDGES, _ST_DISCOVERED, _ST_MODE, _ST_ACTIVE = range(5)
+(_ST_FRONTIER, _ST_EDGES, _ST_DISCOVERED, _ST_MODE, _ST_ACTIVE,
+ _ST_TILES, _ST_TRUNC) = range(7)
+_N_ST = 7
 
 
 class BfsState(NamedTuple):
@@ -91,6 +111,23 @@ class LayerStats(NamedTuple):
     frontier_vertices: int  # |in|  (Table 1 "Vertices")
     edges_examined: int     # Σ deg(in)  (Table 1 "Edges")
     discovered: int         # |out| (Table 1 "Traversed vertices")
+    active_tiles: int = 0   # grid tiles of real work this layer
+    #                         (batch-summed; the fused pipeline's
+    #                         frontier-proportionality counter)
+    truncated_edges: int = 0  # edges clamped by apportionment overflow
+
+
+class StepAux(NamedTuple):
+    """Per-layer accounting every format step returns with its state.
+
+    ``tiles`` is the number of grid tiles (DMA units) of real work the
+    step scheduled, summed over the root batch — the analytic
+    bytes-moved counter that makes the fused pipeline's win visible in
+    CI even in interpret mode.  ``truncated`` counts edges the
+    apportionment clamped (hub-overflow; 0 on the fused path, which
+    never apportions)."""
+    tiles: jax.Array        # int32 scalar
+    truncated: jax.Array    # int32 scalar
 
 
 class Workload(NamedTuple):
@@ -198,7 +235,12 @@ def apportion(csr_colstarts: jax.Array, csr_rows: jax.Array,
     """Map ``n_slots`` edge slots onto the frontier's adjacency lists.
 
     frontier_list is sentinel-padded (id == n_vertices => empty).
-    Returns (u, v, valid) arrays of length n_slots.
+    Returns (u, v, valid, truncated) — the streams are length n_slots;
+    ``truncated`` is the int32 count of edges that did NOT fit (a hub
+    whose adjacency overruns the remaining slots is clamped
+    *deterministically* to its list prefix — the clip below — instead
+    of silently corrupting owners; the counter surfaces the loss in
+    `LayerStats.truncated_edges`).
 
     Owner lookup is a scatter + prefix-sum instead of a binary search:
     ``owner[slot] = #frontier vertices whose adjacency ends at or
@@ -213,9 +255,13 @@ def apportion(csr_colstarts: jax.Array, csr_rows: jax.Array,
                     csr_colstarts[safe + 1] - csr_colstarts[safe], 0)
     cum = jnp.cumsum(deg, dtype=jnp.int32)
     total = cum[-1] if cum.shape[0] else jnp.int32(0)
+    truncated = jnp.maximum(total - n_slots, 0).astype(jnp.int32)
     slots = jnp.arange(n_slots, dtype=jnp.int32)
     # scatter a marker at each vertex's END offset; prefix-sum counts
-    # how many adjacency lists finished at or before each slot
+    # how many adjacency lists finished at or before each slot.  End
+    # offsets past n_slots drop out, so slots inside an overflowing
+    # hub's range keep that hub as owner: the clamp keeps the edge
+    # prefix, deterministically.
     markers = (jnp.zeros((n_slots,), jnp.int32)
                .at[cum].add(1, mode="drop"))
     owner = jnp.cumsum(markers, dtype=jnp.int32)
@@ -227,18 +273,83 @@ def apportion(csr_colstarts: jax.Array, csr_rows: jax.Array,
     e_idx = csr_colstarts[u_safe] + (slots - prev)
     e_idx = jnp.clip(e_idx, 0, csr_rows.shape[0] - 1)
     v = csr_rows[e_idx]
-    return u.astype(jnp.int32), v, valid
+    return u.astype(jnp.int32), v, valid, truncated
 
 
 def edge_stream(colstarts, rows, frontier_words, list_size: int,
                 n_vertices: int, n_slots: int):
-    """The engine's gather phase: bitmap -> apportioned (u, v, valid).
-
-    Also the per-chip local step of the distributed program — the chip
-    passes its rebased CSR slice and its slice of the frontier bitmap.
+    """The engine's gather phase: bitmap -> apportioned
+    (u, v, valid, truncated) — the *materialized* pipeline's stream.
     """
     frontier_list = bm.compact(frontier_words, list_size, n_vertices)
     return apportion(colstarts, rows, frontier_list, n_vertices, n_slots)
+
+
+def rowsweep_stream(colstarts, rows, active_words, n_vertices: int,
+                    nbr_limit: int | None = None):
+    """(u, v, valid) in **rows order** — the jnp form of the fused
+    in-kernel gather (kernels/gather_expand.py) and its oracle.
+
+    Owners come from a degree-expansion of ``colstarts`` and the
+    frontier gate is a bitmap test per edge — one pass over ``rows``
+    with no compaction, no marker scatter and no prefix-sum
+    intermediates (the apportionment machinery the fused pipeline
+    removes).  ``nbr_limit`` bounds valid neighbor ids; it differs
+    from ``n_vertices`` only in the distributed per-chip step, where
+    owners live in LOCAL ids (< v_loc) but neighbors are GLOBAL.
+    """
+    nbr_limit = n_vertices if nbr_limit is None else nbr_limit
+    e_pad = rows.shape[0]
+    deg = colstarts[1:] - colstarts[:-1]
+    u = jnp.repeat(jnp.arange(n_vertices, dtype=jnp.int32), deg,
+                   total_repeat_length=e_pad)
+    # padding slots carry sentinel neighbors, so the v-test alone
+    # invalidates them regardless of the repeat's tail fill
+    valid = bm.test_bits(active_words, u) & (rows < nbr_limit)
+    return u, rows, valid
+
+
+def compact_worklist(active, n: int):
+    """Bool mask (n,) -> (worklist (n,) int32, n_active int32).
+
+    The single home of the scalar-prefetch work-list contract every
+    active-scheduled kernel assumes: active indices first, and every
+    entry past ``n_active`` clamped to the LAST active index — the
+    kernel's index map then feeds Mosaic an unchanged block index,
+    which elides the repeated DMA (the sentinel-block trick that
+    makes inactive tiles free; a ``pl.when`` guard skips their
+    compute).  Shared by `plan_active_tiles` (CSR rows-blocks) and
+    `formats.sell.SellFormat._plan_slab_steps` (slab groups).
+    """
+    n_active = active.sum(dtype=jnp.int32)
+    (wl,) = jnp.nonzero(active, size=n, fill_value=0)
+    wl = wl.astype(jnp.int32)
+    last = wl[jnp.clip(n_active - 1, 0, n - 1)]
+    wl = jnp.where(jnp.arange(n) < n_active, wl, last)
+    return wl, n_active
+
+
+def plan_active_tiles(colstarts, active_words, n_vertices: int,
+                      tile: int, n_blocks: int):
+    """The fused pipeline's per-layer scheduling pass (one root).
+
+    Marks every ``tile``-sized block of ``rows`` that intersects an
+    active vertex's adjacency (range-mark via a +1/-1 difference
+    scatter + prefix sum — O(V + n_blocks), no E-sized arrays) and
+    compacts the marks into a `compact_worklist`.  Returns
+    (worklist (n_blocks,) int32, n_active int32).
+    """
+    dense = bm.unpack_bool(active_words)[:n_vertices]
+    start, end = colstarts[:-1], colstarts[1:]
+    has = dense & (end > start)
+    blk_lo = start // tile
+    blk_hi = (end - 1) // tile
+    drop = n_blocks + 1
+    diff = jnp.zeros((n_blocks + 1,), jnp.int32)
+    diff = diff.at[jnp.where(has, blk_lo, drop)].add(1, mode="drop")
+    diff = diff.at[jnp.where(has, blk_hi + 1, drop)].add(-1, mode="drop")
+    covered = jnp.cumsum(diff)[:n_blocks] > 0
+    return compact_worklist(covered, n_blocks)
 
 
 def candidate_scatter(u, v, valid, visited, n_vertices: int, v_cap: int):
@@ -300,18 +411,21 @@ def _auto_tile(e_size: int, interpret: bool) -> int:
     return max(1024, e_size // 32)
 
 
-def _resolve_tile(tile: int | None, e_pad: int) -> int:
-    """Resolve a user tile override for the CSR edge stream (see
-    `_auto_tile` for the format-ownership contract)."""
+def _resolve_tile_csr(tile: int | None, e_pad: int) -> int:
+    """The CSR tile rule (`formats.CsrFormat.resolve_tile`).
+
+    The tile is the fused pipeline's DMA unit AND its prefetch
+    distance (§4's knob); unlike the hostloop's `_auto_tile` floor of
+    1024 it bottoms out at 128 (one lane set) so small graphs still
+    resolve to several blocks and the active-tile schedule has
+    something to skip.  The interpret-mode floor keeps the unrolled
+    grid <=32 steps, same budget as `_auto_tile`.
+    """
     interpret = jax.default_backend() != "tpu"
+    floor = max(128, e_pad // 32) if interpret else 128
     if tile is None:
-        return _auto_tile(e_pad, interpret)
-    if interpret:
-        # interpret mode unrolls the kernel grid at trace time; clamp
-        # the requested tile so the full-E fused layer stays <=64 steps
-        # (on TPU the requested tile is honored exactly)
-        return max(int(tile), _auto_tile(e_pad, True) // 2)
-    return int(tile)
+        return floor if interpret else 1024
+    return max(int(tile), floor) if interpret else max(int(tile), 128)
 
 
 # ---------------------------------------------------------------------------
@@ -353,22 +467,36 @@ def scalar_expand(colstarts, rows, n_vertices: int, frontier, visited,
     """One plain-jnp top-down CSR layer (Algorithm 2/3): apportioned
     gather + the shared `expand_candidates` body.  The fused engine,
     the hostloop driver, and ``bfs_parallel.expand_*`` all call this.
-    Returns (out, visited, parent)."""
-    u, v, valid = edge_stream(colstarts, rows, frontier, f_size,
-                              n_vertices, e_size)
-    return expand_candidates(u, v, valid, frontier, visited, parent,
-                             n_vertices, algorithm)
+    Returns (out, visited, parent, truncated)."""
+    u, v, valid, truncated = edge_stream(colstarts, rows, frontier,
+                                         f_size, n_vertices, e_size)
+    out, visited, parent = expand_candidates(
+        u, v, valid, frontier, visited, parent, n_vertices, algorithm)
+    return out, visited, parent, truncated
 
 
 def _make_scalar_step(colstarts, rows, n_vertices: int, v_pad: int,
-                      e_pad: int, algorithm: str):
-    """Plain-jnp Algorithm 2/3 layer, vmapped over the root axis."""
+                      e_pad: int, algorithm: str, tile: int):
+    """Plain-jnp Algorithm 2/3 layer, vmapped over the root axis.
+
+    Always materialized (the apportioned stream IS the scalar
+    algorithm); its StepAux reports the full stream's tile count so
+    the accounting stays comparable across modes."""
 
     def one(frontier, visited, parent):
         return scalar_expand(colstarts, rows, n_vertices, frontier,
                              visited, parent, v_pad, e_pad, algorithm)
 
-    return jax.vmap(one)
+    vm = jax.vmap(one)
+    tiles_per_root = -(-e_pad // tile)
+
+    def step(frontier, visited, parent):
+        out, visited, parent, trunc = vm(frontier, visited, parent)
+        aux = StepAux(jnp.int32(frontier.shape[0] * tiles_per_root),
+                      trunc.sum(dtype=jnp.int32))
+        return out, visited, parent, aux
+
+    return step
 
 
 def kernel_expand_restore(expand_fn, nbr, cand, valid, frontier,
@@ -389,15 +517,59 @@ def kernel_expand_restore(expand_fn, nbr, cand, valid, frontier,
 
 def _make_simd_step(colstarts, rows, n_vertices: int, v_pad: int,
                     e_pad: int, tile: int):
-    """§4 SIMD layer: batched Pallas expansion + kernel restoration."""
+    """§4 SIMD layer, *materialized* pipeline: apportioned HBM stream
+    + batched Pallas expansion + kernel restoration."""
+    tiles_per_root = -(-e_pad // tile)
 
     def step(frontier, visited, parent):
-        u, v, valid = jax.vmap(
+        u, v, valid, trunc = jax.vmap(
             lambda f: edge_stream(colstarts, rows, f, v_pad, n_vertices,
                                   e_pad))(frontier)
-        return kernel_expand_restore(ops.expand_batched, u, v, valid,
-                                     frontier, visited, parent,
-                                     n_vertices, tile)
+        out, visited, parent = kernel_expand_restore(
+            ops.expand_batched, u, v, valid, frontier, visited, parent,
+            n_vertices, tile)
+        aux = StepAux(jnp.int32(frontier.shape[0] * tiles_per_root),
+                      trunc.sum(dtype=jnp.int32))
+        return out, visited, parent, aux
+
+    return step
+
+
+def _pad_rows_to_tile(rows, n_vertices: int, tile: int):
+    """Sentinel-pad the CSR rows to a tile multiple — once, at step
+    build time (a loop constant), never inside the layer loop."""
+    pad = (-int(rows.shape[0])) % tile
+    if pad:
+        rows = jnp.concatenate(
+            [rows, jnp.full((pad,), n_vertices, jnp.int32)])
+    return rows
+
+
+def _make_fused_step(colstarts, rows_t, n_vertices: int, tile: int,
+                     bottom_up: bool):
+    """One fused_gather layer (ISSUE 3), both directions.
+
+    Top-down plans the active rows-blocks from the *frontier*'s
+    adjacency; bottom-up from the *unvisited* set's (``~visited`` —
+    padding is premarked, so the complement is exactly the real
+    undiscovered vertices), with the kernel testing each gathered
+    neighbor against the frontier bitmap.  Either way: no
+    materialized (u, v, valid) round trip.  ``rows_t`` is the
+    tile-padded rows array (padded once in `_make_steps`)."""
+    n_blocks = int(rows_t.shape[0]) // tile
+
+    def step(frontier, visited, parent):
+        active = ~visited if bottom_up else frontier
+        wl, na = jax.vmap(
+            lambda a: plan_active_tiles(colstarts, a, n_vertices, tile,
+                                        n_blocks))(active)
+        out_racy, p_racy = ops.gather_expand_batched(
+            wl, na, rows_t, colstarts, frontier, visited,
+            jnp.zeros_like(frontier), parent, n_vertices=n_vertices,
+            tile=tile, bottom_up=bottom_up)
+        p_fixed, delta = ops.restore(p_racy, n_vertices=n_vertices)
+        aux = StepAux(na.sum(dtype=jnp.int32), jnp.int32(0))
+        return out_racy | delta, visited | delta, p_fixed, aux
 
     return step
 
@@ -414,31 +586,54 @@ def _bottomup_stream(colstarts, rows, visited_words, n_vertices: int,
 
 def _make_bottomup_step(colstarts, rows, n_vertices: int, v_pad: int,
                         e_pad: int, tile: int):
-    """Bottom-up layer: apportion the *unvisited* adjacency, test each
-    neighbor against the frontier bitmap inside the kernel."""
+    """Bottom-up layer, materialized pipeline: apportion the
+    *unvisited* adjacency, test each neighbor against the frontier
+    bitmap inside the kernel."""
+    tiles_per_root = -(-e_pad // tile)
 
     def step(frontier, visited, parent):
-        cand, nbr, valid = jax.vmap(
+        cand, nbr, valid, trunc = jax.vmap(
             lambda vis: _bottomup_stream(colstarts, rows, vis,
                                          n_vertices, v_pad,
                                          e_pad))(visited)
-        return kernel_expand_restore(ops.expand_batched, nbr, cand,
-                                     valid, frontier, visited, parent,
-                                     n_vertices, tile,
-                                     check_frontier=True)
+        out, visited, parent = kernel_expand_restore(
+            ops.expand_batched, nbr, cand, valid, frontier, visited,
+            parent, n_vertices, tile, check_frontier=True)
+        aux = StepAux(jnp.int32(frontier.shape[0] * tiles_per_root),
+                      trunc.sum(dtype=jnp.int32))
+        return out, visited, parent, aux
 
     return step
 
 
+def check_pipeline(pipeline: str) -> None:
+    """Fail loudly on a mistyped pipeline name — every step builder
+    routes through this so a typo can't silently select the legacy
+    materialized path."""
+    if pipeline not in PIPELINES:
+        raise ValueError(f"unknown pipeline {pipeline!r}; "
+                         f"expected one of {PIPELINES}")
+
+
 def _make_steps(colstarts, rows, n_vertices, v_pad, e_pad, algorithm,
-                tile):
+                tile, pipeline: str = "fused_gather"):
+    check_pipeline(pipeline)
+    if pipeline == "fused_gather":
+        rows_t = _pad_rows_to_tile(rows, n_vertices, tile)
+        simd = _make_fused_step(colstarts, rows_t, n_vertices, tile,
+                                bottom_up=False)
+        bottomup = _make_fused_step(colstarts, rows_t, n_vertices,
+                                    tile, bottom_up=True)
+    else:
+        simd = _make_simd_step(colstarts, rows, n_vertices, v_pad,
+                               e_pad, tile)
+        bottomup = _make_bottomup_step(colstarts, rows, n_vertices,
+                                       v_pad, e_pad, tile)
     return {
         MODE_SCALAR: _make_scalar_step(colstarts, rows, n_vertices,
-                                       v_pad, e_pad, algorithm),
-        MODE_SIMD: _make_simd_step(colstarts, rows, n_vertices, v_pad,
-                                   e_pad, tile),
-        MODE_BOTTOMUP: _make_bottomup_step(colstarts, rows, n_vertices,
-                                           v_pad, e_pad, tile),
+                                       v_pad, e_pad, algorithm, tile),
+        MODE_SIMD: simd,
+        MODE_BOTTOMUP: bottomup,
     }
 
 
@@ -467,20 +662,23 @@ def _init_batched(roots, n_vertices: int, v_pad: int):
 
 
 def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
-                   max_layers: int) -> EngineResult:
+                   max_layers: int,
+                   pipeline: str = "fused_gather") -> EngineResult:
     """The fused engine body, generic over a `formats.GraphFormat`.
 
     Every per-layer step (scalar / SIMD kernel / bottom-up) is built
-    by the *format* — the layout owns its gather primitive — while the
-    measure/decide/restore pipeline and the single ``lax.while_loop``
-    stay layout-independent.  ``roots`` is a (B,) int32 array; every
-    state array carries the leading root axis.  No host
-    synchronization between layers.
+    by the *format* — the layout owns its gather primitive and its
+    ``pipeline`` flavour (fused in-kernel gather vs materialized
+    stream) — while the measure/decide/restore pipeline and the single
+    ``lax.while_loop`` stay layout-independent.  ``roots`` is a (B,)
+    int32 array; every state array carries the leading root axis.  No
+    host synchronization between layers.
     """
     n_vertices = fmt.n_vertices
     v_pad = fmt.n_vertices_padded
     deg = fmt.degrees()
-    steps = fmt.make_steps(algorithm=algorithm, tile=tile)
+    steps = fmt.make_steps(algorithm=algorithm, tile=tile,
+                           pipeline=pipeline)
     modes = tuple(policy.modes)
 
     def rows_workload(words):          # (B, W) -> per-root counters
@@ -491,7 +689,7 @@ def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
     n_roots = roots.shape[0]
     carry0 = (frontier, visited, parent, jnp.int32(0), jnp.asarray(False),
               jnp.zeros((n_roots,), jnp.int32),
-              jnp.zeros((max_layers, 5), jnp.int32))
+              jnp.zeros((max_layers, _N_ST), jnp.int32))
 
     def cond(s):
         frontier, layer = s[0], s[3]
@@ -519,12 +717,12 @@ def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
             # one distinct step (single-mode policy, or a format that
             # maps every mode onto one sweep): call directly instead
             # of tracing the same body once per switch branch
-            new_f, visited, parent = steps[modes[0]](frontier, visited,
-                                                     parent)
+            new_f, visited, parent, aux = steps[modes[0]](
+                frontier, visited, parent)
         else:
             branch = sum(jnp.where(mode == m, jnp.int32(i), 0)
                          for i, m in enumerate(modes))
-            new_f, visited, parent = jax.lax.switch(
+            new_f, visited, parent, aux = jax.lax.switch(
                 branch,
                 [functools.partial(lambda fn, op: fn(*op), steps[m])
                  for m in modes],
@@ -534,7 +732,7 @@ def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
         # fits, extreme batched sums may clip — diagnostics only)
         stats = stats.at[layer].set(
             jnp.stack([f_count_b.sum(), f_edges_b.sum(), discovered,
-                       mode, jnp.int32(1)]))
+                       mode, jnp.int32(1), aux.tiles, aux.truncated]))
         depths = depths + (f_count_b > 0).astype(jnp.int32)
         return (new_f, visited, parent, layer + 1, bottom_up, depths,
                 stats)
@@ -547,11 +745,11 @@ def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
 
 @functools.partial(
     jax.jit, static_argnames=("n_vertices", "policy", "algorithm",
-                              "tile", "max_layers"))
+                              "tile", "max_layers", "pipeline"))
 def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
                     policy=TopDown(), algorithm: str = "simd",
-                    tile: int = 1024, max_layers: int = 64
-                    ) -> EngineResult:
+                    tile: int = 1024, max_layers: int = 64,
+                    pipeline: str = "fused_gather") -> EngineResult:
     """The fused engine on raw CSR arrays (shard_map/dry-run friendly).
 
     Kept as the array-level entry for callers that only hold arrays,
@@ -563,15 +761,16 @@ def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
     from repro.formats.csr_format import CsrFormat
     fmt = CsrFormat(colstarts, rows, n_vertices, int(rows.shape[0]))
     return _traverse_impl(fmt, roots, policy, algorithm, tile,
-                          max_layers)
+                          max_layers, pipeline)
 
 
 @functools.partial(
     jax.jit, static_argnames=("policy", "algorithm", "tile",
-                              "max_layers"))
+                              "max_layers", "pipeline"))
 def traverse_format(fmt, roots, *, policy=TopDown(),
                     algorithm: str = "simd", tile: int = 1,
-                    max_layers: int = 64) -> EngineResult:
+                    max_layers: int = 64,
+                    pipeline: str = "fused_gather") -> EngineResult:
     """The fused engine on any registered `GraphFormat` pytree.
 
     ``fmt``'s arrays are traced leaves and its shape metadata is
@@ -581,12 +780,12 @@ def traverse_format(fmt, roots, *, policy=TopDown(),
     grid step; bitmap: unused).
     """
     return _traverse_impl(fmt, roots, policy, algorithm, tile,
-                          max_layers)
+                          max_layers, pipeline)
 
 
 def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
-             tile: int | None = None, max_layers: int = 64
-             ) -> EngineResult:
+             tile: int | None = None, max_layers: int = 64,
+             pipeline: str = "fused_gather") -> EngineResult:
     """Run the fused engine for one root or a batch of roots.
 
     Args:
@@ -601,6 +800,10 @@ def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
       tile: format-defined tile override (None = the format's auto
         choice; the format owns tile selection — §4.2's aligned unit
         is a property of the layout).
+      pipeline: "fused_gather" (default — in-kernel CSR gather +
+        active-tile scheduling, HBM traffic proportional to the
+        frontier) | "materialized" (legacy full-E edge stream; the
+        ablation baseline).
 
     In batched mode the policy decides ONCE per layer from the
     batch-summed counters (one mode for the whole batch keeps the loop
@@ -608,6 +811,7 @@ def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
     """
     if algorithm not in ("simd", "nonsimd"):
         raise ValueError(f"unknown scalar algorithm {algorithm!r}")
+    check_pipeline(pipeline)
     from repro.formats.csr_format import CsrFormat
     fmt = CsrFormat.from_csr(graph) if isinstance(graph, Csr) else graph
     single = jnp.ndim(roots) == 0
@@ -616,7 +820,7 @@ def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
         fmt, roots_arr,
         policy=policy if policy is not None else TopDown(),
         algorithm=algorithm, tile=fmt.resolve_tile(tile),
-        max_layers=max_layers)
+        max_layers=max_layers, pipeline=pipeline)
     if single:
         st = res.state
         return EngineResult(
@@ -633,10 +837,13 @@ def layer_stats(result: EngineResult) -> list[LayerStats]:
     for i in range(buf.shape[0]):
         if not buf[i, _ST_ACTIVE]:
             break
-        out.append(LayerStats(layer=i,
-                              frontier_vertices=int(buf[i, _ST_FRONTIER]),
-                              edges_examined=int(buf[i, _ST_EDGES]),
-                              discovered=int(buf[i, _ST_DISCOVERED])))
+        out.append(LayerStats(
+            layer=i,
+            frontier_vertices=int(buf[i, _ST_FRONTIER]),
+            edges_examined=int(buf[i, _ST_EDGES]),
+            discovered=int(buf[i, _ST_DISCOVERED]),
+            active_tiles=int(buf[i, _ST_TILES]),
+            truncated_edges=int(buf[i, _ST_TRUNC])))
     return out
 
 
@@ -666,24 +873,31 @@ def layer_step(colstarts, rows, frontier, visited, parent, *,
     v_pad = parent.shape[-1]
     e_pad = int(rows.shape[0])
     step = _make_scalar_step(colstarts, rows, n_vertices, v_pad, e_pad,
-                             algorithm)
-    return step(frontier, visited, parent)
+                             algorithm, _resolve_tile_csr(None, e_pad))
+    return step(frontier, visited, parent)[:3]
 
 
-@functools.partial(jax.jit, static_argnames=("algorithm",))
+@functools.partial(jax.jit, static_argnames=("algorithm", "pipeline"))
 def layer_step_format(fmt, frontier, visited, parent, *,
-                      algorithm: str = "simd"):
+                      algorithm: str = "simd",
+                      pipeline: str = "fused_gather"):
     """Format-generic one-layer tick (the serve engine's step).
 
     Same contract as `layer_step`, but the per-layer step comes from
     the graph format (`fmt.make_steps`) — the serve layer picks the
-    layout per graph at load time and ticks through it.  Uses the
-    format's scalar-mode step: serve batch shapes never change, so
-    this compiles once per (format geometry, batch shape).
+    layout per graph at load time and ticks through it.  Since ISSUE 3
+    the ``algorithm="simd"`` tick routes through the format's SIMD
+    step — for CSR that is the fused in-kernel gather, so a serve
+    batch full of thin frontiers (or drained slots, n_active == 0)
+    costs tiles proportional to the live work instead of E_pad/tile.
+    Serve batch shapes never change, so this compiles once per
+    (format geometry, batch shape).
     """
     steps = fmt.make_steps(algorithm=algorithm,
-                           tile=fmt.resolve_tile(None))
-    return steps[MODE_SCALAR](frontier, visited, parent)
+                           tile=fmt.resolve_tile(None),
+                           pipeline=pipeline)
+    mode = MODE_SIMD if algorithm == "simd" else MODE_SCALAR
+    return steps[mode](frontier, visited, parent)[:3]
 
 
 # ---------------------------------------------------------------------------
@@ -710,21 +924,26 @@ def _unvisited_workload(visited, colstarts, n_vertices):
                                     "f_size", "e_size", "tile"))
 def _hostloop_layer(colstarts, rows, frontier, visited, parent, *,
                     n_vertices, mode, algorithm, f_size, e_size, tile):
-    """One bucketed layer at exact pow2 shapes, any mode."""
+    """One bucketed layer at exact pow2 shapes, any mode.
+
+    Always the materialized pipeline (the hostloop is the legacy A/B
+    driver); returns (out, visited, parent, truncated)."""
     if mode == MODE_SCALAR:
         return scalar_expand(colstarts, rows, n_vertices, frontier,
                              visited, parent, f_size, e_size, algorithm)
     if mode == MODE_SIMD:
-        u, v, valid = edge_stream(colstarts, rows, frontier, f_size,
-                                  n_vertices, e_size)
+        u, v, valid, trunc = edge_stream(colstarts, rows, frontier,
+                                         f_size, n_vertices, e_size)
         return kernel_expand_restore(ops.expand, u, v, valid, frontier,
-                                     visited, parent, n_vertices, tile)
+                                     visited, parent, n_vertices,
+                                     tile) + (trunc,)
     # MODE_BOTTOMUP: f_size buckets the unvisited-candidate list
-    cand, nbr, valid = _bottomup_stream(colstarts, rows, visited,
-                                        n_vertices, f_size, e_size)
+    cand, nbr, valid, trunc = _bottomup_stream(colstarts, rows, visited,
+                                               n_vertices, f_size,
+                                               e_size)
     return kernel_expand_restore(ops.expand, nbr, cand, valid, frontier,
                                  visited, parent, n_vertices, tile,
-                                 check_frontier=True)
+                                 check_frontier=True) + (trunc,)
 
 
 def traverse_hostloop(csr: Csr, root: int, *, policy=None,
@@ -775,7 +994,7 @@ def traverse_hostloop(csr: Csr, root: int, *, policy=None,
             f_size = _next_pow2(count)
             e_size = _next_pow2(max(edges, 1))
         t = tile if tile is not None else _auto_tile(e_size, interpret)
-        frontier, visited, parent = _hostloop_layer(
+        frontier, visited, parent, trunc = _hostloop_layer(
             csr.colstarts, csr.rows, frontier, visited, parent,
             n_vertices=csr.n_vertices, mode=mode, algorithm=algorithm,
             f_size=f_size, e_size=e_size, tile=t)
@@ -784,7 +1003,9 @@ def traverse_hostloop(csr: Csr, root: int, *, policy=None,
             stats.append(LayerStats(
                 layer=layer, frontier_vertices=count,
                 edges_examined=edges,
-                discovered=int(bm.popcount(frontier))))
+                discovered=int(bm.popcount(frontier)),
+                active_tiles=-(-e_size // t),
+                truncated_edges=int(trunc)))
         layer += 1
     state = BfsState(frontier, visited, parent, jnp.int32(layer))
     return state, stats, log

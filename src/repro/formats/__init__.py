@@ -13,7 +13,8 @@ Entry points: `registry.build(graph, name)` ("auto" = autotuner),
 `engine.traverse(fmt, roots)` to run the fused engine on any format.
 """
 from repro.formats import autotune, registry
-from repro.formats.base import Footprint, GraphFormat, csr_to_edges
+from repro.formats.base import Footprint, GraphFormat, csr_to_edges, \
+    traversal_bytes
 from repro.formats.bitmap_format import BitmapCompressedFormat
 from repro.formats.csr_format import CsrFormat
 from repro.formats.registry import available, build, get
@@ -21,6 +22,6 @@ from repro.formats.sell import SellFormat
 
 __all__ = [
     "autotune", "registry", "available", "build", "get",
-    "Footprint", "GraphFormat", "csr_to_edges",
+    "Footprint", "GraphFormat", "csr_to_edges", "traversal_bytes",
     "CsrFormat", "SellFormat", "BitmapCompressedFormat",
 ]

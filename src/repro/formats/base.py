@@ -17,11 +17,19 @@ phase wants a different layout than top-down.
   for each engine mode (scalar / SIMD-kernel / bottom-up), the
   format-specialized replacement for the raw ``colstarts/rows``
   apportionment.  All steps share one signature
-  ``(frontier, visited, parent) -> (out, visited, parent)`` with a
-  leading root axis, so direction policies work unmodified.
+  ``(frontier, visited, parent) -> (out, visited, parent, StepAux)``
+  with a leading root axis, so direction policies work unmodified;
+  the `engine.StepAux` tail carries the step's active-tile and
+  truncation counters.  The ``pipeline`` build flag selects between
+  the frontier-proportional **fused_gather** steps (ISSUE 3:
+  in-kernel gather + scalar-prefetched active-tile work-lists) and
+  the legacy **materialized** full-stream steps (the ablation
+  baseline).
 * **counters**  — ``degrees`` feeds the engine's on-device Table 1
-  workload counters; ``edge_slots``/``layer_bytes`` are the format's
-  per-layer stream-width and bytes-moved accounting.
+  workload counters; ``edge_slots``/``layer_bytes``/``tile_bytes``/
+  ``plan_bytes`` are the format's per-layer stream-width and
+  bytes-moved accounting for both pipelines (`traversal_bytes` sums
+  them over a traversal's layer stats).
 * **footprint** — ``footprint`` reports device bytes per array so the
   autotuner and benchmarks can compare layouts.
 
@@ -143,13 +151,20 @@ class GraphFormat(abc.ABC):
         """(V,) int32 out-degrees — the Table 1 workload counter input."""
 
     @abc.abstractmethod
-    def make_steps(self, *, algorithm: str, tile: int) -> dict:
+    def make_steps(self, *, algorithm: str, tile: int,
+                   pipeline: str = "fused_gather") -> dict:
         """Batched per-layer steps keyed by engine mode.
 
         Returns ``{MODE_SCALAR: fn, MODE_SIMD: fn, MODE_BOTTOMUP: fn}``
         where each ``fn(frontier, visited, parent)`` advances every
         root in the leading batch axis by one layer and returns
-        ``(out, visited, parent)``.
+        ``(out, visited, parent, engine.StepAux)``.
+
+        ``pipeline`` is "fused_gather" (frontier-proportional traffic:
+        active-tile work-lists + in-kernel gather where the layout
+        supports it) or "materialized" (the legacy full-stream /
+        full-sweep steps).  Formats whose one sweep serves both (the
+        bitmap layout) may ignore it.
         """
 
     def resolve_tile(self, tile: int | None) -> int:
@@ -169,11 +184,28 @@ class GraphFormat(abc.ABC):
         """Edge-stream slots one SIMD layer examines (incl. padding)."""
 
     def layer_bytes(self) -> int:
-        """Analytic bytes one SIMD layer streams from HBM (the
-        bytes-moved counter of benchmarks/bfs_formats.py).  Default:
-        the edge stream at 4 B/slot for the (nbr, cand, valid)
-        triple."""
+        """Analytic bytes one *materialized* SIMD layer streams from
+        HBM (the bytes-moved counter of benchmarks/bfs_formats.py).
+        Default: the edge stream at 4 B/slot for the (nbr, cand,
+        valid) triple; CSR overrides with the write+read round trip
+        its pipeline actually performs."""
         return 3 * 4 * self.edge_slots
+
+    # -- fused-pipeline accounting (ISSUE 3) -----------------------------
+    def tile_bytes(self, tile: int) -> int:
+        """Bytes ONE active tile DMAs in the fused pipeline — ``tile``
+        is in the format's own grid units (CSR: rows slots; SELL:
+        slabs per step)."""
+        return 4 * tile
+
+    def plan_bytes(self, tile: int) -> int:
+        """Per-layer traffic of the fused pipeline's planning pass
+        (the O(V) active-tile marking + work-list round trip) —
+        charged once per layer regardless of frontier size, which is
+        exactly why fused bytes stay ~flat on thin layers."""
+        n_blocks = -(-self.edge_slots // max(tile, 1))
+        return (self.n_vertices_padded // 8     # active bitmap read
+                + 2 * 4 * n_blocks)             # work-list write+read
 
     # -- shared init helpers --------------------------------------------
     def init_visited(self) -> jax.Array:
@@ -185,3 +217,20 @@ class GraphFormat(abc.ABC):
     def __repr__(self) -> str:
         return (f"{type(self).__name__}(V={self.n_vertices}, "
                 f"E={self.n_edges})")
+
+
+def traversal_bytes(fmt: GraphFormat, stats, *, tile: int,
+                    pipeline: str = "fused_gather") -> int:
+    """Analytic HBM bytes a whole traversal's expansion layers moved.
+
+    ``stats`` is `engine.layer_stats(result)` — the fused pipeline
+    charges each layer its *measured* active tiles plus the planning
+    pass; the materialized pipeline charges the full stream every
+    layer.  Single-root accounting (batched stats sum tiles across
+    roots, so the fused term scales; the materialized term would need
+    an explicit root multiplier).
+    """
+    if pipeline == "materialized":
+        return fmt.layer_bytes() * len(stats)
+    return sum(fmt.tile_bytes(tile) * s.active_tiles
+               + fmt.plan_bytes(tile) for s in stats)

@@ -109,9 +109,20 @@ class BitmapCompressedFormat(GraphFormat):
         out = bm.pack_bool(mask)
         return out, visited | out, parent
 
-    def make_steps(self, *, algorithm: str, tile: int) -> dict:
+    def make_steps(self, *, algorithm: str, tile: int,
+                   pipeline: str = "fused_gather") -> dict:
         from repro.core import engine
-        step = jax.vmap(self._sweep)
+        engine.check_pipeline(pipeline)
+        vm = jax.vmap(self._sweep)
+
+        # the dense sweep has no stream to materialize and no tiles to
+        # skip, so both pipelines are the same step; one sweep per
+        # root is its tile unit
+        def step(frontier, visited, parent):
+            out, vis, par = vm(frontier, visited, parent)
+            return out, vis, par, engine.StepAux(
+                jnp.int32(frontier.shape[0]), jnp.int32(0))
+
         # one sweep is simultaneously the scalar, SIMD and bottom-up
         # flavour: the dense word AND *is* the bottom-up frontier test
         return {engine.MODE_SCALAR: step,
@@ -131,3 +142,10 @@ class BitmapCompressedFormat(GraphFormat):
 
     def layer_bytes(self) -> int:
         return nbytes(self.adj)       # the sweep streams the adj matrix
+
+    def tile_bytes(self, tile: int) -> int:
+        # StepAux reports one "tile" per root sweep: the whole matrix
+        return nbytes(self.adj)
+
+    def plan_bytes(self, tile: int) -> int:
+        return 0                      # nothing to plan — no schedule

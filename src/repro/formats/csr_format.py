@@ -1,11 +1,15 @@
 """CsrFormat — the existing §3.3.1 CSR as a registered GraphFormat.
 
 A thin adapter around `core/csr.py`: the arrays and the §4.2 padding
-convention are unchanged; the gather primitive is the engine's
-bitmap->apportion edge stream (`engine.edge_stream`), so per-layer
-work is O(frontier edges) at the price of the apportionment pass
-(compaction + prefix-sum) every layer.  The baseline every other
-format is measured against.
+convention are unchanged.  Since ISSUE 3 the default gather primitive
+is the **fused in-kernel gather** (kernels/gather_expand.py): a
+per-layer planning pass marks the rows-blocks the frontier's
+adjacency touches and the kernel DMAs only those, recomputing
+edge->owner with a VMEM binary search — HBM traffic proportional to
+the live frontier.  ``pipeline="materialized"`` rebuilds the legacy
+bitmap->apportion edge stream (`engine.edge_stream`, a full-E (u, v,
+valid) HBM round trip per SIMD layer) for the ablation axis.  The
+baseline every other format is measured against.
 """
 from __future__ import annotations
 
@@ -68,19 +72,23 @@ class CsrFormat(GraphFormat):
     def degrees(self) -> jax.Array:
         return self.colstarts[1:] - self.colstarts[:-1]
 
-    def make_steps(self, *, algorithm: str, tile: int) -> dict:
+    def make_steps(self, *, algorithm: str, tile: int,
+                   pipeline: str = "fused_gather") -> dict:
         from repro.core import engine
         return engine._make_steps(self.colstarts, self.rows,
                                   self._n_vertices,
                                   self.n_vertices_padded,
-                                  self.n_edges_padded, algorithm, tile)
+                                  self.n_edges_padded, algorithm, tile,
+                                  pipeline)
 
     def resolve_tile(self, tile: int | None) -> int:
-        # CSR tiles the apportioned edge stream; the shared auto rule
-        # (interpret-mode grid clamp) lives in engine and stays the
-        # `traverse_hostloop` behavior too.
+        # CSR tiles the rows array: the fused pipeline's DMA block ==
+        # the §4 prefetch distance.  The fused rule bottoms out at one
+        # lane set (128) so small graphs still split into several
+        # blocks for the active-tile schedule to skip; the hostloop
+        # A/B driver keeps the legacy `_auto_tile` rule separately.
         from repro.core import engine
-        return engine._resolve_tile(tile, self.n_edges_padded)
+        return engine._resolve_tile_csr(tile, self.n_edges_padded)
 
     # -- accounting ------------------------------------------------------
     def footprint(self) -> Footprint:
@@ -91,3 +99,15 @@ class CsrFormat(GraphFormat):
     @property
     def edge_slots(self) -> int:
         return self.n_edges_padded
+
+    def layer_bytes(self) -> int:
+        # the materialized pipeline WRITES the apportioned (u, v,
+        # valid) stream to HBM and the kernel re-reads it: 2 x 3 words
+        # x 4 B per slot per layer — the round trip the fused gather
+        # eliminates
+        return 2 * 3 * 4 * self.edge_slots
+
+    def plan_bytes(self, tile: int) -> int:
+        # the CSR planner also streams colstarts (degree marks)
+        return (4 * (self.n_vertices + 1)
+                + super().plan_bytes(tile))

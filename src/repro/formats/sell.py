@@ -22,14 +22,19 @@ is what keeps the quantized padding small on skewed-degree graphs:
 hub vertices share slices with hub vertices, so a slice of leaves is
 1 slab wide instead of max-degree wide.
 
-Traversal is the SpMV-style sweep of `kernels/sell_expand.py`: every
-layer touches every slab (O(nnz_sell) work, vs CSR's O(frontier
-edges)), but pays **no apportionment pass** (CSR's per-layer
-compaction + prefix-sum over the edge stream) and no gather
-irregularity in the stream itself.  On skewed small-diameter graphs
-(RMAT) almost all edges sit in 2-3 fat layers anyway, so the sweep's
-extra touched slots are small while its aligned loads are strictly
-cheaper — the SlimSell argument.
+Traversal is the SpMV-style sweep of `kernels/sell_expand.py`.  Since
+ISSUE 3 the sweep is **active-slab scheduled** under the default
+``fused_gather`` pipeline: a per-layer planning pass tests each
+slab's ``slab_rows`` against the frontier bitmap and compacts the
+hits into a scalar-prefetched work-list, so a thin layer touches only
+the slices holding frontier rows (O(frontier slices) slabs) instead
+of all of nnz_sell — while still paying **no apportionment pass**
+(CSR's per-layer compaction + prefix-sum over the edge stream) and no
+gather irregularity in the stream itself.  ``materialized`` keeps the
+full O(nnz_sell) sweep for the ablation axis; on skewed
+small-diameter graphs (RMAT) almost all edges sit in 2-3 fat layers
+anyway, so the full sweep's extra touched slots are small while its
+aligned loads are strictly cheaper — the SlimSell argument.
 """
 from __future__ import annotations
 
@@ -204,26 +209,69 @@ class SellFormat(GraphFormat):
         return expand_candidates(src, nbr, valid, frontier, visited,
                                  parent, v, algorithm)
 
-    def make_steps(self, *, algorithm: str, tile: int) -> dict:
-        from repro.core import engine
+    def _plan_slab_steps(self, frontier, slabs_per_step: int,
+                         n_steps: int):
+        """Active slab-group work-list for one root (ISSUE 3).
+
+        A slab group is active iff any of its lanes' owning rows is in
+        the frontier — exactly the kernel's gating mask, so skipping
+        inactive groups changes nothing.  The clamp-to-last-active
+        tail contract lives in `engine.compact_worklist`."""
+        from repro.core import bitmap as bm
+        from repro.core.engine import compact_worklist
         v = self._n_vertices
+        rows = self.slab_rows
+        active = (bm.test_bits(frontier, rows) & (rows < v)).any(axis=1)
+        pad = n_steps * slabs_per_step - active.shape[0]
+        if pad:       # ops-level sentinel slabs are never active
+            active = jnp.concatenate(
+                [active, jnp.zeros((pad,), bool)])
+        act_step = active.reshape(n_steps, slabs_per_step).any(axis=1)
+        return compact_worklist(act_step, n_steps)
+
+    def make_steps(self, *, algorithm: str, tile: int,
+                   pipeline: str = "fused_gather") -> dict:
+        from repro.core import engine
+        engine.check_pipeline(pipeline)
+        v = self._n_vertices
+        n_steps = -(-self.n_slabs // tile)
+        fused = pipeline == "fused_gather"
 
         def kernel_step(frontier, visited, parent):
+            kw = {}
+            if fused:
+                wl, na = jax.vmap(
+                    lambda f: self._plan_slab_steps(f, tile,
+                                                    n_steps))(frontier)
+                kw = dict(worklist=wl, n_active=na)
+                tiles = na.sum(dtype=jnp.int32)
+            else:
+                tiles = jnp.int32(frontier.shape[0] * n_steps)
             out_racy, p_racy = ops.sell_batched(
                 self.cols, self.slab_rows, frontier, visited,
                 jnp.zeros_like(frontier), parent, n_vertices=v,
-                slabs_per_step=tile)
+                slabs_per_step=tile, **kw)
             p_fixed, delta = ops.restore(p_racy, n_vertices=v)
-            return out_racy | delta, visited | delta, p_fixed
+            return (out_racy | delta, visited | delta, p_fixed,
+                    engine.StepAux(tiles, jnp.int32(0)))
+
+        def jnp_step(frontier, visited, parent):
+            out, vis, par = jax.vmap(
+                lambda f, vi, p: self._sweep_jnp(f, vi, p,
+                                                 algorithm))(
+                frontier, visited, parent)
+            return out, vis, par, engine.StepAux(
+                jnp.int32(frontier.shape[0] * n_steps), jnp.int32(0))
 
         # The sweep is direction-agnostic on the symmetrized adjacency
-        # (see kernels/sell_expand.py): bottom-up == the same kernel.
-        # MODE_SCALAR also maps to the kernel — SELL has no cheaper
-        # "scalar" gather, so a thin layer costs the same sweep either
-        # way — except under algorithm="nonsimd", whose Algorithm-2
-        # exact-update semantics need the dense jnp path.
-        scalar_step = kernel_step if algorithm == "simd" else jax.vmap(
-            lambda f, vi, p: self._sweep_jnp(f, vi, p, algorithm))
+        # (see kernels/sell_expand.py): bottom-up == the same kernel,
+        # and the planner's frontier-row gate matches it in every
+        # mode.  MODE_SCALAR also maps to the kernel — SELL has no
+        # cheaper "scalar" gather, so a thin layer costs the same
+        # (active-scheduled) sweep either way — except under
+        # algorithm="nonsimd", whose Algorithm-2 exact-update
+        # semantics need the dense jnp path.
+        scalar_step = kernel_step if algorithm == "simd" else jnp_step
         return {engine.MODE_SCALAR: scalar_step,
                 engine.MODE_SIMD: kernel_step,
                 engine.MODE_BOTTOMUP: kernel_step}
@@ -253,5 +301,16 @@ class SellFormat(GraphFormat):
         return self.n_slabs * W_QUANT * SLICE_C
 
     def layer_bytes(self) -> int:
-        # one sweep streams every cols slab + its slab_rows ids
+        # one full (materialized) sweep streams every cols slab + its
+        # slab_rows ids
         return 4 * self.n_slabs * (W_QUANT + 1) * SLICE_C
+
+    def tile_bytes(self, tile: int) -> int:
+        # one active slab group: `tile` slabs of cols + slab_rows
+        return 4 * tile * (W_QUANT + 1) * SLICE_C
+
+    def plan_bytes(self, tile: int) -> int:
+        # the slab planner scans every slab's row ids + the work-list
+        # round trip
+        n_steps = -(-self.n_slabs // max(tile, 1))
+        return 4 * self.n_slabs * SLICE_C + 2 * 4 * n_steps

@@ -1,0 +1,252 @@
+"""Pallas TPU kernel: fused in-kernel CSR gather + active-tile schedule.
+
+The frontier-proportional replacement for the materialized edge stream
+(ISSUE 3).  `frontier_expand.py` consumes an apportioned ``(u, v,
+valid)`` triple that a jnp pass writes to HBM and the kernel re-reads
+— a layer touching 1% of the edges still moves ~3x E_pad words twice.
+This kernel eliminates the round trip and makes the HBM traffic scale
+with the live frontier:
+
+* **in-kernel gather** — the kernel takes ``colstarts``/``rows``
+  directly.  ``rows`` stays in HBM and is DMA'd one aligned
+  *tile-sized block* per grid step (the Pallas indirection idiom:
+  block-granular gathers through the BlockSpec index map).  The edge
+  -> owner mapping that `engine.apportion` materialized is recomputed
+  on the fly with a branchless binary search over the VMEM-resident
+  ``colstarts`` — log2(V) VMEM gathers instead of an E_pad-word HBM
+  stream.
+* **scalar-prefetched active-tile scheduling** — a tiny on-device
+  planning pass (`engine.plan_active_tiles`) marks which rows-blocks
+  intersect the frontier's adjacency and compacts them into a
+  *work-list*.  The work-list rides in scalar-prefetch memory: the
+  BlockSpec index map reads ``worklist[t]`` to pick the block each
+  grid step DMAs, entries past ``n_active`` are clamped to the last
+  active block (an unchanged block index => Mosaic elides the repeated
+  DMA) and a ``pl.when`` guard skips their compute.  A 1k-edge layer
+  on a SCALE-22 graph therefore costs ~1 tile of traffic, not
+  E_pad/tile tiles.  This is the TPU analog of the paper's §4
+  prefetch-distance tuning: the *tile size* is the prefetch distance,
+  the work-list replaces ``_mm_prefetch``.
+
+Direction is a role swap on the same body (`_expand_tile`):
+
+* top-down:  owner u gated by "u in frontier", neighbor v tested
+  undiscovered, P[v] = u - |V| (the Listing 1 hot loop);
+* bottom-up: the planner marks *unvisited* vertices' blocks, owner u
+  tested undiscovered, neighbor v gated by "v in frontier",
+  P[u] = v - |V| (the hybrid extension, arXiv:1704.02259).
+
+Races and restoration are exactly the §3.3.2 story of the materialized
+kernel: the word scatter may drop colliding bits, the negative P marks
+let `restoration.py` repair them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.frontier_expand import _expand_tile
+from repro.kernels.pallas_compat import CompilerParams
+
+DEFAULT_TILE = 1024  # 8 sublanes x 128 lanes of int32
+
+
+def _owner_search(colstarts, e_idx, n_entries: int):
+    """Largest u with ``colstarts[u] <= e`` — branchless bit-lifting
+    binary search (log2(V+1) VMEM gathers, no HBM traffic).
+
+    This is the in-kernel inverse of the apportionment prefix-sum:
+    edge position -> owning vertex.  ``colstarts[0] == 0 <= e`` holds
+    for every slot, so the greedy bit descent is total; a result of
+    ``n_entries - 1`` (== V) marks the sentinel-padded tail of rows.
+    """
+    u = jnp.zeros(e_idx.shape, jnp.int32)
+    step = 1
+    while step * 2 < n_entries:
+        step *= 2
+    while step:
+        cand = u + step
+        safe = jnp.clip(cand, 0, n_entries - 1)
+        ok = (cand < n_entries) & (colstarts[safe] <= e_idx)
+        u = jnp.where(ok, cand, u)
+        step //= 2
+    return u
+
+
+def _gather_tile(n_vertices: int, tile: int, n_cs: int, bottom_up: bool,
+                 blk, rows_blk, colstarts, frontier, vis, out, p):
+    """One active tile: gather owners + run the shared hot-loop body."""
+    e_idx = blk * tile + jnp.arange(tile, dtype=jnp.int32)
+    u = _owner_search(colstarts, e_idx, n_cs)
+    v = rows_blk
+    valid = (u < n_vertices) & (v < n_vertices)
+    # the role swap: the frontier-gated side goes through the
+    # check_frontier test, the discovered side through the bitmap test
+    nbr, cand = (v, u) if bottom_up else (u, v)
+    return _expand_tile(n_vertices, True, nbr, cand, valid, frontier,
+                        vis, out, p)
+
+
+def _gather_kernel(n_vertices: int, tile: int, n_cs: int,
+                   bottom_up: bool, wl_ref, na_ref, rows_ref, cs_ref,
+                   frontier_ref, vis_ref, out0_ref, p0_ref, out_ref,
+                   p_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():  # carry initial out/P into the accumulating outputs
+        out_ref[...] = out0_ref[...]
+        p_ref[...] = p0_ref[...]
+
+    @pl.when(t < na_ref[0])
+    def _work():  # inactive tiles: no DMA (clamped index), no compute
+        out, p = _gather_tile(n_vertices, tile, n_cs, bottom_up,
+                              wl_ref[t], rows_ref[...], cs_ref[...],
+                              frontier_ref[...], vis_ref[...],
+                              out_ref[...], p_ref[...])
+        out_ref[...] = out
+        p_ref[...] = p
+
+
+def _gather_batched_kernel(n_vertices: int, tile: int, n_cs: int,
+                           bottom_up: bool, wl_ref, na_ref, rows_ref,
+                           cs_ref, frontier_ref, vis_ref, out0_ref,
+                           p0_ref, out_ref, p_ref):
+    """Batched variant: grid (roots, tiles); the adjacency is shared
+    (no root axis on rows/colstarts), each root has its own work-list
+    and accumulates into its own out/P rows."""
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = out0_ref[...]
+        p_ref[...] = p0_ref[...]
+
+    @pl.when(t < na_ref[b])
+    def _work():
+        out, p = _gather_tile(n_vertices, tile, n_cs, bottom_up,
+                              wl_ref[b, t], rows_ref[...], cs_ref[...],
+                              frontier_ref[0], vis_ref[0],
+                              out_ref[0], p_ref[0])
+        out_ref[...] = out[None]
+        p_ref[...] = p[None]
+
+
+def vmem_budget(n_words: int, v_pad: int, n_cs: int, tile: int) -> int:
+    """Bytes of VMEM pinned (bitmaps x3 + P x2 + colstarts + rows
+    tile double-buffered)."""
+    return 4 * (3 * n_words + 2 * v_pad + n_cs) + 2 * 4 * tile
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices", "tile",
+                                             "bottom_up", "interpret"))
+def gather_expand(worklist, n_active, rows, colstarts, frontier,
+                  visited, out_init, p_init, *, n_vertices: int,
+                  tile: int = DEFAULT_TILE, bottom_up: bool = False,
+                  interpret: bool = True):
+    """Fused gather-expand over the active rows-blocks of one layer.
+
+    Args:
+      worklist: (n_blocks,) int32 — block id each grid step DMAs.
+        Active entries first; the tail must be clamped to the last
+        active block (repeated index => the DMA is elided).
+      n_active: (1,) int32 — live prefix length of ``worklist``.
+      rows: (E_tiles,) int32 CSR adjacency, sentinel-padded, length a
+        multiple of ``tile`` (pad once at build, NOT per layer).
+      colstarts: (V + 1,) int32 — VMEM-resident for the owner search.
+      frontier, visited, out_init: (W,) uint32 bitmaps.
+      p_init: (V_pad,) int32 predecessor array.
+      bottom_up: False = top-down gather, True = unvisited-adjacency
+        sweep testing neighbors against the frontier.
+    Returns:
+      (out, parent) after the racy expansion (restoration NOT applied)
+      — the same contract as `frontier_expand.frontier_expand`.
+    """
+    n_slots = rows.shape[0]
+    assert n_slots % tile == 0, "pad rows to the tile size at build"
+    n_blocks = n_slots // tile
+    assert worklist.shape[0] == n_blocks
+    n_cs = colstarts.shape[0]
+    n_words = visited.shape[0]
+    v_pad = p_init.shape[0]
+
+    whole = lambda n: pl.BlockSpec((n,), lambda t, wl, na: (0,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((tile,), lambda t, wl, na: (wl[t],)),
+                  whole(n_cs), whole(n_words), whole(n_words),
+                  whole(n_words), whole(v_pad)],
+        out_specs=[whole(n_words), whole(v_pad)],
+    )
+    kernel = functools.partial(_gather_kernel, n_vertices, tile, n_cs,
+                               bottom_up)
+    out, parent = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_words,), jnp.uint32),
+                   jax.ShapeDtypeStruct((v_pad,), jnp.int32)],
+        compiler_params=CompilerParams(
+            # accumulating outputs => sequential grid on the core
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="bfs_gather_expand",
+    )(worklist, n_active, rows, colstarts, frontier, visited, out_init,
+      p_init)
+    return out, parent
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices", "tile",
+                                             "bottom_up", "interpret"))
+def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
+                          visited, out_init, p_init, *, n_vertices: int,
+                          tile: int = DEFAULT_TILE,
+                          bottom_up: bool = False,
+                          interpret: bool = True):
+    """Multi-root fused gather-expand: one launch, B searches.
+
+    ``worklist`` is (B, n_blocks) and ``n_active`` (B,) — each root
+    schedules its own active tiles (a finished root has n_active == 0
+    and costs nothing).  ``rows``/``colstarts`` carry no root axis
+    (the layout is shared); bitmaps/P are (B, W) / (B, V_pad).  Grid
+    is (B, n_tiles): roots parallel, tiles sequential.
+    """
+    n_slots = rows.shape[0]
+    assert n_slots % tile == 0, "pad rows to the tile size at build"
+    n_blocks = n_slots // tile
+    n_batch = worklist.shape[0]
+    assert worklist.shape == (n_batch, n_blocks)
+    n_cs = colstarts.shape[0]
+    n_words = visited.shape[1]
+    v_pad = p_init.shape[1]
+
+    flat = lambda n: pl.BlockSpec((n,), lambda b, t, wl, na: (0,))
+    whole = lambda n: pl.BlockSpec((1, n), lambda b, t, wl, na: (b, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_batch, n_blocks),
+        in_specs=[pl.BlockSpec((tile,),
+                               lambda b, t, wl, na: (wl[b, t],)),
+                  flat(n_cs), whole(n_words), whole(n_words),
+                  whole(n_words), whole(v_pad)],
+        out_specs=[whole(n_words), whole(v_pad)],
+    )
+    kernel = functools.partial(_gather_batched_kernel, n_vertices, tile,
+                               n_cs, bottom_up)
+    out, parent = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_batch, n_words), jnp.uint32),
+                   jax.ShapeDtypeStruct((n_batch, v_pad), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="bfs_gather_expand_batched",
+    )(worklist, n_active, rows, colstarts, frontier, visited, out_init,
+      p_init)
+    return out, parent

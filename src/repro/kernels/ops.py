@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.bitmap import BITS_PER_WORD
 from repro.kernels import bitmap_kernels, frontier_expand as fe
+from repro.kernels import gather_expand as ge
 from repro.kernels import restoration as rest
 from repro.kernels import sell_expand as se
 
@@ -81,6 +82,55 @@ def expand_batched(nbr, cand, valid, frontier, visited, out_init, p_init,
         check_frontier=check_frontier, interpret=interpret)
 
 
+def _gather_budget_check(n_words: int, v_pad: int, n_cs: int,
+                         tile: int) -> None:
+    budget = ge.vmem_budget(n_words, v_pad, n_cs, tile)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"gather_expand working set {budget/2**20:.1f} MiB exceeds "
+            f"VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py) or reduce the tile")
+
+
+def gather_expand(worklist, n_active, rows, colstarts, frontier,
+                  visited, out_init, p_init, *, n_vertices: int,
+                  tile: int = ge.DEFAULT_TILE, bottom_up: bool = False,
+                  interpret: bool | None = None):
+    """Run the fused in-kernel CSR gather over one layer's active
+    tiles (see kernels/gather_expand.py).  ``rows`` must already be
+    padded to a tile multiple (done once at build by the format, NOT
+    per layer — re-padding inside the layer loop would reintroduce
+    the O(E) copy this kernel exists to remove)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    _gather_budget_check(visited.shape[0], p_init.shape[0],
+                         colstarts.shape[0], tile)
+    n_active = jnp.atleast_1d(jnp.asarray(n_active, jnp.int32))
+    return ge.gather_expand(
+        worklist.astype(jnp.int32), n_active, rows, colstarts, frontier,
+        visited, out_init, p_init, n_vertices=n_vertices, tile=tile,
+        bottom_up=bottom_up, interpret=interpret)
+
+
+def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
+                          visited, out_init, p_init, *, n_vertices: int,
+                          tile: int = ge.DEFAULT_TILE,
+                          bottom_up: bool = False,
+                          interpret: bool | None = None):
+    """Batched (leading root-axis) fused gather-expand: worklist/
+    n_active/bitmaps/P carry (B, ...); the CSR arrays are shared.
+    The VMEM budget is per-root."""
+    if interpret is None:
+        interpret = _interpret_default()
+    _gather_budget_check(visited.shape[1], p_init.shape[1],
+                         colstarts.shape[0], tile)
+    return ge.gather_expand_batched(
+        worklist.astype(jnp.int32), n_active.astype(jnp.int32), rows,
+        colstarts, frontier, visited, out_init, p_init,
+        n_vertices=n_vertices, tile=tile, bottom_up=bottom_up,
+        interpret=interpret)
+
+
 def _pad_slabs(cols, slab_rows, n_vertices: int, step: int):
     """Pad the slab axis to a multiple of ``step`` with sentinel slabs
     (all-V neighbor ids and row ids mask out entirely in-kernel)."""
@@ -106,35 +156,56 @@ def _sell_budget_check(n_words: int, v_pad: int, step: int) -> None:
 
 
 def sell(cols, slab_rows, frontier, visited, out_init, p_init, *,
-         n_vertices: int, slabs_per_step: int = 1,
-         interpret: bool | None = None):
-    """Pad + run the single-root SELL-C-σ sweep kernel."""
+         n_vertices: int, slabs_per_step: int = 1, worklist=None,
+         n_active=None, interpret: bool | None = None):
+    """Pad + run the single-root SELL-C-σ sweep kernel.
+
+    ``worklist``/``n_active`` schedule the active slab groups (the
+    fused pipeline; `formats.sell.SellFormat` plans them); omitting
+    both runs the full identity sweep (the materialized pipeline).
+    """
     if interpret is None:
         interpret = _interpret_default()
     _sell_budget_check(visited.shape[0], p_init.shape[0], slabs_per_step)
     cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
                                  slabs_per_step)
+    n_steps = cols.shape[0] // slabs_per_step
+    if worklist is None:
+        worklist = jnp.arange(n_steps, dtype=jnp.int32)
+        n_active = jnp.full((1,), n_steps, jnp.int32)
+    else:
+        n_active = jnp.atleast_1d(jnp.asarray(n_active, jnp.int32))
     return se.sell_expand(
-        cols, slab_rows, frontier, visited, out_init, p_init,
-        n_vertices=n_vertices, slabs_per_step=slabs_per_step,
-        interpret=interpret)
+        cols, slab_rows, worklist.astype(jnp.int32), n_active, frontier,
+        visited, out_init, p_init, n_vertices=n_vertices,
+        slabs_per_step=slabs_per_step, interpret=interpret)
 
 
 def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
                  *, n_vertices: int, slabs_per_step: int = 1,
+                 worklist=None, n_active=None,
                  interpret: bool | None = None):
     """Pad + run the batched (leading root-axis) SELL-C-σ sweep.
 
     The adjacency slabs carry no root axis (the layout is shared);
-    bitmaps/P are (B, W) / (B, V_pad).  VMEM budget is per-root.
+    bitmaps/P are (B, W) / (B, V_pad); per-root ``worklist`` is
+    (B, n_steps) with ``n_active`` (B,) — omitted = full sweep for
+    every root.  VMEM budget is per-root.
     """
     if interpret is None:
         interpret = _interpret_default()
     _sell_budget_check(visited.shape[1], p_init.shape[1], slabs_per_step)
     cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
                                  slabs_per_step)
+    n_steps = cols.shape[0] // slabs_per_step
+    n_batch = visited.shape[0]
+    if worklist is None:
+        worklist = jnp.broadcast_to(jnp.arange(n_steps, dtype=jnp.int32),
+                                    (n_batch, n_steps))
+        n_active = jnp.full((n_batch,), n_steps, jnp.int32)
     return se.sell_expand_batched(
-        cols, slab_rows, frontier, visited, out_init, p_init,
+        cols, slab_rows, worklist.astype(jnp.int32),
+        n_active.astype(jnp.int32), frontier, visited, out_init, p_init,
         n_vertices=n_vertices, slabs_per_step=slabs_per_step,
         interpret=interpret)
 

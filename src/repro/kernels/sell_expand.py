@@ -19,7 +19,16 @@ Layout (built in formats/sell.py):
   ``slab_rows[slab, lane]`` the owning vertex id.
 
 Grid = slices (``slabs_per_step`` slabs per grid step; on TPU one
-step per slab, i.e. literally one slice column-group).  Per step:
+step per slab, i.e. literally one slice column-group).  Since ISSUE 3
+the grid is **active-step scheduled**: a scalar-prefetched work-list
+(`formats.sell.SellFormat` plans it from the frontier x ``slab_rows``
+membership test) picks which slab group each grid step DMAs; entries
+past the live count are clamped to the last active group (unchanged
+block index => Mosaic elides the repeated DMA) and a ``pl.when``
+guard skips their compute — so a thin layer sweeps only the slices
+that actually hold frontier rows instead of all of nnz_sell.  Passing
+the identity work-list recovers the full SpMV sweep (the
+``materialized`` pipeline of the ablation axis).  Per step:
 
   1. load the slab's neighbor ids + row ids  (aligned vector loads —
      the §4.2 alignment goal with zero peel/remainder handling)
@@ -44,6 +53,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bitmap import WORD_MASK, WORD_SHIFT
 from repro.kernels.pallas_compat import CompilerParams
@@ -89,8 +99,9 @@ def _sell_tile(n_vertices: int, cols, rows, frontier, vis, out, p):
     return new_out, new_p
 
 
-def _sell_kernel(n_vertices: int, cols_ref, rows_ref, frontier_ref,
-                 vis_ref, out0_ref, p0_ref, out_ref, p_ref):
+def _sell_kernel(n_vertices: int, wl_ref, na_ref, cols_ref, rows_ref,
+                 frontier_ref, vis_ref, out0_ref, p0_ref, out_ref,
+                 p_ref):
     t = pl.program_id(0)
 
     @pl.when(t == 0)
@@ -98,19 +109,23 @@ def _sell_kernel(n_vertices: int, cols_ref, rows_ref, frontier_ref,
         out_ref[...] = out0_ref[...]
         p_ref[...] = p0_ref[...]
 
-    out, p = _sell_tile(n_vertices, cols_ref[...], rows_ref[...],
-                        frontier_ref[...], vis_ref[...],
-                        out_ref[...], p_ref[...])
-    out_ref[...] = out
-    p_ref[...] = p
+    @pl.when(t < na_ref[0])
+    def _work():  # inactive steps: no DMA (clamped index), no compute
+        out, p = _sell_tile(n_vertices, cols_ref[...], rows_ref[...],
+                            frontier_ref[...], vis_ref[...],
+                            out_ref[...], p_ref[...])
+        out_ref[...] = out
+        p_ref[...] = p
 
 
-def _sell_batched_kernel(n_vertices: int, cols_ref, rows_ref,
-                         frontier_ref, vis_ref, out0_ref, p0_ref,
-                         out_ref, p_ref):
+def _sell_batched_kernel(n_vertices: int, wl_ref, na_ref, cols_ref,
+                         rows_ref, frontier_ref, vis_ref, out0_ref,
+                         p0_ref, out_ref, p_ref):
     """Batched variant: grid (roots, slice steps).  The adjacency slabs
     are root-independent (shared blocks); bitmaps/P carry a leading
-    size-1 root axis, each root accumulating into its own rows."""
+    size-1 root axis, each root accumulating into its own rows; each
+    root schedules its own active-slab work-list."""
+    b = pl.program_id(0)
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -118,11 +133,13 @@ def _sell_batched_kernel(n_vertices: int, cols_ref, rows_ref,
         out_ref[...] = out0_ref[...]
         p_ref[...] = p0_ref[...]
 
-    out, p = _sell_tile(n_vertices, cols_ref[...], rows_ref[...],
-                        frontier_ref[0], vis_ref[0],
-                        out_ref[0], p_ref[0])
-    out_ref[...] = out[None]
-    p_ref[...] = p[None]
+    @pl.when(t < na_ref[b])
+    def _work():
+        out, p = _sell_tile(n_vertices, cols_ref[...], rows_ref[...],
+                            frontier_ref[0], vis_ref[0],
+                            out_ref[0], p_ref[0])
+        out_ref[...] = out[None]
+        p_ref[...] = p[None]
 
 
 def vmem_budget(n_words: int, v_pad: int, slabs_per_step: int) -> int:
@@ -134,15 +151,20 @@ def vmem_budget(n_words: int, v_pad: int, slabs_per_step: int) -> int:
 @functools.partial(jax.jit, static_argnames=("n_vertices",
                                              "slabs_per_step",
                                              "interpret"))
-def sell_expand(cols, slab_rows, frontier, visited, out_init, p_init,
-                *, n_vertices: int, slabs_per_step: int = 1,
-                interpret: bool = True):
-    """Single-root SELL sweep.
+def sell_expand(cols, slab_rows, worklist, n_active, frontier, visited,
+                out_init, p_init, *, n_vertices: int,
+                slabs_per_step: int = 1, interpret: bool = True):
+    """Single-root SELL sweep over the active slab groups.
 
     Args:
       cols: (n_slabs, W_QUANT, C) int32 neighbor slabs (sentinel-padded;
         n_slabs must be a multiple of ``slabs_per_step``).
       slab_rows: (n_slabs, C) int32 owning vertex ids per slab.
+      worklist: (n_steps,) int32 slab-group id per grid step, active
+        prefix first, tail clamped to the last active group.
+        ``jnp.arange(n_steps)`` + ``n_active == n_steps`` recovers the
+        full sweep.
+      n_active: (1,) int32 live prefix length of ``worklist``.
       frontier, visited, out_init: (W,) uint32 bitmaps.
       p_init: (V_pad,) int32 predecessor array.
     Returns:
@@ -153,21 +175,27 @@ def sell_expand(cols, slab_rows, frontier, visited, out_init, p_init,
     assert n_slabs % slabs_per_step == 0, \
         "pad the slab count to the step size"
     n_steps = n_slabs // slabs_per_step
+    assert worklist.shape[0] == n_steps
     n_words = visited.shape[0]
     v_pad = p_init.shape[0]
 
     cols_spec = pl.BlockSpec((slabs_per_step, W_QUANT, SLICE_C),
-                             lambda t: (t, 0, 0))
-    rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C), lambda t: (t, 0))
-    whole = lambda n: pl.BlockSpec((n,), lambda t: (0,))
+                             lambda t, wl, na: (wl[t], 0, 0))
+    rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C),
+                             lambda t, wl, na: (wl[t], 0))
+    whole = lambda n: pl.BlockSpec((n,), lambda t, wl, na: (0,))
 
-    kernel = functools.partial(_sell_kernel, n_vertices)
-    out, parent = pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=(n_steps,),
         in_specs=[cols_spec, rows_spec, whole(n_words), whole(n_words),
                   whole(n_words), whole(v_pad)],
         out_specs=[whole(n_words), whole(v_pad)],
+    )
+    kernel = functools.partial(_sell_kernel, n_vertices)
+    out, parent = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((n_words,), jnp.uint32),
                    jax.ShapeDtypeStruct((v_pad,), jnp.int32)],
         compiler_params=CompilerParams(
@@ -175,21 +203,24 @@ def sell_expand(cols, slab_rows, frontier, visited, out_init, p_init,
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="bfs_sell_expand",
-    )(cols, slab_rows, frontier, visited, out_init, p_init)
+    )(worklist, n_active, cols, slab_rows, frontier, visited, out_init,
+      p_init)
     return out, parent
 
 
 @functools.partial(jax.jit, static_argnames=("n_vertices",
                                              "slabs_per_step",
                                              "interpret"))
-def sell_expand_batched(cols, slab_rows, frontier, visited, out_init,
-                        p_init, *, n_vertices: int,
+def sell_expand_batched(cols, slab_rows, worklist, n_active, frontier,
+                        visited, out_init, p_init, *, n_vertices: int,
                         slabs_per_step: int = 1,
                         interpret: bool = True):
     """Multi-root SELL sweep: one launch expands B independent searches.
 
     The adjacency (cols, slab_rows) has NO root axis — the layout is
-    shared; bitmaps/P carry a leading (B,).  Grid is (B, slice steps):
+    shared; bitmaps/P carry a leading (B,) and so do ``worklist``
+    ((B, n_steps)) and ``n_active`` ((B,)) — a finished root has
+    ``n_active == 0`` and costs nothing.  Grid is (B, slice steps):
     the root axis is embarrassingly parallel, the slice axis stays
     sequential so later slabs observe earlier slabs' updates.
     """
@@ -198,26 +229,32 @@ def sell_expand_batched(cols, slab_rows, frontier, visited, out_init,
         "pad the slab count to the step size"
     n_steps = n_slabs // slabs_per_step
     n_batch, n_words = visited.shape
+    assert worklist.shape == (n_batch, n_steps)
     v_pad = p_init.shape[1]
 
     cols_spec = pl.BlockSpec((slabs_per_step, W_QUANT, SLICE_C),
-                             lambda b, t: (t, 0, 0))
+                             lambda b, t, wl, na: (wl[b, t], 0, 0))
     rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C),
-                             lambda b, t: (t, 0))
-    whole = lambda n: pl.BlockSpec((1, n), lambda b, t: (b, 0))
+                             lambda b, t, wl, na: (wl[b, t], 0))
+    whole = lambda n: pl.BlockSpec((1, n), lambda b, t, wl, na: (b, 0))
 
-    kernel = functools.partial(_sell_batched_kernel, n_vertices)
-    out, parent = pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=(n_batch, n_steps),
         in_specs=[cols_spec, rows_spec, whole(n_words), whole(n_words),
                   whole(n_words), whole(v_pad)],
         out_specs=[whole(n_words), whole(v_pad)],
+    )
+    kernel = functools.partial(_sell_batched_kernel, n_vertices)
+    out, parent = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((n_batch, n_words), jnp.uint32),
                    jax.ShapeDtypeStruct((n_batch, v_pad), jnp.int32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="bfs_sell_expand_batched",
-    )(cols, slab_rows, frontier, visited, out_init, p_init)
+    )(worklist, n_active, cols, slab_rows, frontier, visited, out_init,
+      p_init)
     return out, parent

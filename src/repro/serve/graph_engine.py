@@ -7,9 +7,12 @@ shape that never changes so the jitted tick compiles exactly once.
 
 One tick == one BFS layer for EVERY active slot, via the engine's
 batched format-generic `layer_step_format` (leading root axis).
-Slots whose frontier has emptied flow through as no-ops — their edge
-stream is all sentinel — until the host harvests the parent array and
-refills the slot.  The per-tick host sync (a (B,) frontier-count
+Since ISSUE 3 the ``algorithm="simd"`` tick routes through the fused
+gather pipeline: each slot's frontier plans its own active-tile
+work-list, so slots whose frontier has emptied flow through as true
+no-ops — their work-list is empty (n_active == 0), costing zero DMA
+tiles instead of a full sentinel edge stream — until the host
+harvests the parent array and refills the slot.  The per-tick host sync (a (B,) frontier-count
 readback) is the serving tick boundary, exactly like ServeEngine's
 per-token logits readback; whole-query throughput without any tick
 sync is what `engine.traverse` with a root batch provides.
@@ -80,11 +83,15 @@ class GraphEngine:
         "auto"/None (the caller already chose); forcing a *different*
         name re-lays it out when the format can recover its CSR
         (`to_csr`) and raises a TypeError otherwise.
+      pipeline: expansion pipeline for the tick — "fused_gather"
+        (default: per-slot active-tile work-lists, drained slots cost
+        nothing) or "materialized" (legacy full edge stream).
     """
 
     def __init__(self, graph, batch_slots: int = 8,
                  algorithm: str = "simd", max_layers: int = 64,
-                 graph_format: str | None = "auto"):
+                 graph_format: str | None = "auto",
+                 pipeline: str = "fused_gather"):
         from repro.formats import GraphFormat, autotune
         if isinstance(graph, GraphFormat):
             self.csr = None
@@ -94,8 +101,10 @@ class GraphEngine:
         else:
             self.csr = graph
             self.fmt = autotune.build(graph, graph_format or "csr")
+        engine.check_pipeline(pipeline)
         self.max_layers = max_layers
         self.algorithm = algorithm
+        self.pipeline = pipeline
         b = batch_slots
         self.n_vertices = self.fmt.n_vertices
         v_pad = self.fmt.n_vertices_padded
@@ -134,7 +143,7 @@ class GraphEngine:
         self.frontier, self.visited, self.parent = \
             engine.layer_step_format(
                 self.fmt, self.frontier, self.visited, self.parent,
-                algorithm=self.algorithm)
+                algorithm=self.algorithm, pipeline=self.pipeline)
         counts = np.asarray(engine.row_popcounts(self.frontier))
         for i, q in enumerate(self.slots):
             if q is None or q.done:

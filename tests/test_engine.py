@@ -155,7 +155,10 @@ def test_stats_buffer_matches_hostloop_counters(graphs):
     fused_stats = engine.layer_stats(res)
     _, host_stats, _ = engine.traverse_hostloop(g, 17,
                                                 collect_stats=True)
-    assert fused_stats == host_stats
+    # the Table 1 counters must agree exactly; the tile accounting
+    # legitimately differs (the fused engine streams the full padded
+    # E, the hostloop its pow2 buckets)
+    assert [s[:4] for s in fused_stats] == [s[:4] for s in host_stats]
 
 
 def test_hybrid_policy_switches_on_rmat(graphs):
