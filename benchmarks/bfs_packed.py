@@ -1,0 +1,134 @@
+"""Packed-vs-unpacked traversal engine: TEPS + membership bytes
+(ISSUE 4).
+
+Since ISSUE 4 packed uint32 words are the engine's *native*
+frontier/visited representation through the whole layer pipeline —
+SIMD compaction kernel (kernels/compact.py), word-matrix workload
+counters, packed planning.  This benchmark pins the two acceptance
+numbers:
+
+* **membership bytes** — the analytic frontier/visited/next + planning
+  mask traffic per representation (`formats.membership_bytes`): packed
+  words cost V/8 per bitmap per layer where the legacy dense masks
+  cost 4V — a 32x model, gated at >= 8x in CI
+  (`benchmarks.check_bytes_regression`).
+* **TEPS** — wall-clock of the same traversal under ``packed=True``
+  vs the legacy ``packed=False`` arm, on the high-diameter path probe
+  (per-layer overheads dominate: 1 vertex/layer, ~1k layers) and on
+  the RMAT workload.  The packed path TEPS is also the CI TEPS-floor
+  baseline.
+
+Both pipelines produce bit-identical parents (the parity suite in
+tests/test_packed_engine.py); only representation cost differs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, graph
+from repro.core import engine
+from repro.core.csr import traversed_edges
+from repro.formats.base import membership_bytes
+from repro.formats.csr_format import CsrFormat
+
+PATH_SCALE = 10    # fixed: the CI TEPS-floor baseline, not --quick'd
+PATH_TILE = 128
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()                                   # warmup / compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)                         # least-noise estimator
+
+
+def path_packed_probe(scale: int = PATH_SCALE, tile: int = PATH_TILE,
+                      time_reps: int = 3) -> dict:
+    """The s10 path-graph probe, packed vs unpacked: analytic
+    membership bytes (deterministic) + interpret-mode TEPS."""
+    from benchmarks.bfs_layers import build_path_graph
+    n = 1 << scale
+    g = build_path_graph(n)
+    fmt = CsrFormat.from_csr(g)
+    pol = engine.ThresholdSimd(0)
+
+    def run(packed):
+        return engine.traverse(g, 0, policy=pol, tile=tile,
+                               max_layers=n + 2, packed=packed)
+
+    res = run(True)
+    stats = engine.layer_stats(res)
+    mb_packed = membership_bytes(fmt, stats, packed=True)
+    mb_unpacked = membership_bytes(fmt, stats, packed=False)
+    edges = int(traversed_edges(
+        g, np.asarray(res.state.parent)[:n] < n))
+
+    t_packed = _time(lambda: jax.block_until_ready(
+        run(True).state.parent), time_reps)
+    t_unpacked = _time(lambda: jax.block_until_ready(
+        run(False).state.parent), time_reps)
+    return {
+        "layers": len(stats),
+        "edges": edges,
+        "mask_bytes_packed": mb_packed,
+        "mask_bytes_unpacked": mb_unpacked,
+        "mask_ratio": mb_unpacked / max(mb_packed, 1),
+        "teps_packed": edges / t_packed,
+        "teps_unpacked": edges / t_unpacked,
+        "t_packed": t_packed,
+        "t_unpacked": t_unpacked,
+    }
+
+
+def main(scale: int = 10) -> None:
+    probe = path_packed_probe()
+    emit("bfs_packed.path_mask_bytes_packed", 0.0,
+         f"scale={PATH_SCALE};bytes={probe['mask_bytes_packed']}",
+         value=probe["mask_bytes_packed"])
+    emit("bfs_packed.path_mask_bytes_unpacked", 0.0,
+         f"scale={PATH_SCALE};bytes={probe['mask_bytes_unpacked']}",
+         value=probe["mask_bytes_unpacked"])
+    emit("bfs_packed.path_mask_bytes_ratio", 0.0,
+         f"{probe['mask_ratio']:.1f}x", value=probe["mask_ratio"])
+    emit("bfs_packed.path_teps", probe["t_packed"] * 1e6,
+         f"teps={probe['teps_packed']:.3e};layers={probe['layers']}",
+         value=probe["teps_packed"])
+    emit("bfs_packed.path_teps_unpacked", probe["t_unpacked"] * 1e6,
+         f"teps={probe['teps_unpacked']:.3e}",
+         value=probe["teps_unpacked"])
+    print(f"# path s={PATH_SCALE}: membership bytes "
+          f"{probe['mask_bytes_packed']/2**20:.2f} MiB packed vs "
+          f"{probe['mask_bytes_unpacked']/2**20:.2f} MiB unpacked "
+          f"({probe['mask_ratio']:.1f}x)")
+
+    # RMAT workload: same comparison on the paper's skewed graph
+    g = graph(scale)
+    fmt = CsrFormat.from_csr(g)
+    rng = np.random.default_rng(7)
+    deg = np.asarray(g.degrees())
+    root = int(rng.choice(np.where(deg > 0)[0]))
+    pol = engine.ThresholdSimd(0)
+
+    res = engine.traverse(g, root, policy=pol)
+    stats = engine.layer_stats(res)
+    reached = np.asarray(res.state.parent)[:g.n_vertices] < g.n_vertices
+    edges = int(traversed_edges(g, reached))
+    for packed in (True, False):
+        t = _time(lambda p=packed: jax.block_until_ready(
+            engine.traverse(g, root, policy=pol,
+                            packed=p).state.parent))
+        tag = "packed" if packed else "unpacked"
+        mb = membership_bytes(fmt, stats, packed=packed)
+        emit(f"bfs_packed.rmat_s{scale}_{tag}", t * 1e6,
+             f"teps={edges / t:.3e};mask_kib={mb/2**10:.1f}",
+             value=edges / t)
+
+
+if __name__ == "__main__":
+    main()

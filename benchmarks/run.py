@@ -25,8 +25,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (affinity, bfs_batched, bfs_formats,
-                            bfs_layers, bfs_opt_ablation, bfs_scaling,
-                            lm_roofline)
+                            bfs_layers, bfs_opt_ablation, bfs_packed,
+                            bfs_scaling, lm_roofline)
 
     layer_scale = 20 if args.paper_scale else (12 if args.quick else 16)
     abl_scale = 13 if not args.quick else 11
@@ -42,6 +42,8 @@ def main() -> None:
             scale=11 if args.quick else 12),
         "bfs_formats": lambda: bfs_formats.main(
             scale=10 if args.quick else 12),
+        "bfs_packed": lambda: bfs_packed.main(
+            scale=10 if args.quick else 11),
         "affinity": lambda: affinity.main(scale=abl_scale),
         "lm_roofline": lambda: lm_roofline.main(),
     }

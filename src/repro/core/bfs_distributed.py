@@ -142,7 +142,21 @@ def make_bfs_program(v_loc: int, n_vertices: int, n_devices: int,
       4V * (g-1)/g + V/8 — measured 1.94x less than the baseline and
       P memory drops from V to V/D per chip (EXPERIMENTS.md §Perf).
       The returned parent array is the LOCAL slice (v_loc,).
+
+    merge = "packed" — ISSUE 4's packed-word exchange: the ONLY
+      per-layer collective is an all-gather + OR of the 32x-compressed
+      *discovered bitmap* (V/8 bytes — int32 candidate masks never hit
+      the wire inside the loop).  Parent candidates accumulate
+      locally as a running min; a vertex only ever receives candidates
+      in the single layer before its bit enters the globally merged
+      visited bitmap, so ONE post-loop ``pmin`` resolves parents to
+      exactly the per-layer-pmin tree (deterministic).  Wire
+      bytes/layer ~= V/8 * (g-1)/g + one final 4V — the win scales
+      with the diameter.
     """
+    if merge not in ("allreduce", "owner", "packed"):
+        raise ValueError(f"unknown merge {merge!r}; expected "
+                         f"'allreduce', 'owner' or 'packed'")
     v_cap = v_loc * n_devices
     assert v_cap >= n_vertices
     w_cap = v_cap // bm.BITS_PER_WORD
@@ -183,6 +197,40 @@ def make_bfs_program(v_loc: int, n_vertices: int, n_devices: int,
             else:
                 frontier, visited, parent, layer = jax.lax.while_loop(
                     cond, body, state)
+            return parent, layer
+
+        if merge == "packed":
+            # packed-word exchange: discoveries cross chips as OR'd
+            # uint32 bitmap words; parents stay local until the end.
+            frontier = compat.pcast_varying(frontier, axis_names)
+            visited = compat.pcast_varying(visited, axis_names)
+            parent_acc = (jnp.full((v_cap,), inf, jnp.int32)
+                          .at[root].set(root.astype(jnp.int32)))
+            parent_acc = compat.pcast_varying(parent_acc, axis_names)
+
+            def body(s):
+                frontier, visited, parent_acc, layer = s
+                cand = _local_step(rows_l, colstarts_l, frontier,
+                                   visited, v_loc, n_vertices, v_cap,
+                                   base)
+                parent_acc = jnp.minimum(parent_acc, cand)
+                newly_l = bm.pack_bool(cand < inf)   # local, V/8 B
+                gathered = jax.lax.all_gather(
+                    newly_l, axis_names).reshape(n_devices, w_cap)
+                merged = functools.reduce(
+                    jnp.bitwise_or,
+                    [gathered[d] for d in range(n_devices)])
+                return (merged, visited | merged, parent_acc,
+                        layer + 1)
+
+            state = (frontier, visited, parent_acc, jnp.int32(0))
+            if single_layer:   # roofline probe: exact per-layer costs
+                frontier, visited, parent_acc, layer = body(state)
+            else:
+                frontier, visited, parent_acc, layer = \
+                    jax.lax.while_loop(cond, body, state)
+            # ONE dense collective for the whole search
+            parent = jax.lax.pmin(parent_acc, axis_names)
             return parent, layer
 
         # owner-computes: P holds only this chip's vertex range.
@@ -242,7 +290,7 @@ def _run(mesh, axis_names, n_vertices, max_layers, merge, rows_sh,
     v_loc = int(colstarts_sh.shape[1]) - 1
     program = make_bfs_program(v_loc, n_vertices, n_devices, axis_names,
                                max_layers, merge=merge)
-    p_out = P() if merge == "allreduce" else P(axis_names)
+    p_out = P(axis_names) if merge == "owner" else P()
     shard = compat.shard_map(
         program, mesh,
         in_specs=(P(axis_names), P(axis_names), P()),

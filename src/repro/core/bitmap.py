@@ -39,6 +39,9 @@ __all__ = [
     "popcount",
     "compact",
     "bit2vertex",
+    "word_bits",
+    "degree_matrix",
+    "masked_degree_sum",
 ]
 
 
@@ -84,11 +87,22 @@ def pack_bool(dense: jax.Array) -> jax.Array:
     return (bits * weights).sum(axis=1, dtype=jnp.uint32)
 
 
+def word_bits(words: jax.Array) -> jax.Array:
+    """Expand packed words into per-bit lanes: (..., W) uint32 ->
+    (..., W, 32) int32 of 0/1.
+
+    The single home of the word->lanes bit expansion shared by
+    `unpack_bool`, `masked_degree_sum` and the compaction kernel's
+    in-register rank-and-scatter (kernels/compact.py) — any change to
+    the bit order or word width happens here once."""
+    shifts = jnp.arange(BITS_PER_WORD, dtype=jnp.uint32)
+    return ((words[..., None] >> shifts) & jnp.uint32(1)) \
+        .astype(jnp.int32)
+
+
 def unpack_bool(bitmap: jax.Array) -> jax.Array:
     """Expand a (W,) uint32 bitmap into a (W*32,) bool array. Exact."""
-    shifts = jnp.arange(BITS_PER_WORD, dtype=jnp.uint32)
-    bits = (bitmap[:, None] >> shifts[None, :]) & jnp.uint32(1)
-    return bits.reshape(-1).astype(bool)
+    return word_bits(bitmap).reshape(-1).astype(bool)
 
 
 def set_bits_exact(bitmap: jax.Array, vertices: jax.Array,
@@ -147,3 +161,27 @@ def compact(bitmap: jax.Array, size: int, fill_value: int) -> jax.Array:
 def bit2vertex(word_idx: jax.Array, bit: jax.Array) -> jax.Array:
     """Inverse index transformation (bit2vertex of Alg. 3)."""
     return (word_idx.astype(jnp.int32) << WORD_SHIFT) | bit.astype(jnp.int32)
+
+
+def degree_matrix(degrees: jax.Array, n_bits: int) -> jax.Array:
+    """(V,) degrees -> (W, 32) word-aligned degree matrix.
+
+    The loop constant `masked_degree_sum` consumes: row w holds the
+    degrees of the 32 vertices packed into bitmap word w (zero for
+    padding vertices), so the Table 1 edge counter becomes a word-local
+    product against the packed bitmap — no dense V-mask round trip.
+    """
+    deg = jnp.zeros((n_bits,), jnp.int32).at[:degrees.shape[0]] \
+        .set(degrees.astype(jnp.int32))
+    return deg.reshape(-1, BITS_PER_WORD)
+
+
+def masked_degree_sum(words: jax.Array, deg_mat: jax.Array) -> jax.Array:
+    """Σ deg over the set bits of a packed bitmap (Table 1 "Edges").
+
+    ``deg_mat`` is `degree_matrix(degrees, W * 32)`.  Consumes the
+    packed words directly (the `word_bits` expansion fuses into the
+    reduction) — the engine's Table 1 counter without carrying a
+    dense (V,) int32 mask through the layer.
+    """
+    return (word_bits(words) * deg_mat).sum(dtype=jnp.int32)

@@ -68,6 +68,18 @@ apportioned edge stream below, SELL-C-σ substitutes its aligned slab
 sweep (kernels/sell_expand.py), the bitmap layout its dense word
 sweep.  `traverse` accepts a `Csr` or any built `GraphFormat`; the
 measure/decide/restore pipeline is layout-independent.
+
+Since ISSUE 4 packed uint32 words are the engine's **native**
+frontier/visited representation through the whole layer, not just at
+rest: workload counters come from word popcounts and the word-aligned
+degree matrix (`bitmap.masked_degree_sum`), and every bitmap->queue
+conversion (planning, apportionment input lists, bottom-up candidate
+lists) runs the SIMD compaction kernel (kernels/compact.py — the §4
+vectorized queue generation) instead of a dense ``unpack``/``nonzero``
+round trip.  The legacy dense-mask arm survives behind
+``packed=False`` as the parity/ablation baseline; ``prefetch_depth``
+selects the gather kernels' manual double-buffered DMA input pipeline
+(§4's prefetch distance as an explicit knob).
 """
 from __future__ import annotations
 
@@ -277,11 +289,21 @@ def apportion(csr_colstarts: jax.Array, csr_rows: jax.Array,
 
 
 def edge_stream(colstarts, rows, frontier_words, list_size: int,
-                n_vertices: int, n_slots: int):
+                n_vertices: int, n_slots: int, packed: bool = False):
     """The engine's gather phase: bitmap -> apportioned
     (u, v, valid, truncated) — the *materialized* pipeline's stream.
+
+    ``packed=True`` compacts the bitmap with the SIMD rank-and-scatter
+    kernel (kernels/compact.py — the paper's §4 vectorized queue
+    generation) instead of the dense ``unpack_bool`` + ``nonzero``
+    round trip; the resulting queue is identical (ascending ids,
+    sentinel-padded), so the streams are bit-for-bit equal.
     """
-    frontier_list = bm.compact(frontier_words, list_size, n_vertices)
+    if packed:
+        frontier_list, _ = ops.frontier_compact(
+            frontier_words, size=list_size, fill=n_vertices)
+    else:
+        frontier_list = bm.compact(frontier_words, list_size, n_vertices)
     return apportion(colstarts, rows, frontier_list, n_vertices, n_slots)
 
 
@@ -329,19 +351,12 @@ def compact_worklist(active, n: int):
     return wl, n_active
 
 
-def plan_active_tiles(colstarts, active_words, n_vertices: int,
-                      tile: int, n_blocks: int):
-    """The fused pipeline's per-layer scheduling pass (one root).
-
-    Marks every ``tile``-sized block of ``rows`` that intersects an
-    active vertex's adjacency (range-mark via a +1/-1 difference
-    scatter + prefix sum — O(V + n_blocks), no E-sized arrays) and
-    compacts the marks into a `compact_worklist`.  Returns
-    (worklist (n_blocks,) int32, n_active int32).
-    """
-    dense = bm.unpack_bool(active_words)[:n_vertices]
-    start, end = colstarts[:-1], colstarts[1:]
-    has = dense & (end > start)
+def _mark_blocks(start, end, has, tile: int, n_blocks: int):
+    """Range-mark + compact: the single home of the block-marking
+    algorithm (+1/-1 difference scatter with drop sentinel, prefix
+    sum, `compact_worklist`) shared by the queue-based (packed) and
+    dense-mask planning arms — they differ only in how the active
+    (start, end) adjacency ranges are produced."""
     blk_lo = start // tile
     blk_hi = (end - 1) // tile
     drop = n_blocks + 1
@@ -350,6 +365,71 @@ def plan_active_tiles(colstarts, active_words, n_vertices: int,
     diff = diff.at[jnp.where(has, blk_hi + 1, drop)].add(-1, mode="drop")
     covered = jnp.cumsum(diff)[:n_blocks] > 0
     return compact_worklist(covered, n_blocks)
+
+
+def mark_blocks_from_queue(colstarts, queue, n_vertices: int, tile: int,
+                           n_blocks: int):
+    """Range-mark the rows-blocks a compacted vertex queue's adjacency
+    touches.  The queue is sentinel-padded (id >= n_vertices => empty
+    slot)."""
+    is_real = queue < n_vertices
+    safe = jnp.where(is_real, queue, 0)
+    start = colstarts[safe]
+    end = colstarts[safe + 1]
+    return _mark_blocks(start, end, is_real & (end > start), tile,
+                        n_blocks)
+
+
+def plan_active_tiles(colstarts, active_words, n_vertices: int,
+                      tile: int, n_blocks: int, packed: bool = False):
+    """The fused pipeline's per-layer scheduling pass (one root).
+
+    Marks every ``tile``-sized block of ``rows`` that intersects an
+    active vertex's adjacency (range-mark via a +1/-1 difference
+    scatter + prefix sum — no E-sized arrays) and compacts the marks
+    into a `compact_worklist`.  Returns (worklist (n_blocks,) int32,
+    n_active int32).
+
+    ``packed=False`` (legacy) expands the bitmap to a dense V-mask and
+    range-marks from it; ``packed=True`` compacts the bitmap with the
+    SIMD kernel first (V/8 bytes of mask reads + a queue of the live
+    vertices) and range-marks from the queue — the packed engine's
+    planning arm.  Oversized working sets silently take the dense arm
+    (`ops.compact_fits`), so huge graphs keep traversing like they
+    did before the packed default.
+    """
+    v_pad = active_words.shape[0] * bm.BITS_PER_WORD
+    if packed and ops.compact_fits(1, v_pad):
+        queue, _ = ops.frontier_compact(active_words, size=v_pad,
+                                        fill=n_vertices)
+        return mark_blocks_from_queue(colstarts, queue, n_vertices,
+                                      tile, n_blocks)
+    dense = bm.unpack_bool(active_words)[:n_vertices]
+    start, end = colstarts[:-1], colstarts[1:]
+    return _mark_blocks(start, end, dense & (end > start), tile,
+                        n_blocks)
+
+
+def plan_active_tiles_batched(colstarts, active_words, n_vertices: int,
+                              tile: int, n_blocks: int,
+                              packed: bool = True):
+    """Batched planning: (B, W) active bitmaps -> ((B, n_blocks)
+    work-lists, (B,) live counts).  The packed arm runs ONE batched
+    compaction launch then vmaps the pure-jnp block marking; the
+    legacy arm (and any batch x V_pad working set past the compaction
+    kernel's VMEM budget) vmaps the dense planner."""
+    n_batch, w = active_words.shape
+    v_pad = w * bm.BITS_PER_WORD
+    if packed and ops.compact_fits(n_batch, v_pad):
+        queues, _ = ops.frontier_compact_batched(
+            active_words, size=v_pad, fill=n_vertices)
+        return jax.vmap(
+            lambda q: mark_blocks_from_queue(colstarts, q, n_vertices,
+                                             tile, n_blocks))(queues)
+    return jax.vmap(
+        lambda a: plan_active_tiles(colstarts, a, n_vertices, tile,
+                                    n_blocks, packed=False))(
+        active_words)
 
 
 def candidate_scatter(u, v, valid, visited, n_vertices: int, v_cap: int):
@@ -411,21 +491,80 @@ def _auto_tile(e_size: int, interpret: bool) -> int:
     return max(1024, e_size // 32)
 
 
+_TILE_ENV = "REPRO_BFS_TILE"
+
+
+@functools.lru_cache(maxsize=1)
+def _bench_table_tile() -> int | None:
+    """Best CSR tile from the committed ``BENCH_bfs.json`` affinity
+    sweep (``affinity.tile<N>`` rows, lowest wall time wins).
+
+    The committed table is the cached tile sweep the default feeds
+    from — re-running ``benchmarks.run --only affinity`` refreshes
+    it.  Returns None when no table/rows exist (fresh checkout,
+    installed package), in which case the caller falls back to the
+    legacy heuristic."""
+    import json
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parents[3] / "BENCH_bfs.json"
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+    best = None
+    best_us = None
+    for key, rec in data.items():
+        if not key.startswith("affinity.tile"):
+            continue
+        try:
+            t = int(key[len("affinity.tile"):])
+            us = float(rec["us_per_call"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if best_us is None or us < best_us:
+            best, best_us = t, us
+    return best
+
+
+def default_tile_csr() -> int:
+    """The auto tile, in priority order: ``REPRO_BFS_TILE`` env
+    override > the committed BENCH affinity sweep > the legacy 1024
+    heuristic."""
+    import os
+    env = os.environ.get(_TILE_ENV)
+    if env:
+        try:
+            return max(128, int(env))
+        except ValueError:
+            raise ValueError(
+                f"{_TILE_ENV}={env!r} is not an integer tile size"
+            ) from None
+    table = _bench_table_tile()
+    return table if table else 1024
+
+
 def _resolve_tile_csr(tile: int | None, e_pad: int) -> int:
     """The CSR tile rule (`formats.CsrFormat.resolve_tile`).
 
     The tile is the fused pipeline's DMA unit AND its prefetch
-    distance (§4's knob); unlike the hostloop's `_auto_tile` floor of
-    1024 it bottoms out at 128 (one lane set) so small graphs still
-    resolve to several blocks and the active-tile schedule has
-    something to skip.  The interpret-mode floor keeps the unrolled
-    grid <=32 steps, same budget as `_auto_tile`.
+    distance (§4's knob); it bottoms out at 128 (one lane set) so
+    small graphs still resolve to several blocks and the active-tile
+    schedule has something to skip.  The auto choice comes from
+    `default_tile_csr` (env override > committed BENCH sweep — the
+    measured optimum, 4096 on the current table — > 1024), capped at
+    ``e_pad/8`` so small graphs keep >= 8 blocks to skip.  The
+    interpret-mode floor keeps the unrolled grid <=32 steps, same
+    budget as `_auto_tile`.
     """
     interpret = jax.default_backend() != "tpu"
     floor = max(128, e_pad // 32) if interpret else 128
     if tile is None:
-        return floor if interpret else 1024
-    return max(int(tile), floor) if interpret else max(int(tile), 128)
+        # auto tiles (table or env) never exceed the edge stream —
+        # _pad_rows_to_tile pads rows UP to a tile multiple, so an
+        # oversized tile would balloon the padded stream itself
+        tile = max(128, min(default_tile_csr(), max(e_pad // 8, 128)))
+        tile = min(tile, max(e_pad, 128))
+    return max(int(tile), floor)
 
 
 # ---------------------------------------------------------------------------
@@ -465,8 +604,10 @@ def expand_candidates(u, v, valid, frontier, visited, parent,
 def scalar_expand(colstarts, rows, n_vertices: int, frontier, visited,
                   parent, f_size: int, e_size: int, algorithm: str):
     """One plain-jnp top-down CSR layer (Algorithm 2/3): apportioned
-    gather + the shared `expand_candidates` body.  The fused engine,
-    the hostloop driver, and ``bfs_parallel.expand_*`` all call this.
+    gather + the shared `expand_candidates` body.  The hostloop driver
+    and ``bfs_parallel.expand_*`` call this (single root, dense
+    compaction — the legacy drivers); the fused engine's batched
+    scalar step routes through `_batched_edge_stream` instead.
     Returns (out, visited, parent, truncated)."""
     u, v, valid, truncated = edge_stream(colstarts, rows, frontier,
                                          f_size, n_vertices, e_size)
@@ -475,23 +616,44 @@ def scalar_expand(colstarts, rows, n_vertices: int, frontier, visited,
     return out, visited, parent, truncated
 
 
+def _batched_edge_stream(colstarts, rows, frontier, list_size: int,
+                         n_vertices: int, n_slots: int, packed: bool):
+    """(B, W) frontier bitmaps -> batched apportioned streams.
+
+    The packed arm compacts the whole batch in one kernel launch and
+    vmaps only the pure-jnp apportionment; the legacy arm (and any
+    working set past the compaction kernel's VMEM budget) vmaps the
+    dense `edge_stream` whole."""
+    if packed and ops.compact_fits(frontier.shape[0], list_size):
+        fl, _ = ops.frontier_compact_batched(frontier, size=list_size,
+                                             fill=n_vertices)
+        return jax.vmap(
+            lambda l: apportion(colstarts, rows, l, n_vertices,
+                                n_slots))(fl)
+    return jax.vmap(
+        lambda f: edge_stream(colstarts, rows, f, list_size, n_vertices,
+                              n_slots))(frontier)
+
+
 def _make_scalar_step(colstarts, rows, n_vertices: int, v_pad: int,
-                      e_pad: int, algorithm: str, tile: int):
+                      e_pad: int, algorithm: str, tile: int,
+                      packed: bool = True):
     """Plain-jnp Algorithm 2/3 layer, vmapped over the root axis.
 
     Always materialized (the apportioned stream IS the scalar
     algorithm); its StepAux reports the full stream's tile count so
-    the accounting stays comparable across modes."""
-
-    def one(frontier, visited, parent):
-        return scalar_expand(colstarts, rows, n_vertices, frontier,
-                             visited, parent, v_pad, e_pad, algorithm)
-
-    vm = jax.vmap(one)
+    the accounting stays comparable across modes.  Under ``packed``
+    the frontier-list build is the SIMD compaction kernel instead of
+    the dense unpack/nonzero pass."""
     tiles_per_root = -(-e_pad // tile)
 
     def step(frontier, visited, parent):
-        out, visited, parent, trunc = vm(frontier, visited, parent)
+        u, v, valid, trunc = _batched_edge_stream(
+            colstarts, rows, frontier, v_pad, n_vertices, e_pad, packed)
+        out, visited, parent = jax.vmap(
+            lambda u1, v1, val1, f1, vi1, p1: expand_candidates(
+                u1, v1, val1, f1, vi1, p1, n_vertices, algorithm)
+        )(u, v, valid, frontier, visited, parent)
         aux = StepAux(jnp.int32(frontier.shape[0] * tiles_per_root),
                       trunc.sum(dtype=jnp.int32))
         return out, visited, parent, aux
@@ -516,15 +678,14 @@ def kernel_expand_restore(expand_fn, nbr, cand, valid, frontier,
 
 
 def _make_simd_step(colstarts, rows, n_vertices: int, v_pad: int,
-                    e_pad: int, tile: int):
+                    e_pad: int, tile: int, packed: bool = True):
     """§4 SIMD layer, *materialized* pipeline: apportioned HBM stream
     + batched Pallas expansion + kernel restoration."""
     tiles_per_root = -(-e_pad // tile)
 
     def step(frontier, visited, parent):
-        u, v, valid, trunc = jax.vmap(
-            lambda f: edge_stream(colstarts, rows, f, v_pad, n_vertices,
-                                  e_pad))(frontier)
+        u, v, valid, trunc = _batched_edge_stream(
+            colstarts, rows, frontier, v_pad, n_vertices, e_pad, packed)
         out, visited, parent = kernel_expand_restore(
             ops.expand_batched, u, v, valid, frontier, visited, parent,
             n_vertices, tile)
@@ -546,7 +707,8 @@ def _pad_rows_to_tile(rows, n_vertices: int, tile: int):
 
 
 def _make_fused_step(colstarts, rows_t, n_vertices: int, tile: int,
-                     bottom_up: bool):
+                     bottom_up: bool, packed: bool = True,
+                     prefetch_depth: int = 0):
     """One fused_gather layer (ISSUE 3), both directions.
 
     Top-down plans the active rows-blocks from the *frontier*'s
@@ -555,18 +717,25 @@ def _make_fused_step(colstarts, rows_t, n_vertices: int, tile: int,
     undiscovered vertices), with the kernel testing each gathered
     neighbor against the frontier bitmap.  Either way: no
     materialized (u, v, valid) round trip.  ``rows_t`` is the
-    tile-padded rows array (padded once in `_make_steps`)."""
+    tile-padded rows array (padded once in `_make_steps`).
+
+    ``packed`` routes the planning pass through the SIMD compaction
+    kernel (V/8 mask bytes instead of a dense V-mask);
+    ``prefetch_depth`` > 0 switches the gather kernel to its manual
+    double-buffered DMA input pipeline (tile N+1 in flight while tile
+    N computes — the §4 prefetch-distance knob)."""
     n_blocks = int(rows_t.shape[0]) // tile
 
     def step(frontier, visited, parent):
         active = ~visited if bottom_up else frontier
-        wl, na = jax.vmap(
-            lambda a: plan_active_tiles(colstarts, a, n_vertices, tile,
-                                        n_blocks))(active)
+        wl, na = plan_active_tiles_batched(colstarts, active,
+                                           n_vertices, tile, n_blocks,
+                                           packed=packed)
         out_racy, p_racy = ops.gather_expand_batched(
             wl, na, rows_t, colstarts, frontier, visited,
             jnp.zeros_like(frontier), parent, n_vertices=n_vertices,
-            tile=tile, bottom_up=bottom_up)
+            tile=tile, bottom_up=bottom_up,
+            prefetch_depth=prefetch_depth)
         p_fixed, delta = ops.restore(p_racy, n_vertices=n_vertices)
         aux = StepAux(na.sum(dtype=jnp.int32), jnp.int32(0))
         return out_racy | delta, visited | delta, p_fixed, aux
@@ -576,7 +745,11 @@ def _make_fused_step(colstarts, rows_t, n_vertices: int, tile: int,
 
 def _bottomup_stream(colstarts, rows, visited_words, n_vertices: int,
                      c_size: int, e_size: int):
-    """Apportion the adjacency of *unvisited* vertices (one root)."""
+    """Apportion the adjacency of *unvisited* vertices (one root) —
+    the hostloop / legacy dense arm; the fused engine's batched
+    bottom-up step compacts ``~visited`` with the batched kernel
+    instead (padding vertices are premarked visited, so the word
+    complement is exactly the real undiscovered set)."""
     unvisited = ~bm.unpack_bool(visited_words)
     (cands,) = jnp.nonzero(unvisited, size=c_size,
                            fill_value=n_vertices)
@@ -585,17 +758,24 @@ def _bottomup_stream(colstarts, rows, visited_words, n_vertices: int,
 
 
 def _make_bottomup_step(colstarts, rows, n_vertices: int, v_pad: int,
-                        e_pad: int, tile: int):
+                        e_pad: int, tile: int, packed: bool = True):
     """Bottom-up layer, materialized pipeline: apportion the
     *unvisited* adjacency, test each neighbor against the frontier
     bitmap inside the kernel."""
     tiles_per_root = -(-e_pad // tile)
 
     def step(frontier, visited, parent):
-        cand, nbr, valid, trunc = jax.vmap(
-            lambda vis: _bottomup_stream(colstarts, rows, vis,
-                                         n_vertices, v_pad,
-                                         e_pad))(visited)
+        if packed and ops.compact_fits(frontier.shape[0], v_pad):
+            cands, _ = ops.frontier_compact_batched(
+                ~visited, size=v_pad, fill=n_vertices)
+            cand, nbr, valid, trunc = jax.vmap(
+                lambda c: apportion(colstarts, rows, c, n_vertices,
+                                    e_pad))(cands)
+        else:
+            cand, nbr, valid, trunc = jax.vmap(
+                lambda vis: _bottomup_stream(colstarts, rows, vis,
+                                             n_vertices, v_pad,
+                                             e_pad))(visited)
         out, visited, parent = kernel_expand_restore(
             ops.expand_batched, nbr, cand, valid, frontier, visited,
             parent, n_vertices, tile, check_frontier=True)
@@ -616,22 +796,27 @@ def check_pipeline(pipeline: str) -> None:
 
 
 def _make_steps(colstarts, rows, n_vertices, v_pad, e_pad, algorithm,
-                tile, pipeline: str = "fused_gather"):
+                tile, pipeline: str = "fused_gather",
+                packed: bool = True, prefetch_depth: int = 0):
     check_pipeline(pipeline)
     if pipeline == "fused_gather":
         rows_t = _pad_rows_to_tile(rows, n_vertices, tile)
         simd = _make_fused_step(colstarts, rows_t, n_vertices, tile,
-                                bottom_up=False)
+                                bottom_up=False, packed=packed,
+                                prefetch_depth=prefetch_depth)
         bottomup = _make_fused_step(colstarts, rows_t, n_vertices,
-                                    tile, bottom_up=True)
+                                    tile, bottom_up=True, packed=packed,
+                                    prefetch_depth=prefetch_depth)
     else:
         simd = _make_simd_step(colstarts, rows, n_vertices, v_pad,
-                               e_pad, tile)
+                               e_pad, tile, packed=packed)
         bottomup = _make_bottomup_step(colstarts, rows, n_vertices,
-                                       v_pad, e_pad, tile)
+                                       v_pad, e_pad, tile,
+                                       packed=packed)
     return {
         MODE_SCALAR: _make_scalar_step(colstarts, rows, n_vertices,
-                                       v_pad, e_pad, algorithm, tile),
+                                       v_pad, e_pad, algorithm, tile,
+                                       packed=packed),
         MODE_SIMD: simd,
         MODE_BOTTOMUP: bottomup,
     }
@@ -662,8 +847,9 @@ def _init_batched(roots, n_vertices: int, v_pad: int):
 
 
 def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
-                   max_layers: int,
-                   pipeline: str = "fused_gather") -> EngineResult:
+                   max_layers: int, pipeline: str = "fused_gather",
+                   packed: bool = True,
+                   prefetch_depth: int = 0) -> EngineResult:
     """The fused engine body, generic over a `formats.GraphFormat`.
 
     Every per-layer step (scalar / SIMD kernel / bottom-up) is built
@@ -673,15 +859,28 @@ def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
     ``lax.while_loop`` stay layout-independent.  ``roots`` is a (B,)
     int32 array; every state array carries the leading root axis.  No
     host synchronization between layers.
+
+    ``packed=True`` (the native representation since ISSUE 4) keeps
+    the whole per-layer pipeline on packed uint32 words: workload
+    counters come from word popcounts and the word-aligned degree
+    matrix, planning/compaction run the SIMD rank-and-scatter kernel —
+    per-layer mask traffic is V/8 bytes instead of the 4V-byte dense
+    masks the ``packed=False`` (legacy parity) arm materializes.
     """
     n_vertices = fmt.n_vertices
     v_pad = fmt.n_vertices_padded
     deg = fmt.degrees()
+    deg_mat = bm.degree_matrix(deg, v_pad)     # loop constant
     steps = fmt.make_steps(algorithm=algorithm, tile=tile,
-                           pipeline=pipeline)
+                           pipeline=pipeline, packed=packed,
+                           prefetch_depth=prefetch_depth)
     modes = tuple(policy.modes)
 
     def rows_workload(words):          # (B, W) -> per-root counters
+        if packed:
+            edges = jax.vmap(
+                lambda w: bm.masked_degree_sum(w, deg_mat))(words)
+            return row_popcounts(words), edges
         dense = jax.vmap(bm.unpack_bool)(words)[:, :n_vertices]
         return row_popcounts(words), masked_edge_sum(dense, deg)
 
@@ -700,7 +899,15 @@ def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
         f_count_b, f_edges_b = rows_workload(frontier)
         # policy counters aggregate in float32: per-root values are
         # int32-safe, the batch sum may not be (see Workload docstring)
-        if policy.needs_unvisited:
+        if policy.needs_unvisited and packed:
+            # padding is premarked visited, so the word complement IS
+            # the real undiscovered set — no dense mask round trip
+            u_words = ~visited
+            u_count = row_popcounts(u_words).sum().astype(jnp.float32)
+            u_edges = jax.vmap(
+                lambda w: bm.masked_degree_sum(w, deg_mat))(u_words) \
+                .astype(jnp.float32).sum()
+        elif policy.needs_unvisited:
             u_dense = ~jax.vmap(bm.unpack_bool)(visited)[:, :n_vertices]
             u_count = u_dense.sum(dtype=jnp.float32)
             u_edges = masked_edge_sum(u_dense, deg) \
@@ -745,11 +952,13 @@ def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
 
 @functools.partial(
     jax.jit, static_argnames=("n_vertices", "policy", "algorithm",
-                              "tile", "max_layers", "pipeline"))
+                              "tile", "max_layers", "pipeline",
+                              "packed", "prefetch_depth"))
 def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
                     policy=TopDown(), algorithm: str = "simd",
                     tile: int = 1024, max_layers: int = 64,
-                    pipeline: str = "fused_gather") -> EngineResult:
+                    pipeline: str = "fused_gather", packed: bool = True,
+                    prefetch_depth: int = 0) -> EngineResult:
     """The fused engine on raw CSR arrays (shard_map/dry-run friendly).
 
     Kept as the array-level entry for callers that only hold arrays,
@@ -761,16 +970,18 @@ def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
     from repro.formats.csr_format import CsrFormat
     fmt = CsrFormat(colstarts, rows, n_vertices, int(rows.shape[0]))
     return _traverse_impl(fmt, roots, policy, algorithm, tile,
-                          max_layers, pipeline)
+                          max_layers, pipeline, packed, prefetch_depth)
 
 
 @functools.partial(
     jax.jit, static_argnames=("policy", "algorithm", "tile",
-                              "max_layers", "pipeline"))
+                              "max_layers", "pipeline", "packed",
+                              "prefetch_depth"))
 def traverse_format(fmt, roots, *, policy=TopDown(),
                     algorithm: str = "simd", tile: int = 1,
                     max_layers: int = 64,
-                    pipeline: str = "fused_gather") -> EngineResult:
+                    pipeline: str = "fused_gather", packed: bool = True,
+                    prefetch_depth: int = 0) -> EngineResult:
     """The fused engine on any registered `GraphFormat` pytree.
 
     ``fmt``'s arrays are traced leaves and its shape metadata is
@@ -780,12 +991,13 @@ def traverse_format(fmt, roots, *, policy=TopDown(),
     grid step; bitmap: unused).
     """
     return _traverse_impl(fmt, roots, policy, algorithm, tile,
-                          max_layers, pipeline)
+                          max_layers, pipeline, packed, prefetch_depth)
 
 
 def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
              tile: int | None = None, max_layers: int = 64,
-             pipeline: str = "fused_gather") -> EngineResult:
+             pipeline: str = "fused_gather", packed: bool = True,
+             prefetch_depth: int = 0) -> EngineResult:
     """Run the fused engine for one root or a batch of roots.
 
     Args:
@@ -804,6 +1016,16 @@ def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
         active-tile scheduling, HBM traffic proportional to the
         frontier) | "materialized" (legacy full-E edge stream; the
         ablation baseline).
+      packed: True (default — packed uint32 words are the native
+        frontier/visited representation through the whole layer:
+        SIMD-kernel compaction, word-matrix workload counters, V/8
+        mask bytes per layer) | False (the legacy dense-mask planning
+        arm, kept as the parity/ablation baseline).
+      prefetch_depth: tiles of input DMA kept in flight ahead of the
+        compute tile in the gather kernels (0 = the BlockSpec
+        pipeline's automatic double buffering; >0 = the manual
+        `make_async_copy` pipeline with depth+1 buffers — the §4
+        prefetch-distance knob).
 
     In batched mode the policy decides ONCE per layer from the
     batch-summed counters (one mode for the whole batch keeps the loop
@@ -820,7 +1042,8 @@ def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
         fmt, roots_arr,
         policy=policy if policy is not None else TopDown(),
         algorithm=algorithm, tile=fmt.resolve_tile(tile),
-        max_layers=max_layers, pipeline=pipeline)
+        max_layers=max_layers, pipeline=pipeline, packed=packed,
+        prefetch_depth=prefetch_depth)
     if single:
         st = res.state
         return EngineResult(
@@ -877,10 +1100,13 @@ def layer_step(colstarts, rows, frontier, visited, parent, *,
     return step(frontier, visited, parent)[:3]
 
 
-@functools.partial(jax.jit, static_argnames=("algorithm", "pipeline"))
+@functools.partial(jax.jit, static_argnames=("algorithm", "pipeline",
+                                             "packed",
+                                             "prefetch_depth"))
 def layer_step_format(fmt, frontier, visited, parent, *,
                       algorithm: str = "simd",
-                      pipeline: str = "fused_gather"):
+                      pipeline: str = "fused_gather",
+                      packed: bool = True, prefetch_depth: int = 0):
     """Format-generic one-layer tick (the serve engine's step).
 
     Same contract as `layer_step`, but the per-layer step comes from
@@ -895,7 +1121,8 @@ def layer_step_format(fmt, frontier, visited, parent, *,
     """
     steps = fmt.make_steps(algorithm=algorithm,
                            tile=fmt.resolve_tile(None),
-                           pipeline=pipeline)
+                           pipeline=pipeline, packed=packed,
+                           prefetch_depth=prefetch_depth)
     mode = MODE_SIMD if algorithm == "simd" else MODE_SCALAR
     return steps[mode](frontier, visited, parent)[:3]
 

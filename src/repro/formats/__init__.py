@@ -14,7 +14,7 @@ Entry points: `registry.build(graph, name)` ("auto" = autotuner),
 """
 from repro.formats import autotune, registry
 from repro.formats.base import Footprint, GraphFormat, csr_to_edges, \
-    traversal_bytes
+    membership_bytes, traversal_bytes
 from repro.formats.bitmap_format import BitmapCompressedFormat
 from repro.formats.csr_format import CsrFormat
 from repro.formats.registry import available, build, get
@@ -22,6 +22,7 @@ from repro.formats.sell import SellFormat
 
 __all__ = [
     "autotune", "registry", "available", "build", "get",
-    "Footprint", "GraphFormat", "csr_to_edges", "traversal_bytes",
+    "Footprint", "GraphFormat", "csr_to_edges", "membership_bytes",
+    "traversal_bytes",
     "CsrFormat", "SellFormat", "BitmapCompressedFormat",
 ]

@@ -152,7 +152,8 @@ class GraphFormat(abc.ABC):
 
     @abc.abstractmethod
     def make_steps(self, *, algorithm: str, tile: int,
-                   pipeline: str = "fused_gather") -> dict:
+                   pipeline: str = "fused_gather", packed: bool = True,
+                   prefetch_depth: int = 0) -> dict:
         """Batched per-layer steps keyed by engine mode.
 
         Returns ``{MODE_SCALAR: fn, MODE_SIMD: fn, MODE_BOTTOMUP: fn}``
@@ -165,6 +166,18 @@ class GraphFormat(abc.ABC):
         supports it) or "materialized" (the legacy full-stream /
         full-sweep steps).  Formats whose one sweep serves both (the
         bitmap layout) may ignore it.
+
+        ``packed`` (ISSUE 4, default True) keeps the step's planning/
+        compaction on packed uint32 words (the SIMD compaction kernel,
+        V/8 mask bytes per layer); False rebuilds the legacy
+        dense-mask arm for parity/ablation.  Formats whose planning is
+        already word-native (SELL's membership test, the bitmap
+        layout's zero-conversion sweep) may ignore it.
+
+        ``prefetch_depth`` > 0 selects the kernels' manual
+        double-buffered DMA input pipeline (``depth`` tiles in flight
+        ahead of compute — the §4 prefetch-distance knob); formats
+        without a streamed input (bitmap) ignore it.
         """
 
     def resolve_tile(self, tile: int | None) -> int:
@@ -198,13 +211,29 @@ class GraphFormat(abc.ABC):
         slabs per step)."""
         return 4 * tile
 
-    def plan_bytes(self, tile: int) -> int:
+    def mask_bytes(self, packed: bool = True) -> int:
+        """Per-layer frontier/visited/next *membership* bytes the
+        engine holds/streams (ISSUE 4's packed-bytes model): packed
+        uint32 words cost ``3 * V_pad / 8`` per layer; the legacy
+        dense int32-mask representation cost ``3 * 4 * V_pad`` — the
+        32x the paper's §3.3.1 compression buys."""
+        w_bytes = self.n_vertices_padded // 8
+        return 3 * w_bytes if packed else 3 * 4 * self.n_vertices_padded
+
+    def plan_mask_bytes(self, packed: bool = True) -> int:
+        """Bytes of active-set membership the planning pass reads per
+        layer: the packed bitmap (V/8) vs the dense V-mask (4V)."""
+        if packed:
+            return self.n_vertices_padded // 8
+        return 4 * self.n_vertices_padded
+
+    def plan_bytes(self, tile: int, packed: bool = True) -> int:
         """Per-layer traffic of the fused pipeline's planning pass
-        (the O(V) active-tile marking + work-list round trip) —
-        charged once per layer regardless of frontier size, which is
-        exactly why fused bytes stay ~flat on thin layers."""
+        (the active-tile marking + work-list round trip) — charged
+        once per layer regardless of frontier size, which is exactly
+        why fused bytes stay ~flat on thin layers."""
         n_blocks = -(-self.edge_slots // max(tile, 1))
-        return (self.n_vertices_padded // 8     # active bitmap read
+        return (self.plan_mask_bytes(packed)    # active mask read
                 + 2 * 4 * n_blocks)             # work-list write+read
 
     # -- shared init helpers --------------------------------------------
@@ -220,7 +249,8 @@ class GraphFormat(abc.ABC):
 
 
 def traversal_bytes(fmt: GraphFormat, stats, *, tile: int,
-                    pipeline: str = "fused_gather") -> int:
+                    pipeline: str = "fused_gather",
+                    packed: bool = True) -> int:
     """Analytic HBM bytes a whole traversal's expansion layers moved.
 
     ``stats`` is `engine.layer_stats(result)` — the fused pipeline
@@ -228,9 +258,30 @@ def traversal_bytes(fmt: GraphFormat, stats, *, tile: int,
     pass; the materialized pipeline charges the full stream every
     layer.  Single-root accounting (batched stats sum tiles across
     roots, so the fused term scales; the materialized term would need
-    an explicit root multiplier).
+    an explicit root multiplier).  ``packed`` selects the planning
+    pass's mask-byte model (packed words vs dense masks).
     """
     if pipeline == "materialized":
         return fmt.layer_bytes() * len(stats)
     return sum(fmt.tile_bytes(tile) * s.active_tiles
-               + fmt.plan_bytes(tile) for s in stats)
+               + fmt.plan_bytes(tile, packed) for s in stats)
+
+
+def membership_bytes(fmt: GraphFormat, stats, *,
+                     packed: bool = True) -> int:
+    """Analytic frontier/visited/next *membership* bytes a traversal
+    carried per its representation (the ISSUE 4 acceptance counter):
+    per layer, the three state bitmaps plus the planning pass's
+    active-set read — V/8-scaled under ``packed``, 4V-scaled under
+    the legacy dense-mask representation.
+
+    Scope: this counts the representation-dependent DELTA only.  Both
+    planning arms additionally materialize V-sized int32 working
+    arrays (the packed arm's compacted queue and gathered colstarts
+    ranges; the dense arm's per-vertex colstarts slices and block-id
+    intermediates) — those are common to both and cancel, so they are
+    deliberately excluded.  The live-state counterpart (measured from
+    actual traversal arrays, immune to model drift) is checked by
+    `benchmarks.check_bytes_regression`."""
+    per_layer = fmt.mask_bytes(packed) + fmt.plan_mask_bytes(packed)
+    return per_layer * len(stats)

@@ -98,7 +98,10 @@ class BitmapCompressedFormat(GraphFormat):
         v_pad = parent.shape[0]
         inter = self.adj & frontier[None, :]          # (V_pad, W)
         hit = jnp.any(inter != 0, axis=1)
-        mask = hit & ~bm.unpack_bool(visited)[:v_pad]
+        # membership stays packed: the visited test is a word AND on
+        # the freshly packed hit bitmap (zero-conversion, ISSUE 4)
+        new_words = bm.pack_bool(hit) & ~visited
+        mask = bm.unpack_bool(new_words)
         # first set bit of the row: first nonzero word, then its lsb
         widx = jnp.argmax(inter != 0, axis=1).astype(jnp.int32)
         word = jnp.take_along_axis(inter, widx[:, None], axis=1)[:, 0]
@@ -106,11 +109,16 @@ class BitmapCompressedFormat(GraphFormat):
         bit = jax.lax.population_count(lsb - jnp.uint32(1))
         parent_id = bm.bit2vertex(widx, bit.astype(jnp.int32))
         parent = jnp.where(mask, parent_id, parent)
-        out = bm.pack_bool(mask)
-        return out, visited | out, parent
+        return new_words, visited | new_words, parent
 
     def make_steps(self, *, algorithm: str, tile: int,
-                   pipeline: str = "fused_gather") -> dict:
+                   pipeline: str = "fused_gather", packed: bool = True,
+                   prefetch_depth: int = 0) -> dict:
+        # The dense word sweep is ZERO-conversion under the packed
+        # engine: it consumes the packed frontier words directly
+        # (``adj & frontier``) and emits packed output words — there
+        # is no mask to compact and no stream to prefetch, so
+        # ``packed``/``prefetch_depth`` change nothing here.
         from repro.core import engine
         engine.check_pipeline(pipeline)
         vm = jax.vmap(self._sweep)
@@ -147,5 +155,8 @@ class BitmapCompressedFormat(GraphFormat):
         # StepAux reports one "tile" per root sweep: the whole matrix
         return nbytes(self.adj)
 
-    def plan_bytes(self, tile: int) -> int:
+    def plan_bytes(self, tile: int, packed: bool = True) -> int:
         return 0                      # nothing to plan — no schedule
+
+    def plan_mask_bytes(self, packed: bool = True) -> int:
+        return 0                      # zero-conversion: no plan read

@@ -73,13 +73,14 @@ class CsrFormat(GraphFormat):
         return self.colstarts[1:] - self.colstarts[:-1]
 
     def make_steps(self, *, algorithm: str, tile: int,
-                   pipeline: str = "fused_gather") -> dict:
+                   pipeline: str = "fused_gather", packed: bool = True,
+                   prefetch_depth: int = 0) -> dict:
         from repro.core import engine
         return engine._make_steps(self.colstarts, self.rows,
                                   self._n_vertices,
                                   self.n_vertices_padded,
                                   self.n_edges_padded, algorithm, tile,
-                                  pipeline)
+                                  pipeline, packed, prefetch_depth)
 
     def resolve_tile(self, tile: int | None) -> int:
         # CSR tiles the rows array: the fused pipeline's DMA block ==
@@ -107,7 +108,7 @@ class CsrFormat(GraphFormat):
         # eliminates
         return 2 * 3 * 4 * self.edge_slots
 
-    def plan_bytes(self, tile: int) -> int:
+    def plan_bytes(self, tile: int, packed: bool = True) -> int:
         # the CSR planner also streams colstarts (degree marks)
         return (4 * (self.n_vertices + 1)
-                + super().plan_bytes(tile))
+                + super().plan_bytes(tile, packed))

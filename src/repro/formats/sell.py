@@ -209,19 +209,27 @@ class SellFormat(GraphFormat):
         return expand_candidates(src, nbr, valid, frontier, visited,
                                  parent, v, algorithm)
 
-    def _plan_slab_steps(self, frontier, slabs_per_step: int,
+    def _plan_slab_steps(self, active_words, slabs_per_step: int,
                          n_steps: int):
-        """Active slab-group work-list for one root (ISSUE 3).
+        """Active slab-group work-list for one root (ISSUE 3/4).
 
-        A slab group is active iff any of its lanes' owning rows is in
-        the frontier — exactly the kernel's gating mask, so skipping
-        inactive groups changes nothing.  The clamp-to-last-active
-        tail contract lives in `engine.compact_worklist`."""
+        ``active_words`` is a packed membership bitmap over vertices:
+        a slab group is active iff any of its lanes' owning rows has
+        its bit set — exactly the kernel's gating/discovery mask for
+        that direction, so skipping inactive groups changes nothing.
+        Top-down passes the *frontier* (slabs without frontier rows
+        are skipped); bottom-up passes ``~visited`` (fully-visited
+        slices drop out — the late-search early exit).  Sentinel
+        (padding) rows are never members, so empty/padding slabs are
+        excluded by the same test instead of being re-DMA'd through
+        the clamped tail.  The clamp-to-last-active tail contract
+        lives in `engine.compact_worklist`."""
         from repro.core import bitmap as bm
         from repro.core.engine import compact_worklist
         v = self._n_vertices
         rows = self.slab_rows
-        active = (bm.test_bits(frontier, rows) & (rows < v)).any(axis=1)
+        active = (bm.test_bits(active_words, rows)
+                  & (rows < v)).any(axis=1)
         pad = n_steps * slabs_per_step - active.shape[0]
         if pad:       # ops-level sentinel slabs are never active
             active = jnp.concatenate(
@@ -230,30 +238,44 @@ class SellFormat(GraphFormat):
         return compact_worklist(act_step, n_steps)
 
     def make_steps(self, *, algorithm: str, tile: int,
-                   pipeline: str = "fused_gather") -> dict:
+                   pipeline: str = "fused_gather", packed: bool = True,
+                   prefetch_depth: int = 0) -> dict:
+        # SELL's planning is word-native already (a packed-bitmap
+        # membership test over slab_rows), so the ``packed`` flag does
+        # not change the step bodies — both parity arms run the same
+        # packed-word plan.
         from repro.core import engine
         engine.check_pipeline(pipeline)
         v = self._n_vertices
         n_steps = -(-self.n_slabs // tile)
         fused = pipeline == "fused_gather"
 
-        def kernel_step(frontier, visited, parent):
-            kw = {}
-            if fused:
-                wl, na = jax.vmap(
-                    lambda f: self._plan_slab_steps(f, tile,
-                                                    n_steps))(frontier)
-                kw = dict(worklist=wl, n_active=na)
-                tiles = na.sum(dtype=jnp.int32)
-            else:
-                tiles = jnp.int32(frontier.shape[0] * n_steps)
-            out_racy, p_racy = ops.sell_batched(
-                self.cols, self.slab_rows, frontier, visited,
-                jnp.zeros_like(frontier), parent, n_vertices=v,
-                slabs_per_step=tile, **kw)
-            p_fixed, delta = ops.restore(p_racy, n_vertices=v)
-            return (out_racy | delta, visited | delta, p_fixed,
-                    engine.StepAux(tiles, jnp.int32(0)))
+        def make_kernel_step(bottom_up: bool):
+            def kernel_step(frontier, visited, parent):
+                kw = {}
+                if fused:
+                    # the planning bitmap is the direction's
+                    # *discovery-relevant* membership set: frontier
+                    # rows (top-down) vs unvisited rows (bottom-up)
+                    active = ~visited if bottom_up else frontier
+                    wl, na = jax.vmap(
+                        lambda a: self._plan_slab_steps(
+                            a, tile, n_steps))(active)
+                    kw = dict(worklist=wl, n_active=na)
+                    tiles = na.sum(dtype=jnp.int32)
+                else:
+                    tiles = jnp.int32(frontier.shape[0] * n_steps)
+                out_racy, p_racy = ops.sell_batched(
+                    self.cols, self.slab_rows, frontier, visited,
+                    jnp.zeros_like(frontier), parent, n_vertices=v,
+                    slabs_per_step=tile, bottom_up=bottom_up,
+                    prefetch_depth=prefetch_depth, **kw)
+                p_fixed, delta = ops.restore(p_racy, n_vertices=v)
+                return (out_racy | delta, visited | delta, p_fixed,
+                        engine.StepAux(tiles, jnp.int32(0)))
+            return kernel_step
+
+        kernel_step = make_kernel_step(bottom_up=False)
 
         def jnp_step(frontier, visited, parent):
             out, vis, par = jax.vmap(
@@ -263,10 +285,12 @@ class SellFormat(GraphFormat):
             return out, vis, par, engine.StepAux(
                 jnp.int32(frontier.shape[0] * n_steps), jnp.int32(0))
 
-        # The sweep is direction-agnostic on the symmetrized adjacency
-        # (see kernels/sell_expand.py): bottom-up == the same kernel,
-        # and the planner's frontier-row gate matches it in every
-        # mode.  MODE_SCALAR also maps to the kernel — SELL has no
+        # MODE_BOTTOMUP is a true role swap since ISSUE 4: the kernel
+        # discovers *rows* gated on "neighbor in frontier", so its
+        # planner schedules only the slabs of unvisited rows — on the
+        # fat late layers of a hybrid search that is a handful of
+        # slabs instead of every slab holding frontier rows.
+        # MODE_SCALAR maps to the top-down kernel — SELL has no
         # cheaper "scalar" gather, so a thin layer costs the same
         # (active-scheduled) sweep either way — except under
         # algorithm="nonsimd", whose Algorithm-2 exact-update
@@ -274,7 +298,7 @@ class SellFormat(GraphFormat):
         scalar_step = kernel_step if algorithm == "simd" else jnp_step
         return {engine.MODE_SCALAR: scalar_step,
                 engine.MODE_SIMD: kernel_step,
-                engine.MODE_BOTTOMUP: kernel_step}
+                engine.MODE_BOTTOMUP: make_kernel_step(bottom_up=True)}
 
     def resolve_tile(self, tile: int | None) -> int:
         """SELL's tile is *slabs per grid step*; the slice geometry
@@ -309,8 +333,17 @@ class SellFormat(GraphFormat):
         # one active slab group: `tile` slabs of cols + slab_rows
         return 4 * tile * (W_QUANT + 1) * SLICE_C
 
-    def plan_bytes(self, tile: int) -> int:
-        # the slab planner scans every slab's row ids + the work-list
-        # round trip
+    def plan_mask_bytes(self, packed: bool = True) -> int:
+        # SELL's planner is word-native in BOTH arms (`make_steps`
+        # ignores ``packed``): the membership test gathers from the
+        # packed bitmap either way, so the dense-mask model would
+        # charge bytes no SELL code path ever moves
+        return self.n_vertices_padded // 8
+
+    def plan_bytes(self, tile: int, packed: bool = True) -> int:
+        # the slab planner scans every slab's row ids, gathers
+        # membership from the packed bitmap, + the work-list round
+        # trip
         n_steps = -(-self.n_slabs // max(tile, 1))
-        return 4 * self.n_slabs * SLICE_C + 2 * 4 * n_steps
+        return (4 * self.n_slabs * SLICE_C
+                + self.plan_mask_bytes(packed) + 2 * 4 * n_steps)

@@ -39,6 +39,17 @@ Direction is a role swap on the same body (`_expand_tile`):
 Races and restoration are exactly the §3.3.2 story of the materialized
 kernel: the word scatter may drop colliding bits, the negative P marks
 let `restoration.py` repair them.
+
+Since ISSUE 4 the kernel also offers a **manual double-buffered DMA
+input pipeline** (``prefetch_depth`` > 0): ``rows`` stays in HBM (ANY
+memory space) and the kernel itself issues ``make_async_copy`` for
+tile ``t + depth`` while tile ``t`` computes, over ``depth + 1`` VMEM
+buffers with per-slot DMA semaphores — the explicit-prefetch-distance
+transcription of the paper's ``vprefetch`` tuning, where the
+BlockSpec pipeline's automatic double buffering is the fixed
+distance-1 special case.  The visited/frontier membership tests and
+the output-queue scatter operate on packed uint32 words in VMEM
+throughout (in-kernel packed test-and-set).
 """
 from __future__ import annotations
 
@@ -137,18 +148,118 @@ def _gather_batched_kernel(n_vertices: int, tile: int, n_cs: int,
         p_ref[...] = p[None]
 
 
-def vmem_budget(n_words: int, v_pad: int, n_cs: int, tile: int) -> int:
+def vmem_budget(n_words: int, v_pad: int, n_cs: int, tile: int,
+                prefetch_depth: int = 0) -> int:
     """Bytes of VMEM pinned (bitmaps x3 + P x2 + colstarts + rows
-    tile double-buffered)."""
-    return 4 * (3 * n_words + 2 * v_pad + n_cs) + 2 * 4 * tile
+    tile buffers — 2 for the automatic BlockSpec pipeline,
+    ``prefetch_depth + 1`` for the manual DMA pipeline)."""
+    n_buf = max(2, prefetch_depth + 1)
+    return 4 * (3 * n_words + 2 * v_pad + n_cs) + n_buf * 4 * tile
+
+
+def _dma_pipeline(rows_hbm, rows_buf, sems, wl, tile: int, depth: int,
+                  n_blocks: int, t, warm, work):
+    """The manual double-buffered input pipeline shared by the single
+    and batched DMA kernels.
+
+    At the first step of a root's tile sequence (``warm``) the DMAs
+    for tiles 0..depth are started; at every step the DMA for tile
+    ``t + depth`` is started (if it exists) before *waiting* on tile
+    ``t``'s — so ``depth`` tiles are always in flight while the
+    current tile computes (the §4 ``vprefetch`` distance, DMA-shaped).
+    ``depth + 1`` buffer slots make the in-flight set disjoint from
+    the compute slot.  The clamped work-list tail re-copies the last
+    active block (cheap, and the tail's compute is skipped by the
+    caller's ``pl.when`` guard).  ``work`` consumes the current
+    tile's VMEM buffer."""
+    n_buf = depth + 1
+
+    def dma(step):
+        return pltpu.make_async_copy(
+            rows_hbm.at[pl.ds(wl(step) * tile, tile)],
+            rows_buf.at[jax.lax.rem(step, n_buf)],
+            sems.at[jax.lax.rem(step, n_buf)])
+
+    @pl.when(warm)
+    def _warmup():
+        for k in range(min(depth, n_blocks)):
+            dma(jnp.int32(k)).start()
+
+    @pl.when(t + depth < n_blocks)
+    def _ahead():
+        dma(t + depth).start()
+
+    dma(t).wait()
+    work(rows_buf[jax.lax.rem(t, n_buf)])
+
+
+def _gather_dma_kernel(n_vertices: int, tile: int, n_cs: int,
+                       bottom_up: bool, depth: int, n_blocks: int,
+                       wl_ref, na_ref, rows_ref, cs_ref, frontier_ref,
+                       vis_ref, out0_ref, p0_ref, out_ref, p_ref,
+                       rows_buf, sems):
+    """`_gather_kernel` with the manual double-buffered input pipeline:
+    ``rows`` stays in HBM (ANY memory space) and the kernel itself
+    keeps ``depth`` tile DMAs in flight ahead of the compute tile."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = out0_ref[...]
+        p_ref[...] = p0_ref[...]
+
+    def work(rows_blk):
+        @pl.when(t < na_ref[0])
+        def _work():
+            out, p = _gather_tile(n_vertices, tile, n_cs, bottom_up,
+                                  wl_ref[t], rows_blk, cs_ref[...],
+                                  frontier_ref[...], vis_ref[...],
+                                  out_ref[...], p_ref[...])
+            out_ref[...] = out
+            p_ref[...] = p
+
+    _dma_pipeline(rows_ref, rows_buf, sems, lambda s: wl_ref[s], tile,
+                  depth, n_blocks, t, t == 0, work)
+
+
+def _gather_dma_batched_kernel(n_vertices: int, tile: int, n_cs: int,
+                               bottom_up: bool, depth: int,
+                               n_blocks: int, wl_ref, na_ref, rows_ref,
+                               cs_ref, frontier_ref, vis_ref, out0_ref,
+                               p0_ref, out_ref, p_ref, rows_buf, sems):
+    """Batched DMA variant: each root's tile sequence re-warms the
+    pipeline at its first grid step (the grid stays sequential, so
+    buffer slots hand over cleanly at root boundaries)."""
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = out0_ref[...]
+        p_ref[...] = p0_ref[...]
+
+    def work(rows_blk):
+        @pl.when(t < na_ref[b])
+        def _work():
+            out, p = _gather_tile(n_vertices, tile, n_cs, bottom_up,
+                                  wl_ref[b, t], rows_blk, cs_ref[...],
+                                  frontier_ref[0], vis_ref[0],
+                                  out_ref[0], p_ref[0])
+            out_ref[...] = out[None]
+            p_ref[...] = p[None]
+
+    _dma_pipeline(rows_ref, rows_buf, sems, lambda s: wl_ref[b, s],
+                  tile, depth, n_blocks, t, t == 0, work)
 
 
 @functools.partial(jax.jit, static_argnames=("n_vertices", "tile",
-                                             "bottom_up", "interpret"))
+                                             "bottom_up",
+                                             "prefetch_depth",
+                                             "interpret"))
 def gather_expand(worklist, n_active, rows, colstarts, frontier,
                   visited, out_init, p_init, *, n_vertices: int,
                   tile: int = DEFAULT_TILE, bottom_up: bool = False,
-                  interpret: bool = True):
+                  prefetch_depth: int = 0, interpret: bool = True):
     """Fused gather-expand over the active rows-blocks of one layer.
 
     Args:
@@ -163,6 +274,11 @@ def gather_expand(worklist, n_active, rows, colstarts, frontier,
       p_init: (V_pad,) int32 predecessor array.
       bottom_up: False = top-down gather, True = unvisited-adjacency
         sweep testing neighbors against the frontier.
+      prefetch_depth: 0 = the BlockSpec pipeline (Mosaic's automatic
+        double buffering); > 0 = the manual `make_async_copy` input
+        pipeline with ``depth`` tile DMAs in flight ahead of the
+        compute tile (``depth + 1`` VMEM buffers) — §4's prefetch
+        distance as an explicit knob.
     Returns:
       (out, parent) after the racy expansion (restoration NOT applied)
       — the same contract as `frontier_expand.frontier_expand`.
@@ -176,16 +292,27 @@ def gather_expand(worklist, n_active, rows, colstarts, frontier,
     v_pad = p_init.shape[0]
 
     whole = lambda n: pl.BlockSpec((n,), lambda t, wl, na: (0,))
+    if prefetch_depth > 0:
+        depth = min(int(prefetch_depth), n_blocks)
+        rows_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+        scratch = [pltpu.VMEM((depth + 1, tile), jnp.int32),
+                   pltpu.SemaphoreType.DMA((depth + 1,))]
+        kernel = functools.partial(_gather_dma_kernel, n_vertices, tile,
+                                   n_cs, bottom_up, depth, n_blocks)
+    else:
+        rows_spec = pl.BlockSpec((tile,), lambda t, wl, na: (wl[t],))
+        scratch = []
+        kernel = functools.partial(_gather_kernel, n_vertices, tile,
+                                   n_cs, bottom_up)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(n_blocks,),
-        in_specs=[pl.BlockSpec((tile,), lambda t, wl, na: (wl[t],)),
+        in_specs=[rows_spec,
                   whole(n_cs), whole(n_words), whole(n_words),
                   whole(n_words), whole(v_pad)],
         out_specs=[whole(n_words), whole(v_pad)],
+        scratch_shapes=scratch,
     )
-    kernel = functools.partial(_gather_kernel, n_vertices, tile, n_cs,
-                               bottom_up)
     out, parent = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -202,11 +329,14 @@ def gather_expand(worklist, n_active, rows, colstarts, frontier,
 
 
 @functools.partial(jax.jit, static_argnames=("n_vertices", "tile",
-                                             "bottom_up", "interpret"))
+                                             "bottom_up",
+                                             "prefetch_depth",
+                                             "interpret"))
 def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
                           visited, out_init, p_init, *, n_vertices: int,
                           tile: int = DEFAULT_TILE,
                           bottom_up: bool = False,
+                          prefetch_depth: int = 0,
                           interpret: bool = True):
     """Multi-root fused gather-expand: one launch, B searches.
 
@@ -215,6 +345,9 @@ def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
     and costs nothing).  ``rows``/``colstarts`` carry no root axis
     (the layout is shared); bitmaps/P are (B, W) / (B, V_pad).  Grid
     is (B, n_tiles): roots parallel, tiles sequential.
+    ``prefetch_depth`` > 0 selects the manual double-buffered DMA
+    input pipeline (see `gather_expand`); the grid then stays fully
+    sequential so buffer slots hand over cleanly at root boundaries.
     """
     n_slots = rows.shape[0]
     assert n_slots % tile == 0, "pad rows to the tile size at build"
@@ -227,24 +360,38 @@ def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
 
     flat = lambda n: pl.BlockSpec((n,), lambda b, t, wl, na: (0,))
     whole = lambda n: pl.BlockSpec((1, n), lambda b, t, wl, na: (b, 0))
+    if prefetch_depth > 0:
+        depth = min(int(prefetch_depth), n_blocks)
+        rows_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+        scratch = [pltpu.VMEM((depth + 1, tile), jnp.int32),
+                   pltpu.SemaphoreType.DMA((depth + 1,))]
+        kernel = functools.partial(_gather_dma_batched_kernel,
+                                   n_vertices, tile, n_cs, bottom_up,
+                                   depth, n_blocks)
+        semantics = ("arbitrary", "arbitrary")
+    else:
+        rows_spec = pl.BlockSpec((tile,),
+                                 lambda b, t, wl, na: (wl[b, t],))
+        scratch = []
+        kernel = functools.partial(_gather_batched_kernel, n_vertices,
+                                   tile, n_cs, bottom_up)
+        semantics = ("parallel", "arbitrary")
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(n_batch, n_blocks),
-        in_specs=[pl.BlockSpec((tile,),
-                               lambda b, t, wl, na: (wl[b, t],)),
+        in_specs=[rows_spec,
                   flat(n_cs), whole(n_words), whole(n_words),
                   whole(n_words), whole(v_pad)],
         out_specs=[whole(n_words), whole(v_pad)],
+        scratch_shapes=scratch,
     )
-    kernel = functools.partial(_gather_batched_kernel, n_vertices, tile,
-                               n_cs, bottom_up)
     out, parent = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((n_batch, n_words), jnp.uint32),
                    jax.ShapeDtypeStruct((n_batch, v_pad), jnp.int32)],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=semantics),
         interpret=interpret,
         name="bfs_gather_expand_batched",
     )(worklist, n_active, rows, colstarts, frontier, visited, out_init,

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.bitmap import BITS_PER_WORD
 from repro.kernels import bitmap_kernels, frontier_expand as fe
+from repro.kernels import compact as ck
 from repro.kernels import gather_expand as ge
 from repro.kernels import restoration as rest
 from repro.kernels import sell_expand as se
@@ -83,39 +84,44 @@ def expand_batched(nbr, cand, valid, frontier, visited, out_init, p_init,
 
 
 def _gather_budget_check(n_words: int, v_pad: int, n_cs: int,
-                         tile: int) -> None:
-    budget = ge.vmem_budget(n_words, v_pad, n_cs, tile)
+                         tile: int, prefetch_depth: int = 0) -> None:
+    budget = ge.vmem_budget(n_words, v_pad, n_cs, tile, prefetch_depth)
     if budget > VMEM_BYTES * _VMEM_HEADROOM:
         raise ValueError(
             f"gather_expand working set {budget/2**20:.1f} MiB exceeds "
             f"VMEM budget; shard the vertex range across chips "
-            f"(core/bfs_distributed.py) or reduce the tile")
+            f"(core/bfs_distributed.py) or reduce the tile or "
+            f"prefetch_depth")
 
 
 def gather_expand(worklist, n_active, rows, colstarts, frontier,
                   visited, out_init, p_init, *, n_vertices: int,
                   tile: int = ge.DEFAULT_TILE, bottom_up: bool = False,
+                  prefetch_depth: int = 0,
                   interpret: bool | None = None):
     """Run the fused in-kernel CSR gather over one layer's active
     tiles (see kernels/gather_expand.py).  ``rows`` must already be
     padded to a tile multiple (done once at build by the format, NOT
     per layer — re-padding inside the layer loop would reintroduce
-    the O(E) copy this kernel exists to remove)."""
+    the O(E) copy this kernel exists to remove).  ``prefetch_depth``
+    > 0 selects the manual double-buffered DMA input pipeline."""
     if interpret is None:
         interpret = _interpret_default()
     _gather_budget_check(visited.shape[0], p_init.shape[0],
-                         colstarts.shape[0], tile)
+                         colstarts.shape[0], tile, prefetch_depth)
     n_active = jnp.atleast_1d(jnp.asarray(n_active, jnp.int32))
     return ge.gather_expand(
         worklist.astype(jnp.int32), n_active, rows, colstarts, frontier,
         visited, out_init, p_init, n_vertices=n_vertices, tile=tile,
-        bottom_up=bottom_up, interpret=interpret)
+        bottom_up=bottom_up, prefetch_depth=prefetch_depth,
+        interpret=interpret)
 
 
 def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
                           visited, out_init, p_init, *, n_vertices: int,
                           tile: int = ge.DEFAULT_TILE,
                           bottom_up: bool = False,
+                          prefetch_depth: int = 0,
                           interpret: bool | None = None):
     """Batched (leading root-axis) fused gather-expand: worklist/
     n_active/bitmaps/P carry (B, ...); the CSR arrays are shared.
@@ -123,12 +129,12 @@ def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
     if interpret is None:
         interpret = _interpret_default()
     _gather_budget_check(visited.shape[1], p_init.shape[1],
-                         colstarts.shape[0], tile)
+                         colstarts.shape[0], tile, prefetch_depth)
     return ge.gather_expand_batched(
         worklist.astype(jnp.int32), n_active.astype(jnp.int32), rows,
         colstarts, frontier, visited, out_init, p_init,
         n_vertices=n_vertices, tile=tile, bottom_up=bottom_up,
-        interpret=interpret)
+        prefetch_depth=prefetch_depth, interpret=interpret)
 
 
 def _pad_slabs(cols, slab_rows, n_vertices: int, step: int):
@@ -146,27 +152,35 @@ def _pad_slabs(cols, slab_rows, n_vertices: int, step: int):
     return cols, slab_rows
 
 
-def _sell_budget_check(n_words: int, v_pad: int, step: int) -> None:
-    budget = se.vmem_budget(n_words, v_pad, step)
+def _sell_budget_check(n_words: int, v_pad: int, step: int,
+                       prefetch_depth: int = 0) -> None:
+    budget = se.vmem_budget(n_words, v_pad, step, prefetch_depth)
     if budget > VMEM_BYTES * _VMEM_HEADROOM:
         raise ValueError(
             f"sell_expand working set {budget/2**20:.1f} MiB exceeds "
             f"VMEM budget; shard the vertex range across chips "
-            f"(core/bfs_distributed.py) or reduce slabs_per_step")
+            f"(core/bfs_distributed.py) or reduce slabs_per_step or "
+            f"prefetch_depth")
 
 
 def sell(cols, slab_rows, frontier, visited, out_init, p_init, *,
          n_vertices: int, slabs_per_step: int = 1, worklist=None,
-         n_active=None, interpret: bool | None = None):
+         n_active=None, bottom_up: bool = False,
+         prefetch_depth: int = 0, interpret: bool | None = None):
     """Pad + run the single-root SELL-C-σ sweep kernel.
 
     ``worklist``/``n_active`` schedule the active slab groups (the
     fused pipeline; `formats.sell.SellFormat` plans them); omitting
     both runs the full identity sweep (the materialized pipeline).
+    ``bottom_up`` swaps the sweep's gate/discover roles (rows are
+    discovered, neighbors tested against the frontier);
+    ``prefetch_depth`` > 0 selects the manual double-buffered DMA
+    input pipeline.
     """
     if interpret is None:
         interpret = _interpret_default()
-    _sell_budget_check(visited.shape[0], p_init.shape[0], slabs_per_step)
+    _sell_budget_check(visited.shape[0], p_init.shape[0],
+                       slabs_per_step, prefetch_depth)
     cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
                                  slabs_per_step)
     n_steps = cols.shape[0] // slabs_per_step
@@ -178,12 +192,14 @@ def sell(cols, slab_rows, frontier, visited, out_init, p_init, *,
     return se.sell_expand(
         cols, slab_rows, worklist.astype(jnp.int32), n_active, frontier,
         visited, out_init, p_init, n_vertices=n_vertices,
-        slabs_per_step=slabs_per_step, interpret=interpret)
+        slabs_per_step=slabs_per_step, bottom_up=bottom_up,
+        prefetch_depth=prefetch_depth, interpret=interpret)
 
 
 def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
                  *, n_vertices: int, slabs_per_step: int = 1,
-                 worklist=None, n_active=None,
+                 worklist=None, n_active=None, bottom_up: bool = False,
+                 prefetch_depth: int = 0,
                  interpret: bool | None = None):
     """Pad + run the batched (leading root-axis) SELL-C-σ sweep.
 
@@ -194,7 +210,8 @@ def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
     """
     if interpret is None:
         interpret = _interpret_default()
-    _sell_budget_check(visited.shape[1], p_init.shape[1], slabs_per_step)
+    _sell_budget_check(visited.shape[1], p_init.shape[1],
+                       slabs_per_step, prefetch_depth)
     cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
                                  slabs_per_step)
     n_steps = cols.shape[0] // slabs_per_step
@@ -207,6 +224,7 @@ def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
         cols, slab_rows, worklist.astype(jnp.int32),
         n_active.astype(jnp.int32), frontier, visited, out_init, p_init,
         n_vertices=n_vertices, slabs_per_step=slabs_per_step,
+        bottom_up=bottom_up, prefetch_depth=prefetch_depth,
         interpret=interpret)
 
 
@@ -241,3 +259,34 @@ def popcount(words, *, interpret: bool | None = None):
     if interpret is None:
         interpret = _interpret_default()
     return bitmap_kernels.popcount(words, interpret=interpret)
+
+
+def compact_fits(n_batch: int, size: int) -> bool:
+    """True when the compaction kernel's (B, size) queue block fits
+    the VMEM budget.  The engine's packed planning arms consult this
+    at trace time and silently fall back to the dense planner when it
+    is False — large graphs keep working exactly as they did before
+    the packed default, instead of failing on the budget check."""
+    return ck.vmem_budget(n_batch, size, ck.DEFAULT_TILE_WORDS) \
+        <= VMEM_BYTES * _VMEM_HEADROOM
+
+
+def frontier_compact(words, *, size: int, fill: int,
+                     interpret: bool | None = None):
+    """Run the SIMD compaction kernel (kernels/compact.py): packed
+    bitmap -> (dense vertex queue (size,), count).  The packed
+    replacement for `bitmap.compact` + `bitmap.popcount`."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return ck.frontier_compact(words, size=size, fill=fill,
+                               interpret=interpret)
+
+
+def frontier_compact_batched(words, *, size: int, fill: int,
+                             interpret: bool | None = None):
+    """Batched compaction: (B, W) packed bitmaps -> ((B, size)
+    queues, (B,) counts) in one launch."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return ck.frontier_compact_batched(words, size=size, fill=fill,
+                                       interpret=interpret)

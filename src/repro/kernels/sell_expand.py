@@ -62,24 +62,33 @@ SLICE_C = 128   # rows per slice = TPU vector lane count (csr.LANES)
 W_QUANT = 8     # columns per slab: 8x128 int32 = one aligned tile
 
 
-def _sell_tile(n_vertices: int, cols, rows, frontier, vis, out, p):
+def _sell_tile(n_vertices: int, bottom_up: bool, cols, rows, frontier,
+               vis, out, p):
     """One grid step of the sweep on loaded VMEM values.
 
     cols: (S, W_QUANT, C) neighbor ids; rows: (S, C) owning vertex ids.
     Returns the updated (out, p) for this step's writes.
-    """
+
+    ``bottom_up`` swaps the roles on the symmetrized adjacency: the
+    top-down sweep gates on "row in frontier" and discovers the
+    *neighbor*; the bottom-up sweep gates on "neighbor in frontier"
+    and discovers the *row* — the hybrid's "unvisited candidate scans
+    its parents" read, which is what lets the planner schedule only
+    the slabs of *unvisited* rows late in the search (fully-visited
+    slices drop out entirely)."""
     nbr = cols
     src = jnp.broadcast_to(rows[:, None, :], cols.shape)
+    # the frontier-gated side vs the discovered side (role swap)
+    gate, disc = (nbr, src) if bottom_up else (src, nbr)
 
-    # lane mask 1: owning row in the frontier (the top-down test; along
-    # the reverse edge this is the bottom-up parent test)
-    sw = jnp.clip(src >> WORD_SHIFT, 0, frontier.shape[0] - 1)
-    sb = (src & WORD_MASK).astype(jnp.uint32)
+    # lane mask 1: gated side in the frontier
+    sw = jnp.clip(gate >> WORD_SHIFT, 0, frontier.shape[0] - 1)
+    sb = (gate & WORD_MASK).astype(jnp.uint32)
     in_front = (frontier[sw] >> sb) & jnp.uint32(1) != 0
 
-    # lane mask 2: neighbor undiscovered; sentinel lanes filter out
-    word = nbr >> WORD_SHIFT
-    bit = (nbr & WORD_MASK).astype(jnp.uint32)
+    # lane mask 2: discovered side undiscovered; sentinels filter out
+    word = disc >> WORD_SHIFT
+    bit = (disc & WORD_MASK).astype(jnp.uint32)
     bits = jnp.uint32(1) << bit
     w_clip = jnp.clip(word, 0, out.shape[0] - 1)
     out_words = out[w_clip]
@@ -89,8 +98,8 @@ def _sell_tile(n_vertices: int, cols, rows, frontier, vis, out, p):
             & (nbr < n_vertices) & (src < n_vertices))
 
     # masked scatter of P (negative marking) — benign duplicate race
-    p_idx = jnp.where(mask, nbr, p.shape[0])
-    new_p = p.at[p_idx].set(src - n_vertices, mode="drop")
+    p_idx = jnp.where(mask, disc, p.shape[0])
+    new_p = p.at[p_idx].set(gate - n_vertices, mode="drop")
 
     # masked racy word scatter of the output queue (Fig. 6 race)
     new_words = out_words | bits
@@ -99,9 +108,9 @@ def _sell_tile(n_vertices: int, cols, rows, frontier, vis, out, p):
     return new_out, new_p
 
 
-def _sell_kernel(n_vertices: int, wl_ref, na_ref, cols_ref, rows_ref,
-                 frontier_ref, vis_ref, out0_ref, p0_ref, out_ref,
-                 p_ref):
+def _sell_kernel(n_vertices: int, bottom_up: bool, wl_ref, na_ref,
+                 cols_ref, rows_ref, frontier_ref, vis_ref, out0_ref,
+                 p0_ref, out_ref, p_ref):
     t = pl.program_id(0)
 
     @pl.when(t == 0)
@@ -111,16 +120,16 @@ def _sell_kernel(n_vertices: int, wl_ref, na_ref, cols_ref, rows_ref,
 
     @pl.when(t < na_ref[0])
     def _work():  # inactive steps: no DMA (clamped index), no compute
-        out, p = _sell_tile(n_vertices, cols_ref[...], rows_ref[...],
-                            frontier_ref[...], vis_ref[...],
-                            out_ref[...], p_ref[...])
+        out, p = _sell_tile(n_vertices, bottom_up, cols_ref[...],
+                            rows_ref[...], frontier_ref[...],
+                            vis_ref[...], out_ref[...], p_ref[...])
         out_ref[...] = out
         p_ref[...] = p
 
 
-def _sell_batched_kernel(n_vertices: int, wl_ref, na_ref, cols_ref,
-                         rows_ref, frontier_ref, vis_ref, out0_ref,
-                         p0_ref, out_ref, p_ref):
+def _sell_batched_kernel(n_vertices: int, bottom_up: bool, wl_ref,
+                         na_ref, cols_ref, rows_ref, frontier_ref,
+                         vis_ref, out0_ref, p0_ref, out_ref, p_ref):
     """Batched variant: grid (roots, slice steps).  The adjacency slabs
     are root-independent (shared blocks); bitmaps/P carry a leading
     size-1 root axis, each root accumulating into its own rows; each
@@ -135,25 +144,123 @@ def _sell_batched_kernel(n_vertices: int, wl_ref, na_ref, cols_ref,
 
     @pl.when(t < na_ref[b])
     def _work():
-        out, p = _sell_tile(n_vertices, cols_ref[...], rows_ref[...],
-                            frontier_ref[0], vis_ref[0],
+        out, p = _sell_tile(n_vertices, bottom_up, cols_ref[...],
+                            rows_ref[...], frontier_ref[0], vis_ref[0],
                             out_ref[0], p_ref[0])
         out_ref[...] = out[None]
         p_ref[...] = p[None]
 
 
-def vmem_budget(n_words: int, v_pad: int, slabs_per_step: int) -> int:
-    """Bytes of VMEM pinned (bitmaps x4 + P x2 + double-buffered slabs)."""
+def _sell_dma_pipeline(cols_hbm, rows_hbm, cols_buf, rows_buf, sems,
+                       wl, spp: int, depth: int, n_steps: int, t, warm,
+                       work):
+    """Manual double-buffered input pipeline over BOTH slab arrays.
+
+    Per step two DMAs (cols slab group + its slab_rows) share a slot;
+    ``depth`` steps stay in flight ahead of the compute step, exactly
+    the gather kernel's pipeline shape (see
+    `gather_expand._dma_pipeline`)."""
+    n_buf = depth + 1
+
+    def dmas(step):
+        slot = jax.lax.rem(step, n_buf)
+        g = wl(step)
+        return (pltpu.make_async_copy(
+                    cols_hbm.at[pl.ds(g * spp, spp)], cols_buf.at[slot],
+                    sems.at[0, slot]),
+                pltpu.make_async_copy(
+                    rows_hbm.at[pl.ds(g * spp, spp)], rows_buf.at[slot],
+                    sems.at[1, slot]))
+
+    @pl.when(warm)
+    def _warmup():
+        for k in range(min(depth, n_steps)):
+            for d in dmas(jnp.int32(k)):
+                d.start()
+
+    @pl.when(t + depth < n_steps)
+    def _ahead():
+        for d in dmas(t + depth):
+            d.start()
+
+    for d in dmas(t):
+        d.wait()
+    slot = jax.lax.rem(t, n_buf)
+    work(cols_buf[slot], rows_buf[slot])
+
+
+def _sell_dma_kernel(n_vertices: int, bottom_up: bool, spp: int,
+                     depth: int, n_steps: int, wl_ref, na_ref,
+                     cols_ref, rows_ref, frontier_ref, vis_ref,
+                     out0_ref, p0_ref, out_ref, p_ref, cols_buf,
+                     rows_buf, sems):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = out0_ref[...]
+        p_ref[...] = p0_ref[...]
+
+    def work(cols_blk, rows_blk):
+        @pl.when(t < na_ref[0])
+        def _work():
+            out, p = _sell_tile(n_vertices, bottom_up, cols_blk,
+                                rows_blk, frontier_ref[...],
+                                vis_ref[...], out_ref[...], p_ref[...])
+            out_ref[...] = out
+            p_ref[...] = p
+
+    _sell_dma_pipeline(cols_ref, rows_ref, cols_buf, rows_buf, sems,
+                       lambda s: wl_ref[s], spp, depth, n_steps, t,
+                       t == 0, work)
+
+
+def _sell_dma_batched_kernel(n_vertices: int, bottom_up: bool,
+                             spp: int, depth: int, n_steps: int,
+                             wl_ref, na_ref, cols_ref, rows_ref,
+                             frontier_ref, vis_ref, out0_ref, p0_ref,
+                             out_ref, p_ref, cols_buf, rows_buf, sems):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = out0_ref[...]
+        p_ref[...] = p0_ref[...]
+
+    def work(cols_blk, rows_blk):
+        @pl.when(t < na_ref[b])
+        def _work():
+            out, p = _sell_tile(n_vertices, bottom_up, cols_blk,
+                                rows_blk, frontier_ref[0], vis_ref[0],
+                                out_ref[0], p_ref[0])
+            out_ref[...] = out[None]
+            p_ref[...] = p[None]
+
+    _sell_dma_pipeline(cols_ref, rows_ref, cols_buf, rows_buf, sems,
+                       lambda s: wl_ref[b, s], spp, depth, n_steps, t,
+                       t == 0, work)
+
+
+def vmem_budget(n_words: int, v_pad: int, slabs_per_step: int,
+                prefetch_depth: int = 0) -> int:
+    """Bytes of VMEM pinned (bitmaps x4 + P x2 + slab buffers — 2 for
+    the automatic BlockSpec pipeline, ``prefetch_depth + 1`` for the
+    manual DMA pipeline)."""
     slab = slabs_per_step * (W_QUANT + 1) * SLICE_C * 4
-    return 4 * (4 * n_words + 2 * v_pad) + 2 * slab
+    return 4 * (4 * n_words + 2 * v_pad) \
+        + max(2, prefetch_depth + 1) * slab
 
 
 @functools.partial(jax.jit, static_argnames=("n_vertices",
                                              "slabs_per_step",
+                                             "bottom_up",
+                                             "prefetch_depth",
                                              "interpret"))
 def sell_expand(cols, slab_rows, worklist, n_active, frontier, visited,
                 out_init, p_init, *, n_vertices: int,
-                slabs_per_step: int = 1, interpret: bool = True):
+                slabs_per_step: int = 1, bottom_up: bool = False,
+                prefetch_depth: int = 0, interpret: bool = True):
     """Single-root SELL sweep over the active slab groups.
 
     Args:
@@ -179,11 +286,26 @@ def sell_expand(cols, slab_rows, worklist, n_active, frontier, visited,
     n_words = visited.shape[0]
     v_pad = p_init.shape[0]
 
-    cols_spec = pl.BlockSpec((slabs_per_step, W_QUANT, SLICE_C),
-                             lambda t, wl, na: (wl[t], 0, 0))
-    rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C),
-                             lambda t, wl, na: (wl[t], 0))
     whole = lambda n: pl.BlockSpec((n,), lambda t, wl, na: (0,))
+    if prefetch_depth > 0:
+        depth = min(int(prefetch_depth), n_steps)
+        any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+        cols_spec, rows_spec = any_spec, any_spec
+        scratch = [pltpu.VMEM((depth + 1, slabs_per_step, W_QUANT,
+                               SLICE_C), jnp.int32),
+                   pltpu.VMEM((depth + 1, slabs_per_step, SLICE_C),
+                              jnp.int32),
+                   pltpu.SemaphoreType.DMA((2, depth + 1))]
+        kernel = functools.partial(_sell_dma_kernel, n_vertices,
+                                   bottom_up, slabs_per_step, depth,
+                                   n_steps)
+    else:
+        cols_spec = pl.BlockSpec((slabs_per_step, W_QUANT, SLICE_C),
+                                 lambda t, wl, na: (wl[t], 0, 0))
+        rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C),
+                                 lambda t, wl, na: (wl[t], 0))
+        scratch = []
+        kernel = functools.partial(_sell_kernel, n_vertices, bottom_up)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -191,8 +313,8 @@ def sell_expand(cols, slab_rows, worklist, n_active, frontier, visited,
         in_specs=[cols_spec, rows_spec, whole(n_words), whole(n_words),
                   whole(n_words), whole(v_pad)],
         out_specs=[whole(n_words), whole(v_pad)],
+        scratch_shapes=scratch,
     )
-    kernel = functools.partial(_sell_kernel, n_vertices)
     out, parent = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -210,10 +332,13 @@ def sell_expand(cols, slab_rows, worklist, n_active, frontier, visited,
 
 @functools.partial(jax.jit, static_argnames=("n_vertices",
                                              "slabs_per_step",
+                                             "bottom_up",
+                                             "prefetch_depth",
                                              "interpret"))
 def sell_expand_batched(cols, slab_rows, worklist, n_active, frontier,
                         visited, out_init, p_init, *, n_vertices: int,
-                        slabs_per_step: int = 1,
+                        slabs_per_step: int = 1, bottom_up: bool = False,
+                        prefetch_depth: int = 0,
                         interpret: bool = True):
     """Multi-root SELL sweep: one launch expands B independent searches.
 
@@ -232,11 +357,29 @@ def sell_expand_batched(cols, slab_rows, worklist, n_active, frontier,
     assert worklist.shape == (n_batch, n_steps)
     v_pad = p_init.shape[1]
 
-    cols_spec = pl.BlockSpec((slabs_per_step, W_QUANT, SLICE_C),
-                             lambda b, t, wl, na: (wl[b, t], 0, 0))
-    rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C),
-                             lambda b, t, wl, na: (wl[b, t], 0))
     whole = lambda n: pl.BlockSpec((1, n), lambda b, t, wl, na: (b, 0))
+    if prefetch_depth > 0:
+        depth = min(int(prefetch_depth), n_steps)
+        any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+        cols_spec, rows_spec = any_spec, any_spec
+        scratch = [pltpu.VMEM((depth + 1, slabs_per_step, W_QUANT,
+                               SLICE_C), jnp.int32),
+                   pltpu.VMEM((depth + 1, slabs_per_step, SLICE_C),
+                              jnp.int32),
+                   pltpu.SemaphoreType.DMA((2, depth + 1))]
+        kernel = functools.partial(_sell_dma_batched_kernel, n_vertices,
+                                   bottom_up, slabs_per_step, depth,
+                                   n_steps)
+        semantics = ("arbitrary", "arbitrary")
+    else:
+        cols_spec = pl.BlockSpec((slabs_per_step, W_QUANT, SLICE_C),
+                                 lambda b, t, wl, na: (wl[b, t], 0, 0))
+        rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C),
+                                 lambda b, t, wl, na: (wl[b, t], 0))
+        scratch = []
+        kernel = functools.partial(_sell_batched_kernel, n_vertices,
+                                   bottom_up)
+        semantics = ("parallel", "arbitrary")
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -244,15 +387,15 @@ def sell_expand_batched(cols, slab_rows, worklist, n_active, frontier,
         in_specs=[cols_spec, rows_spec, whole(n_words), whole(n_words),
                   whole(n_words), whole(v_pad)],
         out_specs=[whole(n_words), whole(v_pad)],
+        scratch_shapes=scratch,
     )
-    kernel = functools.partial(_sell_batched_kernel, n_vertices)
     out, parent = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((n_batch, n_words), jnp.uint32),
                    jax.ShapeDtypeStruct((n_batch, v_pad), jnp.int32)],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=semantics),
         interpret=interpret,
         name="bfs_sell_expand_batched",
     )(worklist, n_active, cols, slab_rows, frontier, visited, out_init,

@@ -86,12 +86,19 @@ class GraphEngine:
       pipeline: expansion pipeline for the tick — "fused_gather"
         (default: per-slot active-tile work-lists, drained slots cost
         nothing) or "materialized" (legacy full edge stream).
+      packed: keep the tick's planning/compaction on packed uint32
+        words (the ISSUE 4 native representation; False = the legacy
+        dense-mask arm, kept for parity measurement).
+      prefetch_depth: input-DMA tiles kept in flight ahead of compute
+        inside the expansion kernels (0 = automatic BlockSpec double
+        buffering).
     """
 
     def __init__(self, graph, batch_slots: int = 8,
                  algorithm: str = "simd", max_layers: int = 64,
                  graph_format: str | None = "auto",
-                 pipeline: str = "fused_gather"):
+                 pipeline: str = "fused_gather", packed: bool = True,
+                 prefetch_depth: int = 0):
         from repro.formats import GraphFormat, autotune
         if isinstance(graph, GraphFormat):
             self.csr = None
@@ -105,6 +112,8 @@ class GraphEngine:
         self.max_layers = max_layers
         self.algorithm = algorithm
         self.pipeline = pipeline
+        self.packed = packed
+        self.prefetch_depth = prefetch_depth
         b = batch_slots
         self.n_vertices = self.fmt.n_vertices
         v_pad = self.fmt.n_vertices_padded
@@ -143,7 +152,9 @@ class GraphEngine:
         self.frontier, self.visited, self.parent = \
             engine.layer_step_format(
                 self.fmt, self.frontier, self.visited, self.parent,
-                algorithm=self.algorithm, pipeline=self.pipeline)
+                algorithm=self.algorithm, pipeline=self.pipeline,
+                packed=self.packed,
+                prefetch_depth=self.prefetch_depth)
         counts = np.asarray(engine.row_popcounts(self.frontier))
         for i, q in enumerate(self.slots):
             if q is None or q.done:
