@@ -6,20 +6,22 @@ export PYTHONPATH := src
 test:            ## full tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
 
-test-quick:      ## BFS substrate + engine + formats (fast inner loop)
+test-quick:      ## BFS substrate + engine + formats + API (fast inner loop)
 	$(PY) -m pytest -x -q tests/test_bitmap.py tests/test_kernels.py \
 	    tests/test_bfs_correctness.py tests/test_engine.py \
 	    tests/test_formats.py tests/test_gather_pipeline.py \
-	    tests/test_packed_engine.py
+	    tests/test_packed_engine.py tests/test_plan_api.py \
+	    tests/test_api_surface.py
 
 bench:           ## full benchmark harness
 	$(PY) -m benchmarks.run
 
-bench-quick:     ## batched + formats + layer/bytes + packed probes (updates BENCH_bfs.json)
+bench-quick:     ## batched + formats + layer/bytes + packed + plan-cache probes (updates BENCH_bfs.json)
 	$(PY) -m benchmarks.run --quick --only bfs_batched
 	$(PY) -m benchmarks.run --quick --only bfs_formats
 	$(PY) -m benchmarks.run --quick --only bfs_layers
 	$(PY) -m benchmarks.run --quick --only bfs_packed
+	$(PY) -m benchmarks.run --quick --only bfs_plan_cache
 
 bench-formats:   ## the graph-format sweep (TEPS + bytes per layout)
 	$(PY) -m benchmarks.run --only bfs_formats

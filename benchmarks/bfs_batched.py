@@ -53,7 +53,9 @@ def main(scale: int = 12, batch: int | None = None,
     t_host = _time(lambda: jax.block_until_ready(
         engine.traverse_hostloop(g, r0, policy=policy)[0].parent))
     t_fused = _time(lambda: jax.block_until_ready(
-        engine.traverse(g, r0, policy=policy).state.parent))
+        engine.traverse(g, r0,
+                        spec=engine.make_spec(policy=policy))
+        .state.parent))
     removed = (t_host - t_fused) * 1e6
     emit(f"bfs_single_hostloop_s{scale}", t_host * 1e6, "per_layer_sync")
     emit(f"bfs_single_fused_s{scale}", t_fused * 1e6,
@@ -61,7 +63,9 @@ def main(scale: int = 12, batch: int | None = None,
 
     # 2. multi-root: one launch, leading root axis
     t_batch = _time(lambda: jax.block_until_ready(
-        engine.traverse(g, roots, policy=policy).state.parent))
+        engine.traverse(g, roots,
+                        spec=engine.make_spec(policy=policy))
+        .state.parent))
     emit(f"bfs_batched{batch}_s{scale}", t_batch * 1e6,
          f"roots_per_s={batch / t_batch:.1f};"
          f"speedup_vs_serial_fused={batch * t_fused / t_batch:.2f}x")
@@ -69,8 +73,9 @@ def main(scale: int = 12, batch: int | None = None,
     # 3. serve engine: continuous batching, 2x oversubscribed queue
     def serve_once():
         eng = GraphEngine(g, batch_slots=batch,
-                          algorithm=SERVE.algorithm,
-                          max_layers=SERVE.max_layers)
+                          spec=engine.make_spec(
+                              algorithm=SERVE.algorithm,
+                              max_layers=SERVE.max_layers))
         for uid, r in enumerate(roots * 2):
             eng.submit(BfsQuery(uid=uid, root=int(r)))
         eng.run_until_done()

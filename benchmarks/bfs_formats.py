@@ -82,7 +82,8 @@ def main(scale: int = 12, cfg=FORMAT_SWEEP) -> None:
              f"fp_mb={fp.total_bytes/2**20:.2f}")
 
         for pname, policy in _policies(cfg).items():
-            res = engine.traverse(fmt, root, policy=policy)
+            res = engine.traverse(
+                fmt, root, spec=engine.make_spec(policy=policy))
             p = res.state.parent[:g.n_vertices]
             reached = np.asarray(p) < g.n_vertices
             n_layers = int(res.state.layer)
@@ -94,7 +95,9 @@ def main(scale: int = 12, cfg=FORMAT_SWEEP) -> None:
             mb_mat = traversal_bytes(fmt, stats, tile=tile,
                                      pipeline="materialized") / 2**20
             t = _time(lambda f=fmt, pol=policy: jax.block_until_ready(
-                engine.traverse(f, root, policy=pol).state.parent))
+                engine.traverse(
+                    f, root,
+                    spec=engine.make_spec(policy=pol)).state.parent))
             best[name] = min(best.get(name, np.inf), t)
             emit(f"bfs_fmt_{name}_{pname}_s{scale}", t * 1e6,
                  f"teps={edges / t:.3e};layers={n_layers};"

@@ -51,9 +51,9 @@ def path_probe(scale: int = PATH_SCALE, tile: int = PATH_TILE,
     g = build_path_graph(n)
     fmt = CsrFormat.from_csr(g)
     t = fmt.resolve_tile(tile)
-    res = engine.traverse(g, 0, policy=engine.ThresholdSimd(0),
-                          tile=tile, max_layers=n + 2,
-                          pipeline="fused_gather")
+    res = engine.traverse(g, 0, spec=engine.make_spec(
+        policy=engine.ThresholdSimd(0), tile=tile, max_layers=n + 2,
+        pipeline="fused_gather"))
     stats = engine.layer_stats(res)
     fused = traversal_bytes(fmt, stats, tile=t,
                             pipeline="fused_gather")

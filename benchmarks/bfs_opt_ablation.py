@@ -66,30 +66,32 @@ def main(scale: int = 13, n_roots: int = 3):
     assert results["simd_align_mask"] <= 1.3 * results["simd_no_opt"], \
         "layer-adaptive switch regressed vs always-on SIMD"
 
-    # pipeline ablation (ISSUE 3): fused in-kernel gather vs the
-    # legacy materialized stream through the fused engine, SIMD
+    # pipeline ablation (ISSUE 3, spec-swept since ISSUE 5): fused
+    # in-kernel gather vs the legacy materialized stream — each axis
+    # point is ONE declarative TraversalSpec planned through
+    # repro.bfs.plan (one cached executable per resolved spec), SIMD
     # kernel forced on so the pipelines actually diverge
+    import repro.bfs as bfs
     from repro.formats.base import traversal_bytes
     from repro.formats.csr_format import CsrFormat
     fmt = CsrFormat.from_csr(g)
-    tile = fmt.resolve_tile(None)
-    for pipe in ("fused_gather", "materialized"):
-        res = engine.traverse(g, int(roots[0]),
-                              policy=engine.ThresholdSimd(0),
-                              pipeline=pipe)
-        n_layers = len(engine.layer_stats(res))
-        mb = traversal_bytes(fmt, engine.layer_stats(res), tile=tile,
-                             pipeline=pipe) / 2**20
-        sec = time_bfs(
-            lambda c, r, pipe=pipe: engine.traverse(
-                c, r, policy=engine.ThresholdSimd(0),
-                pipeline=pipe).state,
-            g, roots)
-        results[f"pipeline_{pipe}"] = sec
+    sweep = {f"pipeline_{p}": bfs.TraversalSpec(
+                 policy=engine.ThresholdSimd(0), pipeline=p)
+             for p in engine.PIPELINES}
+    for name, spec in sweep.items():
+        ct = bfs.plan(g, spec)
+        res = ct.run(int(roots[0]))
+        stats = ct.stats(res)
+        mb = traversal_bytes(fmt, stats, tile=ct.resolved.tile,
+                             pipeline=ct.resolved.pipeline,
+                             packed=ct.resolved.packed) / 2**20
+        sec = time_bfs(lambda c, r, ct=ct: ct.run(r).state, g, roots)
+        results[name] = sec
         teps = g.n_edges / 2 / sec
-        emit(f"bfs_opt_ablation.pipeline_{pipe}", sec * 1e6,
-             f"{teps:.3e}_teps;layers={n_layers};mb_moved={mb:.2f}",
+        emit(f"bfs_opt_ablation.{name}", sec * 1e6,
+             f"{teps:.3e}_teps;layers={len(stats)};mb_moved={mb:.2f}",
              value=mb)
+        assert ct.traces == 1, "spec sweep must reuse one trace/axis"
     return results
 
 

@@ -59,8 +59,8 @@ def path_packed_probe(scale: int = PATH_SCALE, tile: int = PATH_TILE,
     pol = engine.ThresholdSimd(0)
 
     def run(packed):
-        return engine.traverse(g, 0, policy=pol, tile=tile,
-                               max_layers=n + 2, packed=packed)
+        return engine.traverse(g, 0, spec=engine.make_spec(
+            policy=pol, tile=tile, max_layers=n + 2, packed=packed))
 
     res = run(True)
     stats = engine.layer_stats(res)
@@ -115,14 +115,14 @@ def main(scale: int = 10) -> None:
     root = int(rng.choice(np.where(deg > 0)[0]))
     pol = engine.ThresholdSimd(0)
 
-    res = engine.traverse(g, root, policy=pol)
+    res = engine.traverse(g, root, spec=engine.make_spec(policy=pol))
     stats = engine.layer_stats(res)
     reached = np.asarray(res.state.parent)[:g.n_vertices] < g.n_vertices
     edges = int(traversed_edges(g, reached))
     for packed in (True, False):
         t = _time(lambda p=packed: jax.block_until_ready(
-            engine.traverse(g, root, policy=pol,
-                            packed=p).state.parent))
+            engine.traverse(g, root, spec=engine.make_spec(
+                policy=pol, packed=p)).state.parent))
         tag = "packed" if packed else "unpacked"
         mb = membership_bytes(fmt, stats, packed=packed)
         emit(f"bfs_packed.rmat_s{scale}_{tag}", t * 1e6,

@@ -1,0 +1,72 @@
+"""Plan-cache micro-benchmark (ISSUE 5).
+
+Measures what the plan/compile/run layer buys the serving scenario:
+ONE engine trace per (geometry, resolved spec) no matter how many
+roots run — versus re-deciding/re-tracing knobs per call.  Emits:
+
+* ``bfs_plan_cache.traces_per_10_runs`` — engine traces 10 ``.run()``
+  calls of one plan cost (value; MUST be 1 — the CI-facing number).
+* ``bfs_plan_cache.plan_us`` — cost of a cache-hit ``plan()`` call
+  (spec resolution + cache lookup; the per-query overhead a serving
+  layer would pay if it re-planned every request).
+* ``bfs_plan_cache.cached_run`` — steady-state per-root wall time
+  through the cached executable (the serving hot path).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, graph
+
+
+def main(scale: int = 10, n_runs: int = 10):
+    import repro.api.plan as api_plan
+    import repro.bfs as bfs
+
+    g = graph(scale)
+    api_plan.clear_cache()
+    spec = bfs.TraversalSpec(policy="topdown")
+
+    ct = bfs.plan(g, spec)
+    rng = np.random.default_rng(7)
+    deg = np.asarray(g.degrees())
+    roots = rng.choice(np.nonzero(deg > 0)[0], size=n_runs,
+                       replace=False)
+
+    t0 = time.perf_counter()
+    for r in roots:
+        jax.block_until_ready(ct.run(int(r)).state.parent)
+    sec_all = time.perf_counter() - t0
+    traces = ct.traces
+    emit(f"bfs_plan_cache.traces_per_{n_runs}_runs",
+         sec_all * 1e6 / n_runs,
+         f"traces={traces};scale={scale}", value=traces)
+    assert traces <= 1, (
+        f"plan cache re-traced: {traces} traces / {n_runs} runs")
+
+    # cache-hit plan() cost: what re-planning per request would add
+    n_plan = 200
+    t0 = time.perf_counter()
+    for _ in range(n_plan):
+        ct2 = bfs.plan(g, spec)
+    plan_us = (time.perf_counter() - t0) * 1e6 / n_plan
+    assert ct2.executable is ct.executable
+    emit("bfs_plan_cache.plan_us", plan_us,
+         f"cache_hits={api_plan.cache_info()['hits']}", value=plan_us)
+
+    # steady-state cached run (serving hot path)
+    t0 = time.perf_counter()
+    for r in roots:
+        jax.block_until_ready(ct.run(int(r)).state.parent)
+    sec_warm = (time.perf_counter() - t0) / n_runs
+    teps = g.n_edges / 2 / sec_warm
+    emit("bfs_plan_cache.cached_run", sec_warm * 1e6,
+         f"{teps:.3e}_teps", value=teps)
+    return {"traces": traces, "plan_us": plan_us}
+
+
+if __name__ == "__main__":
+    main()

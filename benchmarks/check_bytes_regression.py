@@ -109,8 +109,8 @@ def _live_state_ratio() -> float:
 
     from benchmarks.bfs_layers import build_path_graph
     g = build_path_graph(256)
-    res = engine.traverse(g, 0, policy=engine.ThresholdSimd(0),
-                          max_layers=8)
+    res = engine.traverse(g, 0, spec=engine.make_spec(
+        policy=engine.ThresholdSimd(0), max_layers=8))
     frontier = res.state.frontier
     visited = res.state.visited
     assert frontier.dtype == jnp.uint32, frontier.dtype

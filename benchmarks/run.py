@@ -26,7 +26,7 @@ def main() -> None:
 
     from benchmarks import (affinity, bfs_batched, bfs_formats,
                             bfs_layers, bfs_opt_ablation, bfs_packed,
-                            bfs_scaling, lm_roofline)
+                            bfs_plan_cache, bfs_scaling, lm_roofline)
 
     layer_scale = 20 if args.paper_scale else (12 if args.quick else 16)
     abl_scale = 13 if not args.quick else 11
@@ -44,6 +44,8 @@ def main() -> None:
             scale=10 if args.quick else 12),
         "bfs_packed": lambda: bfs_packed.main(
             scale=10 if args.quick else 11),
+        "bfs_plan_cache": lambda: bfs_plan_cache.main(
+            scale=9 if args.quick else 10),
         "affinity": lambda: affinity.main(scale=abl_scale),
         "lm_roofline": lambda: lm_roofline.main(),
     }

@@ -1,9 +1,11 @@
 """Quickstart: the paper's pipeline end to end on a laptop-size graph.
 
-Generates a Graph500 RMAT graph, runs all four BFS variants (serial
-oracle, Algorithm 2, Algorithm 3 + restoration, §4 vectorized with
-Pallas kernels, hybrid), validates every tree, and prints the TEPS
-comparison table the paper's Fig. 9/10 are built from.
+Generates a Graph500 RMAT graph, then drives everything through the
+declarative API (`repro.bfs`): each paper variant (serial oracle
+aside) is ONE `TraversalSpec`, planned once (`bfs.plan` — autos
+resolved against the graph, one cached jit executable) and run for
+many roots.  Validates every tree and prints the TEPS comparison
+table the paper's Fig. 9/10 are built from.
 
     PYTHONPATH=src python examples/quickstart.py [--scale 14]
 """
@@ -14,12 +16,11 @@ import time
 import jax
 import numpy as np
 
+import repro.bfs as bfs
 from repro.core import csr as csr_mod
 from repro.core import rmat
-from repro.core.bfs_hybrid import run_bfs_hybrid
-from repro.core.bfs_parallel import parents_graph500, run_bfs
+from repro.core.bfs_parallel import parents_graph500
 from repro.core.bfs_serial import bfs_serial
-from repro.core.bfs_vectorized import run_bfs_vectorized
 from repro.core.stats import run_harness
 from repro.core.validate import validate
 
@@ -50,40 +51,48 @@ def main():
     print(f"   reached {int((d_ref >= 0).sum()):,} vertices, "
           f"depth {int(d_ref.max())}")
 
-    variants = {
-        "nonsimd (Alg. 2)": lambda c, r: run_bfs(c, r,
-                                                 algorithm="nonsimd"),
-        "bitmap+restoration (Alg. 3)": lambda c, r: run_bfs(
-            c, r, algorithm="simd"),
-        "vectorized kernels (§4)": run_bfs_vectorized,
-        "hybrid (beyond paper)": run_bfs_hybrid,
+    # each paper variant is one declarative spec; plan once, run many
+    specs = {
+        "nonsimd (Alg. 2)": bfs.TraversalSpec(policy="topdown",
+                                              algorithm="nonsimd"),
+        "bitmap+restoration (Alg. 3)": bfs.TraversalSpec(
+            policy="topdown"),
+        "vectorized kernels (§4)": bfs.TraversalSpec(
+            policy="threshold_simd"),
+        "hybrid (beyond paper)": bfs.TraversalSpec(policy="beamer"),
     }
-    for name, fn in variants.items():
-        state = fn(g, root)
+    plans = {name: bfs.plan(g, spec) for name, spec in specs.items()}
+    for name, ct in plans.items():
+        state = ct.run(root).state
         p = parents_graph500(state, g.n_vertices)
         res = validate(g, p, root, reference_depth=d_ref)
         assert res.ok, f"{name}: validation failed: {res}"
         print(f"   [valid] {name}")
 
+    auto = bfs.plan(g)          # every field "auto", resolved once
+    print(f"== auto plan resolves to: {auto.resolved.to_dict()}")
+
     print(f"== TEPS harness ({args.roots} random roots, harmonic mean)")
-    for name, fn in variants.items():
-        h = run_harness(g, fn, jax.random.PRNGKey(7),
-                        n_roots=args.roots)
+    for name, ct in plans.items():
+        h = run_harness(g, lambda c, r, ct=ct: ct.run(r).state,
+                        jax.random.PRNGKey(7), n_roots=args.roots)
         print(f"   {name:32s} {h.summary()}")
+    print(f"   plan cache: {bfs.plan_cache_info()} — every harness "
+          f"root reused its plan's one trace")
 
     print("== graph formats (§4.2's layout axis, repro/formats)")
-    from repro.core import engine
     from repro.formats import autotune, registry
     fmts = {name: registry.get(name).from_graph(g)
             for name in ("csr", "sell")}
     base = fmts["csr"].footprint().total_bytes
+    fmt_spec = bfs.TraversalSpec(policy="threshold_simd")
     for name, fmt in fmts.items():
         fp = fmt.footprint()
         extra = (f" fill={fmt.fill_ratio:.2f} slices_of_128"
                  if name == "sell" else "")
         print(f"   {fp.summary()}  ({fp.total_bytes/base:.2f}x csr)"
               f"{extra}")
-        state = engine.traverse(fmt, root).state
+        state = bfs.plan(fmt, fmt_spec).run(root).state
         res = validate(g, parents_graph500(state, g.n_vertices), root,
                        reference_depth=d_ref)
         assert res.ok, f"format {name}: validation failed: {res}"
@@ -92,8 +101,9 @@ def main():
 
     print(f"== batched multi-root engine ({args.roots} roots, 1 launch)")
     roots = [root + i for i in range(args.roots)]
+    ct = plans["bitmap+restoration (Alg. 3)"]
     t0 = time.perf_counter()
-    res = engine.traverse(g, roots, policy=engine.TopDown())
+    res = ct.run_batched(roots)
     jax.block_until_ready(res.state.parent)
     dt = time.perf_counter() - t0
     # depths counts active layers (= eccentricity + 1 from the root)

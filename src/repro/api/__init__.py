@@ -1,0 +1,15 @@
+"""Declarative traversal API: `TraversalSpec` + plan/compile/run.
+
+The public facade is `repro.bfs`; this package holds the pieces:
+`repro.api.spec` (the frozen configuration object + auto resolution +
+the ONE validation home) and `repro.api.plan` (the geometry+spec-keyed
+executable cache behind every entry point).
+
+Only the submodules are re-exported here — rebinding the ``plan``
+*function* onto the package would shadow the ``repro.api.plan``
+module attribute (import either the submodule or `repro.bfs`).
+"""
+from repro.api import plan as plan      # noqa: F401  (submodule)
+from repro.api import spec as spec      # noqa: F401  (submodule)
+
+__all__ = ["plan", "spec"]

@@ -1,0 +1,299 @@
+"""TraversalSpec — ONE declarative configuration object for every BFS.
+
+The paper's whole point is that a single traversal algorithm has many
+orthogonal tuning axes that must be co-selected per graph: the §4.1
+layer-adaptive direction decision, the §4.2 aligned tile unit, the §4
+vprefetch distance, the §3.3.1 packed-word representation.  Beamer et
+al. [2012] and the Buluç–Madduri survey frame the same set as a single
+*traversal configuration* chosen once per graph.  After PRs 1–4 this
+repo exposed those axes as seven loose keyword knobs copy-threaded
+through every entry point, each with its own ``static_argnames`` list
+and drifting defaults; `TraversalSpec` is the one frozen object that
+replaces the knob pile.
+
+Every field also accepts ``"auto"``; autos are resolved exactly ONCE,
+at plan time (`TraversalSpec.resolve`), against the graph's format —
+the tile auto consults the committed ``BENCH_bfs.json`` affinity sweep
+(`engine.default_tile_csr`), the policy auto consults the
+`formats.autotune` degree statistics — so ``CompiledTraversal.resolved``
+is always a fully-concrete, loggable, hashable record of what actually
+ran.
+
+Field → paper-knob map (the §-references are to the source paper):
+
+* ``policy``          — the §4.1 layer-adaptive direction decision
+  (which expansion flavour each layer runs).  A policy *object*
+  (`engine.TopDown` / `ThresholdSimd` / `PaperLiteralLayers` /
+  `BeamerHybrid`), a registered name string, or ``"auto"`` (degree
+  skew >= `autotune.SKEW_THRESHOLD` picks the Beamer hybrid, else the
+  edge-threshold SIMD switch).
+* ``algorithm``       — which scalar expander backs MODE_SCALAR
+  layers: ``"simd"`` (Algorithm 3: bitmaps + racy scatter +
+  restoration §3.3.2) or ``"nonsimd"`` (Algorithm 2: exact dense
+  updates).  Auto: ``"simd"``.
+* ``pipeline``        — the expansion gather pipeline:
+  ``"fused_gather"`` (in-kernel CSR gather + active-tile scheduling,
+  HBM traffic proportional to the frontier) or ``"materialized"``
+  (the legacy full-E edge stream; the ablation baseline).  Auto:
+  ``"fused_gather"``.
+* ``packed``          — §3.3.1's bitmap compression as the engine's
+  native per-layer representation (SIMD compaction kernel, V/8 mask
+  bytes per layer) vs the legacy dense-mask arm.  Auto: ``True``.
+* ``tile``            — §4.2's aligned unit: the fused pipeline's DMA
+  block and therefore its prefetch distance (format-defined units:
+  CSR rows-slots, SELL slabs per grid step).  Auto: the format's
+  `resolve_tile(None)` — for CSR the ``REPRO_BFS_TILE`` env override,
+  else the committed BENCH affinity-sweep argmin, else 1024.
+* ``prefetch_depth``  — §4's ``vprefetch0/vprefetch1`` distance as an
+  explicit knob: input-DMA tiles kept in flight ahead of the compute
+  tile in the gather kernels (0 = the BlockSpec pipeline's automatic
+  double buffering).  Auto: ``0``.  Invalid on the bitmap format,
+  which streams no edge tiles.
+* ``max_layers``      — static layer budget of the fused
+  ``lax.while_loop`` (and the serve engine's per-query safety valve).
+  Auto: ``64``.
+* ``merge``           — the distributed per-layer exchange:
+  ``"allreduce"`` (dense per-layer pmin), ``"owner"``
+  (owner-computes all_to_all; parent output is the LOCAL slice) or
+  ``"packed"`` (V/8-byte discovered-word all-gather + one post-loop
+  pmin — bit-identical tree to allreduce).  Auto: ``"packed"``, the
+  wire-optimal full-tree merge.  Ignored off-mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core import engine as _engine
+
+AUTO = "auto"
+
+_ALGORITHMS = ("simd", "nonsimd")
+_MERGES = ("allreduce", "owner", "packed")
+
+#: registered policy names <-> engine policy classes
+POLICIES = {
+    "topdown": _engine.TopDown,
+    "threshold_simd": _engine.ThresholdSimd,
+    "paper_layers": _engine.PaperLiteralLayers,
+    "beamer": _engine.BeamerHybrid,
+}
+_POLICY_NAMES = {cls: name for name, cls in POLICIES.items()}
+
+
+def _is_policy(obj: Any) -> bool:
+    """Duck-typed DirectionPolicy: decides a mode from a Workload."""
+    return callable(getattr(obj, "decide", None)) \
+        and hasattr(obj, "modes")
+
+
+def as_format(graph):
+    """View whatever the caller holds as a built `GraphFormat`.
+
+    Csr and EdgeList are wrapped as `CsrFormat` (no silent re-layout —
+    picking a different layout is `formats.autotune.build`'s job);
+    built formats pass through.
+    """
+    from repro.core.csr import Csr, from_edges
+    from repro.core.rmat import EdgeList
+    from repro.formats.base import GraphFormat
+    from repro.formats.csr_format import CsrFormat
+    if isinstance(graph, GraphFormat):
+        return graph
+    if isinstance(graph, Csr):
+        return CsrFormat.from_csr(graph)
+    if isinstance(graph, EdgeList):
+        return CsrFormat.from_csr(from_edges(graph))
+    raise TypeError(
+        f"cannot plan a traversal over {type(graph).__name__}; expected "
+        f"a Csr, EdgeList or built GraphFormat")
+
+
+#: spec fields the distributed per-chip program (a fixed top-down
+#: rowsweep) cannot honor — it consumes only merge/max_layers
+MESH_IGNORED_FIELDS = ("policy", "algorithm", "pipeline", "packed",
+                       "tile", "prefetch_depth")
+
+
+def warn_mesh_ignored_fields(spec: "TraversalSpec", entry: str) -> None:
+    """The ONE mesh-path contract warning (shared by
+    `run_bfs_distributed` and mesh-bound `plan`): flag explicitly-set
+    fields the fixed per-chip program ignores.  A fully-resolved spec
+    passes silently — its concrete fields are resolution artifacts,
+    not user intent."""
+    if spec.is_resolved:
+        return
+    ignored = [f for f in MESH_IGNORED_FIELDS
+               if getattr(spec, f) != AUTO]
+    if ignored:
+        import warnings
+        warnings.warn(
+            f"{entry}: the distributed per-chip program is a fixed "
+            f"top-down rowsweep; spec fields {ignored} are ignored "
+            f"(only merge/max_layers apply)",
+            UserWarning, stacklevel=3)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraversalSpec:
+    """Frozen, hashable traversal configuration (see module docstring
+    for the field → paper-knob map).  Every field accepts ``"auto"``;
+    `resolve` turns autos into concrete values exactly once, and
+    `validate` rejects invalid values/combinations in ONE place with
+    actionable messages."""
+
+    policy: Any = AUTO
+    algorithm: str = AUTO
+    pipeline: str = AUTO
+    packed: Any = AUTO            # bool | "auto"
+    tile: Any = AUTO              # positive int | "auto"
+    prefetch_depth: Any = AUTO    # int >= 0 | "auto"
+    max_layers: Any = AUTO        # int >= 1 | "auto"
+    merge: str = AUTO
+
+    # -- introspection ---------------------------------------------------
+    @classmethod
+    def field_names(cls) -> tuple[str, ...]:
+        return tuple(f.name for f in dataclasses.fields(cls))
+
+    @property
+    def is_resolved(self) -> bool:
+        """True iff no field is ``"auto"`` and policy is an object."""
+        return (not any(getattr(self, f) == AUTO
+                        for f in self.field_names())
+                and _is_policy(self.policy))
+
+    def replace(self, **changes) -> "TraversalSpec":
+        return dataclasses.replace(self, **changes)
+
+    # -- validation (the ONE home of combination checks) -----------------
+    def validate(self, fmt=None) -> "TraversalSpec":
+        """Reject invalid values and invalid (spec, format) combos.
+
+        Called standalone it checks every non-``"auto"`` field value;
+        with ``fmt`` it additionally rejects combinations the format
+        cannot honor (e.g. ``prefetch_depth > 0`` on the bitmap
+        layout).  Returns self so call sites can chain."""
+        p = self.policy
+        if not (_is_policy(p) or p == AUTO or
+                (isinstance(p, str) and p in POLICIES)):
+            raise ValueError(
+                f"unknown policy {p!r}; expected a DirectionPolicy "
+                f"object, one of {sorted(POLICIES)}, or 'auto'")
+        if self.algorithm != AUTO and self.algorithm not in _ALGORITHMS:
+            raise ValueError(
+                f"unknown scalar algorithm {self.algorithm!r}; expected "
+                f"one of {_ALGORITHMS} or 'auto'")
+        if self.pipeline != AUTO:
+            _engine.check_pipeline(self.pipeline)
+        if self.merge != AUTO and self.merge not in _MERGES:
+            raise ValueError(
+                f"unknown merge {self.merge!r}; expected one of "
+                f"{_MERGES} or 'auto' (merge only matters with a mesh)")
+        if self.packed != AUTO and not isinstance(self.packed, bool):
+            raise ValueError(
+                f"packed must be True, False or 'auto', got "
+                f"{self.packed!r}")
+        if self.tile != AUTO and (not isinstance(self.tile, int)
+                                  or isinstance(self.tile, bool)
+                                  or self.tile < 1):
+            raise ValueError(
+                f"tile must be a positive int or 'auto', got "
+                f"{self.tile!r}")
+        if self.prefetch_depth != AUTO and (
+                not isinstance(self.prefetch_depth, int)
+                or isinstance(self.prefetch_depth, bool)
+                or self.prefetch_depth < 0):
+            raise ValueError(
+                f"prefetch_depth must be an int >= 0 or 'auto', got "
+                f"{self.prefetch_depth!r}")
+        if self.max_layers != AUTO and (
+                not isinstance(self.max_layers, int)
+                or isinstance(self.max_layers, bool)
+                or self.max_layers < 1):
+            raise ValueError(
+                f"max_layers must be an int >= 1 or 'auto', got "
+                f"{self.max_layers!r}")
+        if fmt is not None:
+            depth = self.prefetch_depth
+            if isinstance(depth, int) and depth > 0 \
+                    and not getattr(fmt, "supports_prefetch", True):
+                raise ValueError(
+                    f"prefetch_depth={depth} is invalid for the "
+                    f"{getattr(fmt, 'name', type(fmt).__name__)!r} "
+                    f"format: it streams no edge tiles to prefetch "
+                    f"(supports_prefetch=False) — use prefetch_depth=0 "
+                    f"(or 'auto'), or pick a streamed layout like "
+                    f"'csr'/'sell'")
+        return self
+
+    # -- auto resolution (exactly once, at plan time) --------------------
+    def resolve(self, graph) -> "TraversalSpec":
+        """Resolve every ``"auto"`` against the graph's format.
+
+        Deterministic given the graph and the committed
+        ``BENCH_bfs.json`` (the tile affinity table).  The returned
+        spec `is_resolved` and has been validated against the format.
+        Requires a concrete graph when ``policy="auto"`` (the degree
+        statistics must be readable); every other auto resolves from
+        static geometry alone, so tracer-held formats (e.g. inside a
+        jitted legacy shim) resolve fine with a concrete policy.
+        """
+        self.validate()
+        fmt = as_format(graph)
+        policy = self.policy
+        if policy == AUTO:
+            from repro.formats import autotune
+            s = autotune.measure(fmt)
+            policy = (_engine.BeamerHybrid()
+                      if s.degree_skew >= autotune.SKEW_THRESHOLD
+                      else _engine.ThresholdSimd())
+        elif isinstance(policy, str):
+            policy = POLICIES[policy]()
+        tile = fmt.resolve_tile(None if self.tile == AUTO else self.tile)
+        resolved = self.replace(
+            policy=policy,
+            algorithm="simd" if self.algorithm == AUTO else self.algorithm,
+            pipeline=("fused_gather" if self.pipeline == AUTO
+                      else self.pipeline),
+            packed=True if self.packed == AUTO else self.packed,
+            tile=int(tile),
+            prefetch_depth=(0 if self.prefetch_depth == AUTO
+                            else self.prefetch_depth),
+            max_layers=64 if self.max_layers == AUTO else self.max_layers,
+            merge="packed" if self.merge == AUTO else self.merge)
+        return resolved.validate(fmt)
+
+    # -- serialization ---------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-ready dict; policy objects serialize as
+        ``{"name": ..., "params": {...}}`` (tuples become lists)."""
+        d = {f: getattr(self, f) for f in self.field_names()}
+        p = self.policy
+        if _is_policy(p):
+            cls = type(p)
+            if cls not in _POLICY_NAMES:
+                raise ValueError(
+                    f"cannot serialize unregistered policy class "
+                    f"{cls.__name__}; register it in spec.POLICIES")
+            params = {k: (list(v) if isinstance(v, tuple) else v)
+                      for k, v in dataclasses.asdict(p).items()}
+            d["policy"] = {"name": _POLICY_NAMES[cls], "params": params}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TraversalSpec":
+        """Inverse of `to_dict` (round-trips to an equal spec)."""
+        unknown = set(d) - set(cls.field_names())
+        if unknown:
+            raise ValueError(
+                f"unknown TraversalSpec fields {sorted(unknown)}; "
+                f"expected a subset of {cls.field_names()}")
+        kw = dict(d)
+        p = kw.get("policy")
+        if isinstance(p, dict):
+            pol_cls = POLICIES[p["name"]]
+            params = {k: (tuple(v) if isinstance(v, list) else v)
+                      for k, v in p.get("params", {}).items()}
+            kw["policy"] = pol_cls(**params)
+        return cls(**kw).validate()

@@ -1,0 +1,51 @@
+"""repro.bfs — the public BFS surface.
+
+One declarative configuration object (`TraversalSpec`) and a
+plan/compile/run layer (`plan` -> `CompiledTraversal`) sit behind
+every entry point:
+
+    import repro.bfs as bfs
+
+    spec = bfs.TraversalSpec(policy="beamer", max_layers=128)
+    ct = bfs.plan(graph, spec)        # autos resolved ONCE, cached jit
+    res = ct.run(17)                  # or ct.run_batched([3, 7, 11])
+    ct.resolved                       # the concrete spec that ran
+    ct.stats(res)                     # Table 1 per-layer counters
+
+The legacy loose-knob entry points (`repro.core.engine.traverse*`,
+`bfs_parallel.run_bfs`, ...) survive as thin shims over the same plan
+cache; new code should use this module.  ``__all__`` is the frozen
+public surface (tests/test_api_surface.py fails CI on accidental
+changes).
+"""
+from __future__ import annotations
+
+from repro.api.plan import (CompiledTraversal, cache_info as
+                            plan_cache_info, clear_cache as
+                            clear_plan_cache, plan)
+from repro.api.spec import POLICIES, TraversalSpec
+from repro.core.bfs_parallel import parents_graph500
+from repro.core.engine import (BeamerHybrid, BfsState, EngineResult,
+                               LayerStats, PaperLiteralLayers,
+                               ThresholdSimd, TopDown, direction_log,
+                               layer_stats, traverse)
+
+__all__ = [
+    "BeamerHybrid",
+    "BfsState",
+    "CompiledTraversal",
+    "EngineResult",
+    "LayerStats",
+    "POLICIES",
+    "PaperLiteralLayers",
+    "ThresholdSimd",
+    "TopDown",
+    "TraversalSpec",
+    "clear_plan_cache",
+    "direction_log",
+    "layer_stats",
+    "parents_graph500",
+    "plan",
+    "plan_cache_info",
+    "traverse",
+]

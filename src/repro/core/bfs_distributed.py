@@ -300,15 +300,41 @@ def _run(mesh, axis_names, n_vertices, max_layers, merge, rows_sh,
 
 def run_bfs_distributed(csr: Csr, root: int, mesh,
                         axis_names: tuple[str, ...] | None = None,
-                        max_layers: int = 64, slack: float = 1.5,
-                        merge: str = "allreduce"):
+                        max_layers: int | None = None,
+                        slack: float = 1.5,
+                        merge: str | None = None, spec=None):
     """Partition + run the distributed BFS on a mesh. Returns (P, depth_count).
+
+    The per-chip program derives from the same resolved
+    `TraversalSpec` as every single-chip entry point: pass ``spec=``
+    and its ``merge``/``max_layers`` fields govern the exchange
+    flavour and layer budget (``merge="auto"`` resolves to "packed",
+    the wire-optimal full-tree merge).  The loose ``max_layers=`` /
+    ``merge=`` kwargs keep their historical defaults (64,
+    "allreduce") and may not be mixed with ``spec=``.
 
     P follows the internal convention (INF == V for unreached); use
     ``jnp.where(p >= V, -1, p)`` for Graph500 convention.  With
     merge="owner" (§Perf optimization) each chip keeps only its P
     slice during the search; the concatenated result is identical.
     """
+    if spec is not None:
+        if max_layers is not None or merge is not None:
+            raise ValueError(
+                "run_bfs_distributed: pass either spec= or the loose "
+                "max_layers=/merge= knobs, not both")
+        from repro.api.spec import as_format, warn_mesh_ignored_fields
+        warn_mesh_ignored_fields(spec, "run_bfs_distributed")
+        # the program never reads policy: pin an arbitrary concrete
+        # one before resolving so policy="auto" doesn't pay the
+        # autotune degree measurement per launch
+        probe = (spec.replace(policy="topdown")
+                 if spec.policy == "auto" else spec)
+        resolved = probe.resolve(as_format(csr))
+        max_layers, merge = resolved.max_layers, resolved.merge
+    else:
+        max_layers = 64 if max_layers is None else max_layers
+        merge = "allreduce" if merge is None else merge
     axis_names = axis_names or tuple(mesh.axis_names)
     n_devices = int(np.prod([mesh.shape[a] for a in axis_names]))
     rows_sh, colstarts_sh = partition_csr(csr, n_devices, slack)

@@ -35,8 +35,10 @@ def run_bfs_hybrid(csr: Csr, root, *, alpha: float = 14.0,
     log holds one "topdown"/"bottomup" entry per executed layer.
     """
     policy = engine.BeamerHybrid(float(alpha), float(beta))
-    res = engine.traverse(csr, root, policy=policy, tile=tile,
-                          max_layers=max_layers)
+    from repro.api.plan import plan as _plan
+    spec = engine.make_spec(policy=policy, tile=tile,
+                            max_layers=max_layers)
+    res = _plan(csr, spec).run(root)
     if collect_stats:
         return res.state, engine.direction_log(res)
     return res.state

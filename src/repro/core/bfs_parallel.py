@@ -63,16 +63,20 @@ def expand_nonsimd(colstarts, rows, n_vertices: int, state: BfsState,
 def run_bfs(csr: Csr, root, *, algorithm: str = "simd",
             collect_stats: bool = False, max_layers: int = 1024,
             policy=None, tile: int | None = None):
-    """Fused single-launch BFS driver (engine-backed).
+    """Fused single-launch BFS driver (plan-cache-backed).
 
     Args unchanged from the historical bucketed driver; additionally
     accepts ``policy`` (any `engine` direction policy — default
     `engine.TopDown()`) and ``tile`` for policies that use the SIMD
     kernel.  ``root`` may be a sequence for batched multi-root search
-    (state arrays then carry a leading root axis).
+    (state arrays then carry a leading root axis).  Routes through
+    `repro.bfs.plan`'s cached `CompiledTraversal` (one trace per
+    (geometry, resolved spec)).
     """
-    res = engine.traverse(csr, root, policy=policy, algorithm=algorithm,
-                          tile=tile, max_layers=max_layers)
+    from repro.api.plan import plan as _plan
+    spec = engine.make_spec(policy=policy, algorithm=algorithm,
+                            tile=tile, max_layers=max_layers)
+    res = _plan(csr, spec).run(root)
     if collect_stats:
         return res.state, engine.layer_stats(res)
     return res.state
@@ -84,12 +88,17 @@ def run_bfs_jit(colstarts, rows, root, n_vertices: int,
     """Fully-jitted driver on raw arrays (static full-E shapes).
 
     Alias for the engine's fused loop; used for ``.lower()``/dry-run
-    paths that only have arrays, not a `Csr`.
+    paths that only have arrays, not a `Csr`.  Builds its spec
+    explicitly (a concrete policy — "auto" resolution needs concrete
+    degree statistics, unavailable under trace) and routes through the
+    plan cache like every other entry.
     """
+    from repro.api.spec import TraversalSpec
     res = engine.traverse_arrays(
         colstarts, rows, jnp.reshape(jnp.asarray(root, jnp.int32), (1,)),
-        n_vertices=n_vertices, algorithm=algorithm,
-        max_layers=max_layers)
+        n_vertices=n_vertices,
+        spec=TraversalSpec(policy=engine.TopDown(), algorithm=algorithm,
+                           max_layers=max_layers))
     st = res.state
     return BfsState(st.frontier[0], st.visited[0], st.parent[0],
                     st.layer)

@@ -52,8 +52,10 @@ def run_bfs_vectorized(csr: Csr, root, *,
                                                  for l in simd_layers))
     else:
         policy = engine.ThresholdSimd(int(simd_threshold))
-    res = engine.traverse(csr, root, policy=policy, tile=tile,
-                          max_layers=max_layers)
+    from repro.api.plan import plan as _plan
+    spec = engine.make_spec(policy=policy, tile=tile,
+                            max_layers=max_layers)
+    res = _plan(csr, spec).run(root)
     if collect_stats:
         return res.state, engine.layer_stats(res)
     return res.state

@@ -85,6 +85,7 @@ from __future__ import annotations
 
 import functools
 import operator
+import warnings
 from dataclasses import dataclass
 from typing import NamedTuple
 
@@ -846,34 +847,36 @@ def _init_batched(roots, n_vertices: int, v_pad: int):
     )(roots.astype(jnp.int32))
 
 
-def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
-                   max_layers: int, pipeline: str = "fused_gather",
-                   packed: bool = True,
-                   prefetch_depth: int = 0) -> EngineResult:
+def _traverse_impl(fmt, roots, spec) -> EngineResult:
     """The fused engine body, generic over a `formats.GraphFormat`.
 
-    Every per-layer step (scalar / SIMD kernel / bottom-up) is built
-    by the *format* — the layout owns its gather primitive and its
-    ``pipeline`` flavour (fused in-kernel gather vs materialized
-    stream) — while the measure/decide/restore pipeline and the single
-    ``lax.while_loop`` stay layout-independent.  ``roots`` is a (B,)
-    int32 array; every state array carries the leading root axis.  No
-    host synchronization between layers.
+    ``spec`` is a *resolved* `repro.api.spec.TraversalSpec` — the one
+    configuration object every knob now lives on (policy, algorithm,
+    pipeline, packed, tile, prefetch_depth, max_layers).  Every
+    per-layer step (scalar / SIMD kernel / bottom-up) is built by the
+    *format* (``fmt.make_steps(spec)``) — the layout owns its gather
+    primitive and its ``pipeline`` flavour — while the
+    measure/decide/restore pipeline and the single ``lax.while_loop``
+    stay layout-independent.  ``roots`` is a (B,) int32 array; every
+    state array carries the leading root axis.  No host
+    synchronization between layers.
 
-    ``packed=True`` (the native representation since ISSUE 4) keeps
-    the whole per-layer pipeline on packed uint32 words: workload
-    counters come from word popcounts and the word-aligned degree
-    matrix, planning/compaction run the SIMD rank-and-scatter kernel —
-    per-layer mask traffic is V/8 bytes instead of the 4V-byte dense
-    masks the ``packed=False`` (legacy parity) arm materializes.
+    ``spec.packed=True`` (the native representation since ISSUE 4)
+    keeps the whole per-layer pipeline on packed uint32 words:
+    workload counters come from word popcounts and the word-aligned
+    degree matrix, planning/compaction run the SIMD rank-and-scatter
+    kernel — per-layer mask traffic is V/8 bytes instead of the
+    4V-byte dense masks the ``packed=False`` (legacy parity) arm
+    materializes.
     """
+    policy = spec.policy
+    packed = spec.packed
+    max_layers = spec.max_layers
     n_vertices = fmt.n_vertices
     v_pad = fmt.n_vertices_padded
     deg = fmt.degrees()
     deg_mat = bm.degree_matrix(deg, v_pad)     # loop constant
-    steps = fmt.make_steps(algorithm=algorithm, tile=tile,
-                           pipeline=pipeline, packed=packed,
-                           prefetch_depth=prefetch_depth)
+    steps = fmt.make_steps(spec)
     modes = tuple(policy.modes)
 
     def rows_workload(words):          # (B, W) -> per-root counters
@@ -950,55 +953,115 @@ def _traverse_impl(fmt, roots, policy, algorithm: str, tile: int,
                         depths, stats)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n_vertices", "policy", "algorithm",
-                              "tile", "max_layers", "pipeline",
-                              "packed", "prefetch_depth"))
+_UNSET = object()       # legacy-shim sentinel: "knob not passed"
+
+_KNOB_DEFAULTS = dict(policy=None, algorithm="simd", tile=None,
+                      max_layers=64, pipeline="fused_gather",
+                      packed=True, prefetch_depth=0)
+
+
+def _spec_from_knobs(entry: str, spec, knobs: dict):
+    """The legacy shims' single spec builder.
+
+    ``knobs`` maps knob name -> value-or-_UNSET.  Explicit loose knobs
+    emit the DeprecationWarning (the spec is the supported surface);
+    mixing ``spec=`` with loose knobs is an error.  Returns an
+    *unresolved* spec — resolution happens once, in `api.plan.plan`.
+    """
+    explicit = {k: v for k, v in knobs.items() if v is not _UNSET}
+    if spec is not None:
+        if explicit:
+            raise ValueError(
+                f"{entry}: pass either spec= or the loose knobs "
+                f"({sorted(explicit)}), not both")
+        return spec
+    if explicit:
+        warnings.warn(
+            f"{entry}: the loose-knob form "
+            f"({', '.join(sorted(explicit))}) is deprecated; pass "
+            f"spec=repro.bfs.TraversalSpec(...) instead",
+            DeprecationWarning, stacklevel=3)
+    return make_spec(**{**_KNOB_DEFAULTS, **explicit})
+
+
+def make_spec(*, policy=None, algorithm: str = "simd",
+              tile: int | None = None, max_layers: int = 64,
+              pipeline: str = "fused_gather", packed: bool = True,
+              prefetch_depth: int = 0):
+    """Build a `TraversalSpec` from legacy-style knob values — the ONE
+    knob->spec constructor (``policy=None`` -> `TopDown()`,
+    ``tile=None`` -> the format's auto rule).  Shared by the deprecated
+    shims (via `_spec_from_knobs`) and the `run_bfs*` wrapper drivers,
+    so the legacy default mapping cannot drift between surfaces."""
+    from repro.api.spec import TraversalSpec
+    return TraversalSpec(
+        policy=policy if policy is not None else TopDown(),
+        algorithm=algorithm,
+        pipeline=pipeline,
+        packed=packed,
+        tile="auto" if tile is None else tile,
+        prefetch_depth=prefetch_depth,
+        max_layers=max_layers)
+
+
 def traverse_arrays(colstarts, rows, roots, *, n_vertices: int,
-                    policy=TopDown(), algorithm: str = "simd",
-                    tile: int = 1024, max_layers: int = 64,
-                    pipeline: str = "fused_gather", packed: bool = True,
-                    prefetch_depth: int = 0) -> EngineResult:
+                    policy=_UNSET, algorithm=_UNSET, tile=_UNSET,
+                    max_layers=_UNSET, pipeline=_UNSET, packed=_UNSET,
+                    prefetch_depth=_UNSET, spec=None) -> EngineResult:
     """The fused engine on raw CSR arrays (shard_map/dry-run friendly).
 
     Kept as the array-level entry for callers that only hold arrays,
     not a `Csr` (distributed per-chip programs, ``.lower()`` dry
-    runs).  Internally the arrays are viewed through `CsrFormat`, so
-    the layer steps dispatch through the format's gather primitive
-    like every other layout.
+    runs).  A thin shim over `repro.api.plan` since ISSUE 5: the
+    arrays are viewed through `CsrFormat` and the loose knobs
+    (deprecated — pass ``spec=``) become a `TraversalSpec`, so this
+    entry shares the plan cache's one executable per (geometry,
+    resolved spec).  ``tile`` now defaults to the format's auto choice
+    (the committed BENCH affinity sweep), not a hardwired 1024 — the
+    resolved spec is the single source of truth.
     """
+    from repro.api.plan import plan as _plan
     from repro.formats.csr_format import CsrFormat
     fmt = CsrFormat(colstarts, rows, n_vertices, int(rows.shape[0]))
-    return _traverse_impl(fmt, roots, policy, algorithm, tile,
-                          max_layers, pipeline, packed, prefetch_depth)
+    s = _spec_from_knobs(
+        "traverse_arrays", spec,
+        dict(policy=policy, algorithm=algorithm, tile=tile,
+             max_layers=max_layers, pipeline=pipeline, packed=packed,
+             prefetch_depth=prefetch_depth))
+    return _plan(fmt, s).run_batched(roots)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("policy", "algorithm", "tile",
-                              "max_layers", "pipeline", "packed",
-                              "prefetch_depth"))
-def traverse_format(fmt, roots, *, policy=TopDown(),
-                    algorithm: str = "simd", tile: int = 1,
-                    max_layers: int = 64,
-                    pipeline: str = "fused_gather", packed: bool = True,
-                    prefetch_depth: int = 0) -> EngineResult:
+def traverse_format(fmt, roots, *, policy=_UNSET, algorithm=_UNSET,
+                    tile=_UNSET, max_layers=_UNSET, pipeline=_UNSET,
+                    packed=_UNSET, prefetch_depth=_UNSET,
+                    spec=None) -> EngineResult:
     """The fused engine on any registered `GraphFormat` pytree.
 
-    ``fmt``'s arrays are traced leaves and its shape metadata is
-    static aux data, so one compile per (format class, geometry).
-    ``tile`` must already be resolved (`fmt.resolve_tile`) — its
-    meaning is format-defined (CSR: edge-stream tile; SELL: slabs per
-    grid step; bitmap: unused).
+    A thin shim over `repro.api.plan` since ISSUE 5 (one compile per
+    (format class, geometry, resolved spec)).  ``tile`` now defaults
+    to the *format's* auto choice — the old ``tile=1`` default
+    silently degraded callers that bypassed `fmt.resolve_tile`; the
+    resolved spec is the single source of truth.
     """
-    return _traverse_impl(fmt, roots, policy, algorithm, tile,
-                          max_layers, pipeline, packed, prefetch_depth)
+    from repro.api.plan import plan as _plan
+    s = _spec_from_knobs(
+        "traverse_format", spec,
+        dict(policy=policy, algorithm=algorithm, tile=tile,
+             max_layers=max_layers, pipeline=pipeline, packed=packed,
+             prefetch_depth=prefetch_depth))
+    return _plan(fmt, s).run_batched(roots)
 
 
-def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
-             tile: int | None = None, max_layers: int = 64,
-             pipeline: str = "fused_gather", packed: bool = True,
-             prefetch_depth: int = 0) -> EngineResult:
+def traverse(graph, roots, *, policy=_UNSET, algorithm=_UNSET,
+             tile=_UNSET, max_layers=_UNSET, pipeline=_UNSET,
+             packed=_UNSET, prefetch_depth=_UNSET,
+             spec=None) -> EngineResult:
     """Run the fused engine for one root or a batch of roots.
+
+    A thin shim over `repro.api.plan`/`repro.bfs` since ISSUE 5: all
+    knobs live on ONE `TraversalSpec` (pass ``spec=``; the loose
+    keyword form below is deprecated but preserved), resolved once and
+    compiled once per (format class, geometry, resolved spec).
 
     Args:
       graph: a `Csr` (traversed via `CsrFormat`) or any built
@@ -1006,51 +1069,26 @@ def traverse(graph, roots, *, policy=None, algorithm: str = "simd",
       roots: an int (single-root — result arrays are unbatched) or a
         sequence of ints (multi-root in one launch; every result array
         gains a leading root axis).
-      policy: a direction policy object (default `TopDown()`).
-      algorithm: "simd" | "nonsimd" — which scalar expander backs
-        ``MODE_SCALAR`` layers.
-      tile: format-defined tile override (None = the format's auto
-        choice; the format owns tile selection — §4.2's aligned unit
-        is a property of the layout).
-      pipeline: "fused_gather" (default — in-kernel CSR gather +
-        active-tile scheduling, HBM traffic proportional to the
-        frontier) | "materialized" (legacy full-E edge stream; the
-        ablation baseline).
-      packed: True (default — packed uint32 words are the native
-        frontier/visited representation through the whole layer:
-        SIMD-kernel compaction, word-matrix workload counters, V/8
-        mask bytes per layer) | False (the legacy dense-mask planning
-        arm, kept as the parity/ablation baseline).
-      prefetch_depth: tiles of input DMA kept in flight ahead of the
-        compute tile in the gather kernels (0 = the BlockSpec
-        pipeline's automatic double buffering; >0 = the manual
-        `make_async_copy` pipeline with depth+1 buffers — the §4
-        prefetch-distance knob).
+      spec: a `repro.bfs.TraversalSpec`; its fields are the one home
+        of the former loose knobs (policy, algorithm, pipeline,
+        packed, tile, prefetch_depth, max_layers — see the spec's
+        docstring for the field -> paper-knob map).
+      policy/algorithm/tile/max_layers/pipeline/packed/prefetch_depth:
+        deprecated loose-knob form; same semantics as the spec fields
+        (policy=None -> TopDown(), tile=None -> the format's auto
+        choice).
 
     In batched mode the policy decides ONCE per layer from the
     batch-summed counters (one mode for the whole batch keeps the loop
     single-branch); finished roots flow through as no-ops.
     """
-    if algorithm not in ("simd", "nonsimd"):
-        raise ValueError(f"unknown scalar algorithm {algorithm!r}")
-    check_pipeline(pipeline)
-    from repro.formats.csr_format import CsrFormat
-    fmt = CsrFormat.from_csr(graph) if isinstance(graph, Csr) else graph
-    single = jnp.ndim(roots) == 0
-    roots_arr = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
-    res = traverse_format(
-        fmt, roots_arr,
-        policy=policy if policy is not None else TopDown(),
-        algorithm=algorithm, tile=fmt.resolve_tile(tile),
-        max_layers=max_layers, pipeline=pipeline, packed=packed,
-        prefetch_depth=prefetch_depth)
-    if single:
-        st = res.state
-        return EngineResult(
-            BfsState(st.frontier[0], st.visited[0], st.parent[0],
-                     st.layer),
-            res.depths[0], res.stats)
-    return res
+    from repro.api.plan import plan as _plan
+    s = _spec_from_knobs(
+        "traverse", spec,
+        dict(policy=policy, algorithm=algorithm, tile=tile,
+             max_layers=max_layers, pipeline=pipeline, packed=packed,
+             prefetch_depth=prefetch_depth))
+    return _plan(graph, s).run(roots)
 
 
 def layer_stats(result: EngineResult) -> list[LayerStats]:
@@ -1100,31 +1138,30 @@ def layer_step(colstarts, rows, frontier, visited, parent, *,
     return step(frontier, visited, parent)[:3]
 
 
-@functools.partial(jax.jit, static_argnames=("algorithm", "pipeline",
-                                             "packed",
-                                             "prefetch_depth"))
 def layer_step_format(fmt, frontier, visited, parent, *,
-                      algorithm: str = "simd",
-                      pipeline: str = "fused_gather",
-                      packed: bool = True, prefetch_depth: int = 0):
+                      algorithm=_UNSET, pipeline=_UNSET, packed=_UNSET,
+                      prefetch_depth=_UNSET, spec=None):
     """Format-generic one-layer tick (the serve engine's step).
 
     Same contract as `layer_step`, but the per-layer step comes from
-    the graph format (`fmt.make_steps`) — the serve layer picks the
-    layout per graph at load time and ticks through it.  Since ISSUE 3
-    the ``algorithm="simd"`` tick routes through the format's SIMD
-    step — for CSR that is the fused in-kernel gather, so a serve
-    batch full of thin frontiers (or drained slots, n_active == 0)
-    costs tiles proportional to the live work instead of E_pad/tile.
-    Serve batch shapes never change, so this compiles once per
-    (format geometry, batch shape).
+    the graph format (`fmt.make_steps(spec)`) — the serve layer picks
+    the layout per graph at load time and ticks through it.  A thin
+    shim over the plan cache's single-layer executable since ISSUE 5
+    (`serve.graph_engine.GraphEngine` holds its `CompiledTraversal`
+    directly and skips this shim).  Since ISSUE 3 the
+    ``algorithm="simd"`` tick routes through the format's SIMD step —
+    for CSR that is the fused in-kernel gather, so a serve batch full
+    of thin frontiers (or drained slots, n_active == 0) costs tiles
+    proportional to the live work instead of E_pad/tile.  Serve batch
+    shapes never change, so this compiles once per (format geometry,
+    resolved spec, batch shape).
     """
-    steps = fmt.make_steps(algorithm=algorithm,
-                           tile=fmt.resolve_tile(None),
-                           pipeline=pipeline, packed=packed,
-                           prefetch_depth=prefetch_depth)
-    mode = MODE_SIMD if algorithm == "simd" else MODE_SCALAR
-    return steps[mode](frontier, visited, parent)[:3]
+    from repro.api.plan import plan as _plan
+    s = _spec_from_knobs(
+        "layer_step_format", spec,
+        dict(algorithm=algorithm, pipeline=pipeline, packed=packed,
+             prefetch_depth=prefetch_depth))
+    return _plan(fmt, s).layer_step(frontier, visited, parent)
 
 
 # ---------------------------------------------------------------------------

@@ -94,6 +94,12 @@ class GraphFormat(abc.ABC):
 
     name: ClassVar[str]
 
+    #: whether the layout streams edge tiles an input-DMA pipeline can
+    #: run ahead of (``TraversalSpec.prefetch_depth > 0``); formats
+    #: with no streamed input (the bitmap word sweep) set this False
+    #: and `spec.validate(fmt)` rejects the combination
+    supports_prefetch: ClassVar[bool] = True
+
     # -- construction ----------------------------------------------------
     @classmethod
     @abc.abstractmethod
@@ -150,35 +156,63 @@ class GraphFormat(abc.ABC):
     def degrees(self) -> jax.Array:
         """(V,) int32 out-degrees — the Table 1 workload counter input."""
 
-    @abc.abstractmethod
-    def make_steps(self, *, algorithm: str, tile: int,
-                   pipeline: str = "fused_gather", packed: bool = True,
-                   prefetch_depth: int = 0) -> dict:
+    def make_steps(self, spec=None, *, algorithm=None, tile=None,
+                   pipeline=None, packed=None,
+                   prefetch_depth=None) -> dict:
         """Batched per-layer steps keyed by engine mode.
+
+        Since ISSUE 5 the configuration argument is ONE resolved
+        `repro.api.spec.TraversalSpec` — validated here against this
+        format (`spec.validate(fmt)`, the single home of invalid-combo
+        rejection) and handed to the format's `_build_steps`.  The
+        loose keyword form (``algorithm=/tile=/...``) is deprecated
+        but still accepted: it is normalized into a spec (tile through
+        `resolve_tile`) and follows the same path.
 
         Returns ``{MODE_SCALAR: fn, MODE_SIMD: fn, MODE_BOTTOMUP: fn}``
         where each ``fn(frontier, visited, parent)`` advances every
         root in the leading batch axis by one layer and returns
         ``(out, visited, parent, engine.StepAux)``.
 
-        ``pipeline`` is "fused_gather" (frontier-proportional traffic:
-        active-tile work-lists + in-kernel gather where the layout
-        supports it) or "materialized" (the legacy full-stream /
-        full-sweep steps).  Formats whose one sweep serves both (the
-        bitmap layout) may ignore it.
-
-        ``packed`` (ISSUE 4, default True) keeps the step's planning/
-        compaction on packed uint32 words (the SIMD compaction kernel,
-        V/8 mask bytes per layer); False rebuilds the legacy
-        dense-mask arm for parity/ablation.  Formats whose planning is
-        already word-native (SELL's membership test, the bitmap
-        layout's zero-conversion sweep) may ignore it.
-
-        ``prefetch_depth`` > 0 selects the kernels' manual
-        double-buffered DMA input pipeline (``depth`` tiles in flight
-        ahead of compute — the §4 prefetch-distance knob); formats
-        without a streamed input (bitmap) ignore it.
+        Spec fields a format may ignore: ``pipeline`` where one sweep
+        serves both flavours (the bitmap layout); ``packed`` where
+        planning is already word-native (SELL's membership test, the
+        bitmap sweep); ``prefetch_depth`` is *rejected* (not ignored)
+        where there is no streamed input to prefetch (bitmap).
         """
+        if spec is None:
+            # reuse the engine shims' single knob->spec normalizer so
+            # the legacy defaults live in exactly one place
+            # (engine._KNOB_DEFAULTS) — the defaults-drift class this
+            # redesign exists to kill
+            from repro.core.engine import _UNSET, _spec_from_knobs
+            knobs = dict(algorithm=algorithm, tile=tile,
+                         pipeline=pipeline, packed=packed,
+                         prefetch_depth=prefetch_depth)
+            spec = _spec_from_knobs(
+                f"{type(self).__name__}.make_steps",
+                None,
+                {k: (_UNSET if v is None else v)
+                 for k, v in knobs.items()}).resolve(self)
+        elif not spec.is_resolved:
+            autos = [f for f in spec.field_names()
+                     if getattr(spec, f) == "auto"]
+            why = (f"fields still 'auto': {autos}" if autos
+                   else f"policy is the name {spec.policy!r}, not a "
+                        f"policy object")
+            raise ValueError(
+                f"{type(self).__name__}.make_steps needs a *resolved* "
+                f"TraversalSpec ({why}); call spec.resolve(fmt) — or "
+                f"repro.bfs.plan, which resolves once and caches the "
+                f"executable")
+        else:
+            spec.validate(self)
+        return self._build_steps(spec)
+
+    @abc.abstractmethod
+    def _build_steps(self, spec) -> dict:
+        """Format-owned step construction from a resolved, validated
+        `TraversalSpec` (see `make_steps` for the contract)."""
 
     def resolve_tile(self, tile: int | None) -> int:
         """The format owns tile selection (§4.2: the layout fixes the

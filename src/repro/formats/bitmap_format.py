@@ -38,6 +38,7 @@ from repro.formats.registry import register
 @jax.tree_util.register_pytree_node_class
 class BitmapCompressedFormat(GraphFormat):
     name = "bitmap"
+    supports_prefetch = False    # dense word sweep: no edge stream
 
     def __init__(self, adj, deg, n_vertices: int, n_edges: int):
         self.adj = adj              # (V_pad, W) uint32 adjacency rows
@@ -111,16 +112,15 @@ class BitmapCompressedFormat(GraphFormat):
         parent = jnp.where(mask, parent_id, parent)
         return new_words, visited | new_words, parent
 
-    def make_steps(self, *, algorithm: str, tile: int,
-                   pipeline: str = "fused_gather", packed: bool = True,
-                   prefetch_depth: int = 0) -> dict:
+    def _build_steps(self, spec) -> dict:
         # The dense word sweep is ZERO-conversion under the packed
         # engine: it consumes the packed frontier words directly
         # (``adj & frontier``) and emits packed output words — there
         # is no mask to compact and no stream to prefetch, so
-        # ``packed``/``prefetch_depth`` change nothing here.
+        # ``spec.packed`` changes nothing here (and
+        # ``spec.prefetch_depth > 0`` is rejected upstream by
+        # `spec.validate(fmt)` — there is nothing to prefetch).
         from repro.core import engine
-        engine.check_pipeline(pipeline)
         vm = jax.vmap(self._sweep)
 
         # the dense sweep has no stream to materialize and no tiles to

@@ -72,15 +72,14 @@ class CsrFormat(GraphFormat):
     def degrees(self) -> jax.Array:
         return self.colstarts[1:] - self.colstarts[:-1]
 
-    def make_steps(self, *, algorithm: str, tile: int,
-                   pipeline: str = "fused_gather", packed: bool = True,
-                   prefetch_depth: int = 0) -> dict:
+    def _build_steps(self, spec) -> dict:
         from repro.core import engine
         return engine._make_steps(self.colstarts, self.rows,
                                   self._n_vertices,
                                   self.n_vertices_padded,
-                                  self.n_edges_padded, algorithm, tile,
-                                  pipeline, packed, prefetch_depth)
+                                  self.n_edges_padded, spec.algorithm,
+                                  spec.tile, spec.pipeline, spec.packed,
+                                  spec.prefetch_depth)
 
     def resolve_tile(self, tile: int | None) -> int:
         # CSR tiles the rows array: the fused pipeline's DMA block ==

@@ -237,18 +237,17 @@ class SellFormat(GraphFormat):
         act_step = active.reshape(n_steps, slabs_per_step).any(axis=1)
         return compact_worklist(act_step, n_steps)
 
-    def make_steps(self, *, algorithm: str, tile: int,
-                   pipeline: str = "fused_gather", packed: bool = True,
-                   prefetch_depth: int = 0) -> dict:
+    def _build_steps(self, spec) -> dict:
         # SELL's planning is word-native already (a packed-bitmap
-        # membership test over slab_rows), so the ``packed`` flag does
+        # membership test over slab_rows), so ``spec.packed`` does
         # not change the step bodies — both parity arms run the same
         # packed-word plan.
         from repro.core import engine
-        engine.check_pipeline(pipeline)
+        algorithm, tile = spec.algorithm, spec.tile
+        prefetch_depth = spec.prefetch_depth
         v = self._n_vertices
         n_steps = -(-self.n_slabs // tile)
-        fused = pipeline == "fused_gather"
+        fused = spec.pipeline == "fused_gather"
 
         def make_kernel_step(bottom_up: bool):
             def kernel_step(frontier, visited, parent):

@@ -5,26 +5,30 @@ fixed query batch with slot reuse (a finished query's slot is refilled
 from the queue on the next tick — "continuous batching"), and a batch
 shape that never changes so the jitted tick compiles exactly once.
 
-One tick == one BFS layer for EVERY active slot, via the engine's
-batched format-generic `layer_step_format` (leading root axis).
-Since ISSUE 3 the ``algorithm="simd"`` tick routes through the fused
-gather pipeline: each slot's frontier plans its own active-tile
-work-list, so slots whose frontier has emptied flow through as true
-no-ops — their work-list is empty (n_active == 0), costing zero DMA
-tiles instead of a full sentinel edge stream — until the host
-harvests the parent array and refills the slot.  The per-tick host sync (a (B,) frontier-count
-readback) is the serving tick boundary, exactly like ServeEngine's
-per-token logits readback; whole-query throughput without any tick
-sync is what `engine.traverse` with a root batch provides.
+One tick == one BFS layer for EVERY active slot, via the plan layer's
+single-layer executable (`repro.bfs.plan(...).layer_step`, leading
+root axis).  Since ISSUE 3 the ``algorithm="simd"`` tick routes
+through the fused gather pipeline: each slot's frontier plans its own
+active-tile work-list, so slots whose frontier has emptied flow
+through as true no-ops — their work-list is empty (n_active == 0),
+costing zero DMA tiles instead of a full sentinel edge stream — until
+the host harvests the parent array and refills the slot.  The
+per-tick host sync (a (B,) frontier-count readback) is the serving
+tick boundary, exactly like ServeEngine's per-token logits readback;
+whole-query throughput without any tick sync is what a root-batched
+`CompiledTraversal.run_batched` provides.
 
 **Preprocess-on-load** (the formats scenario axis): the engine picks
 a graph layout per resident graph at construction —
 ``graph_format="auto"`` runs the `formats.autotune` decision on the
 graph's degree statistics; any registered name forces that layout.
-The jitted tick then runs on the chosen format's step.
+Since ISSUE 5 the remaining configuration is ONE `TraversalSpec`
+(``spec=``): the engine stores a `CompiledTraversal` instead of six
+loose attributes, and the tick hits that plan's cached executable.
 """
 from __future__ import annotations
 
+import collections
 import functools
 from dataclasses import dataclass, field
 
@@ -34,7 +38,6 @@ import numpy as np
 
 from repro.core import bitmap as bm
 from repro.core import engine
-from repro.core.csr import Csr
 
 
 @functools.partial(jax.jit, static_argnames=("slot", "n_vertices"))
@@ -75,30 +78,29 @@ class GraphEngine:
         `formats.GraphFormat` (stays on device for the engine's
         lifetime).
       batch_slots: fixed query-batch width (compiled once).
-      algorithm: scalar expander flavour for the layer step.
-      max_layers: per-query layer budget (safety valve).
       graph_format: layout for the tick — "auto" (autotune from graph
         statistics, the default), any registered format name, or None
         to wrap a Csr as-is.  A passed-in built format is kept under
         "auto"/None (the caller already chose); forcing a *different*
         name re-lays it out when the format can recover its CSR
         (`to_csr`) and raises a TypeError otherwise.
-      pipeline: expansion pipeline for the tick — "fused_gather"
-        (default: per-slot active-tile work-lists, drained slots cost
-        nothing) or "materialized" (legacy full edge stream).
-      packed: keep the tick's planning/compaction on packed uint32
-        words (the ISSUE 4 native representation; False = the legacy
-        dense-mask arm, kept for parity measurement).
-      prefetch_depth: input-DMA tiles kept in flight ahead of compute
-        inside the expansion kernels (0 = automatic BlockSpec double
-        buffering).
+      spec: a `repro.bfs.TraversalSpec` — the ONE configuration object
+        for the tick (algorithm, pipeline, packed, prefetch_depth,
+        tile) and the per-query layer budget (``max_layers``; "auto"
+        = 64).  Resolved once at construction; the engine stores the
+        resulting `CompiledTraversal` (``self.compiled``), whose
+        cached executable every tick hits.
+      algorithm/max_layers/pipeline/packed/prefetch_depth: deprecated
+        loose-knob form of the same fields (kept for compatibility;
+        emits DeprecationWarning).
     """
 
     def __init__(self, graph, batch_slots: int = 8,
-                 algorithm: str = "simd", max_layers: int = 64,
+                 algorithm=engine._UNSET, max_layers=engine._UNSET,
                  graph_format: str | None = "auto",
-                 pipeline: str = "fused_gather", packed: bool = True,
-                 prefetch_depth: int = 0):
+                 pipeline=engine._UNSET, packed=engine._UNSET,
+                 prefetch_depth=engine._UNSET, spec=None):
+        from repro.api.plan import plan as _plan
         from repro.formats import GraphFormat, autotune
         if isinstance(graph, GraphFormat):
             self.csr = None
@@ -108,12 +110,30 @@ class GraphEngine:
         else:
             self.csr = graph
             self.fmt = autotune.build(graph, graph_format or "csr")
-        engine.check_pipeline(pipeline)
-        self.max_layers = max_layers
-        self.algorithm = algorithm
-        self.pipeline = pipeline
-        self.packed = packed
-        self.prefetch_depth = prefetch_depth
+        # the tick never evaluates a direction policy; "auto" and the
+        # neutral TopDown (object or registered name — what
+        # make_spec/legacy knobs pin) pass silently, anything else
+        # was a real configuration intent
+        if spec is not None \
+                and spec.policy not in ("auto", "topdown") \
+                and spec.policy != engine.TopDown():
+            import warnings
+            warnings.warn(
+                "GraphEngine: the serve tick is policy-free (one "
+                "layer per tick; scalar vs SIMD comes from "
+                "spec.algorithm) — spec.policy is ignored",
+                UserWarning, stacklevel=2)
+        spec = engine._spec_from_knobs(
+            "GraphEngine", spec,
+            dict(algorithm=algorithm, max_layers=max_layers,
+                 pipeline=pipeline, packed=packed,
+                 prefetch_depth=prefetch_depth))
+        if spec.policy == "auto":
+            # pin a concrete policy the tick never reads: skips the
+            # autotune measurement and keeps .resolved honest about
+            # the direction machinery not running here
+            spec = spec.replace(policy="topdown")
+        self.compiled = _plan(self.fmt, spec)
         b = batch_slots
         self.n_vertices = self.fmt.n_vertices
         v_pad = self.fmt.n_vertices_padded
@@ -123,8 +143,37 @@ class GraphEngine:
         self.parent = jnp.full((b, v_pad), self.n_vertices, jnp.int32)
         self._base_visited = self.fmt.init_visited()
         self.slots: list[BfsQuery | None] = [None] * b
-        self.queue: list[BfsQuery] = []
+        # deque: continuous batching pops from the head every tick —
+        # list.pop(0) is O(queue) per slot fill, O(n^2) over a long
+        # serving run
+        self.queue: collections.deque[BfsQuery] = collections.deque()
         self.finished: list[BfsQuery] = []
+
+    # -- resolved-spec views (legacy attribute compatibility) -----------
+    @property
+    def resolved(self):
+        """The fully-concrete `TraversalSpec` the tick runs."""
+        return self.compiled.resolved
+
+    @property
+    def algorithm(self) -> str:
+        return self.compiled.resolved.algorithm
+
+    @property
+    def pipeline(self) -> str:
+        return self.compiled.resolved.pipeline
+
+    @property
+    def packed(self) -> bool:
+        return self.compiled.resolved.packed
+
+    @property
+    def prefetch_depth(self) -> int:
+        return self.compiled.resolved.prefetch_depth
+
+    @property
+    def max_layers(self) -> int:
+        return self.compiled.resolved.max_layers
 
     def submit(self, query: BfsQuery):
         self.queue.append(query)
@@ -132,7 +181,7 @@ class GraphEngine:
     def _fill_slots(self):
         for i, q in enumerate(self.slots):
             if (q is None or q.done) and self.queue:
-                nxt = self.queue.pop(0)
+                nxt = self.queue.popleft()
                 self.slots[i] = nxt
                 self.frontier, self.visited, self.parent = _reset_slot(
                     self.frontier, self.visited, self.parent,
@@ -150,11 +199,8 @@ class GraphEngine:
         """One engine tick: advance every active query by one layer."""
         self._fill_slots()
         self.frontier, self.visited, self.parent = \
-            engine.layer_step_format(
-                self.fmt, self.frontier, self.visited, self.parent,
-                algorithm=self.algorithm, pipeline=self.pipeline,
-                packed=self.packed,
-                prefetch_depth=self.prefetch_depth)
+            self.compiled.layer_step(self.frontier, self.visited,
+                                     self.parent)
         counts = np.asarray(engine.row_popcounts(self.frontier))
         for i, q in enumerate(self.slots):
             if q is None or q.done:

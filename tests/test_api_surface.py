@@ -1,0 +1,76 @@
+"""Public-API snapshot (ISSUE 5 CI gate).
+
+``repro.bfs.__all__`` and the `TraversalSpec` field set ARE the
+public contract — accidental additions, removals or renames must fail
+CI, not ship silently.  Deliberate surface changes update the frozen
+snapshots below (and the README migration table) in the same PR.
+"""
+import dataclasses
+
+import repro.bfs as bfs
+
+# frozen snapshot: the repro.bfs surface
+EXPECTED_ALL = (
+    "BeamerHybrid",
+    "BfsState",
+    "CompiledTraversal",
+    "EngineResult",
+    "LayerStats",
+    "POLICIES",
+    "PaperLiteralLayers",
+    "ThresholdSimd",
+    "TopDown",
+    "TraversalSpec",
+    "clear_plan_cache",
+    "direction_log",
+    "layer_stats",
+    "parents_graph500",
+    "plan",
+    "plan_cache_info",
+    "traverse",
+)
+
+# frozen snapshot: the one declarative config object's fields, in
+# declaration order (order matters: it is the positional-construction
+# and to_dict contract)
+EXPECTED_SPEC_FIELDS = (
+    "policy",
+    "algorithm",
+    "pipeline",
+    "packed",
+    "tile",
+    "prefetch_depth",
+    "max_layers",
+    "merge",
+)
+
+
+def test_bfs_all_is_frozen():
+    assert tuple(sorted(bfs.__all__)) == EXPECTED_ALL, (
+        "repro.bfs.__all__ changed; if deliberate, update "
+        "tests/test_api_surface.py and the README migration table")
+
+
+def test_bfs_all_names_resolve():
+    for name in bfs.__all__:
+        assert getattr(bfs, name, None) is not None, name
+
+
+def test_traversal_spec_fields_are_frozen():
+    fields = tuple(f.name for f in
+                   dataclasses.fields(bfs.TraversalSpec))
+    assert fields == EXPECTED_SPEC_FIELDS, (
+        "TraversalSpec fields changed; if deliberate, update "
+        "tests/test_api_surface.py, TraversalSpec.field_names "
+        "consumers, and the README migration table")
+    assert bfs.TraversalSpec.field_names() == EXPECTED_SPEC_FIELDS
+
+
+def test_every_spec_field_defaults_to_auto():
+    spec = bfs.TraversalSpec()
+    assert all(getattr(spec, f) == "auto" for f in EXPECTED_SPEC_FIELDS)
+
+
+def test_policy_registry_is_frozen():
+    assert tuple(sorted(bfs.POLICIES)) == (
+        "beamer", "paper_layers", "threshold_simd", "topdown")
