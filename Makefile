@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-quick bench bench-quick bench-formats bench-gate
+.PHONY: test test-quick bench bench-quick bench-formats bench-affinity bench-gate
 
 test:            ## full tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -11,7 +11,7 @@ test-quick:      ## BFS substrate + engine + formats + API (fast inner loop)
 	    tests/test_bfs_correctness.py tests/test_engine.py \
 	    tests/test_formats.py tests/test_gather_pipeline.py \
 	    tests/test_packed_engine.py tests/test_plan_api.py \
-	    tests/test_api_surface.py
+	    tests/test_api_surface.py tests/test_megakernel.py
 
 bench:           ## full benchmark harness
 	$(PY) -m benchmarks.run
@@ -22,9 +22,13 @@ bench-quick:     ## batched + formats + layer/bytes + packed + plan-cache probes
 	$(PY) -m benchmarks.run --quick --only bfs_layers
 	$(PY) -m benchmarks.run --quick --only bfs_packed
 	$(PY) -m benchmarks.run --quick --only bfs_plan_cache
+	$(PY) -m benchmarks.run --quick --only bfs_megakernel
 
 bench-formats:   ## the graph-format sweep (TEPS + bytes per layout)
 	$(PY) -m benchmarks.run --only bfs_formats
+
+bench-affinity:  ## regenerate the geometry-keyed autotune table rows
+	$(PY) -m benchmarks.run --only affinity
 
 bench-gate:      ## CI: fused bytes-moved vs committed BENCH_bfs.json
 	$(PY) -m benchmarks.check_bytes_regression

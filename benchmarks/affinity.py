@@ -1,4 +1,5 @@
-"""Paper Table 2: thread-affinity / resource-sharing analogue.
+"""Paper Table 2: thread-affinity / resource-sharing analogue — now
+the autotune harness behind every ``"auto"`` spec knob (ISSUE 6).
 
 The paper's experiment: 48 threads packed onto 48/24/16/12 cores —
 packing threads divides per-thread cache and bandwidth, 1T/core wins
@@ -9,11 +10,25 @@ by 3.3x.  TPU has no SMT; the corresponding resource-sharing axes are:
       per-chip edge load and skew across device counts (the bandwidth-
       sharing curve), plus
 
-  (b) VMEM population: kernel tile size vs working-set pressure —
-      more in-flight tiles share VMEM exactly like more threads share
-      L2.  Measured via the vectorized path's tile sweep.
+  (b) VMEM population: the per-(format, geometry-class) knob sweeps —
+      tile size, DMA prefetch depth, pipeline (unfused 3-launch layer
+      vs the whole-layer megakernel) and the SELL σ sort window.  More
+      in-flight tiles share VMEM exactly like more threads share L2.
 
-Output mirrors Table 2's shape: population factor -> throughput.
+Every sweep row is emitted through `formats.affinity.key_for`, the
+writer-side twin of the `formats.affinity.resolve` lookup every auto
+knob reads — committing this run's BENCH_bfs.json IS the autotable:
+
+    affinity.{format}.{geometry}.{knob}{value}   e.g.
+    affinity.csr.skew16.tile4096
+    affinity.csr.skew16.pipeline_megakernel
+    affinity.sell.skew16.sigma1024
+
+Within one (format, geometry, knob) group the lowest ``us_per_call``
+wins at lookup time; sweeping a second geometry class (the uniform
+2-D mesh vs the skewed RMAT) adds rows instead of overwriting.  The
+PR-4 flat ``affinity.tile<N>`` rows are no longer emitted (committed
+old ones keep working as the back-compat tier-3 read path).
 """
 from __future__ import annotations
 
@@ -22,6 +37,92 @@ import numpy as np
 from benchmarks.common import emit, graph, time_bfs
 from repro.core.bfs_distributed import partition_csr
 from repro.kernels.frontier_expand import vmem_budget
+
+# per-knob sweep grids (format -> knob -> values)
+CSR_TILES = (512, 1024, 4096, 16384)
+CSR_PREFETCH = (0, 1, 2)
+CSR_PIPELINES = ("fused_gather", "megakernel")
+SELL_SIGMAS = (256, 1024, 4096)
+
+
+def _mesh(side: int):
+    """A uniform 4-regular 2-D torus — the skew1 geometry class, so
+    the table learns different tunings for RMAT skew vs flat meshes."""
+    from repro.core import csr as csr_mod
+    from repro.core.rmat import EdgeList
+    v = side * side
+    idx = np.arange(v, dtype=np.int32)
+    x, y = idx % side, idx // side
+    right = ((x + 1) % side) + y * side
+    down = x + ((y + 1) % side) * side
+    src = np.concatenate([idx, idx])
+    dst = np.concatenate([right, down])
+    # symmetrize (from_edges builds the directed adjacency as-is)
+    src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    import jax.numpy as jnp
+    return csr_mod.from_edges(EdgeList(
+        src=jnp.asarray(src), dst=jnp.asarray(dst), n_vertices=v))
+
+
+def _sweep_csr(g, label: str):
+    """Tile / prefetch / pipeline sweeps for one geometry class."""
+    import jax
+    from repro.api import plan as plan_mod
+    from repro.api import spec as spec_mod
+    from repro.formats import affinity
+    from repro.formats.csr_format import CsrFormat
+
+    fmt = CsrFormat.from_csr(g)
+    geom = affinity.geometry_class(fmt)
+    print(f"# Table 2 analog (b): {label} -> affinity.csr.{geom}.*")
+    rng = np.random.default_rng(3)
+    deg = np.asarray(g.degrees())
+    roots = rng.choice(np.nonzero(deg > 0)[0], size=2, replace=False)
+    v_pad = g.n_vertices_padded
+    w = v_pad // 32
+
+    def run(spec):
+        ct = plan_mod.plan(fmt, spec)
+        return time_bfs(lambda c, r: ct.run(r).state, g, roots)
+
+    for tile in CSR_TILES:
+        sec = run(spec_mod.TraversalSpec(tile=tile))
+        vmem = vmem_budget(w, v_pad, tile)
+        teps = g.n_edges / 2 / sec
+        emit(affinity.key_for("csr", geom, "tile", tile), sec * 1e6,
+             f"{teps:.3e}_teps_vmem{vmem // 1024}KiB", value=teps)
+    for depth in CSR_PREFETCH:
+        sec = run(spec_mod.TraversalSpec(prefetch_depth=depth))
+        teps = g.n_edges / 2 / sec
+        emit(affinity.key_for("csr", geom, "prefetch_depth", depth),
+             sec * 1e6, f"{teps:.3e}_teps", value=teps)
+    for pipe in CSR_PIPELINES:
+        sec = run(spec_mod.TraversalSpec(pipeline=pipe))
+        teps = g.n_edges / 2 / sec
+        emit(affinity.key_for("csr", geom, "pipeline", pipe),
+             sec * 1e6, f"{teps:.3e}_teps", value=teps)
+
+
+def _sweep_sell(g, label: str):
+    """σ sort-window sweep (SELL's own resource-sharing knob)."""
+    from repro.api import plan as plan_mod
+    from repro.api import spec as spec_mod
+    from repro.formats import affinity
+    from repro.formats.sell import SellFormat
+
+    geom = affinity.geometry_class(g)
+    print(f"# Table 2 analog (b): {label} -> affinity.sell.{geom}.*")
+    rng = np.random.default_rng(3)
+    deg = np.asarray(g.degrees())
+    roots = rng.choice(np.nonzero(deg > 0)[0], size=2, replace=False)
+    for sigma in SELL_SIGMAS:
+        fmt = SellFormat.from_csr(g, sigma=sigma)
+        ct = plan_mod.plan(fmt, spec_mod.TraversalSpec())
+        sec = time_bfs(lambda c, r: ct.run(r).state, g, roots)
+        teps = g.n_edges / 2 / sec
+        emit(affinity.key_for("sell", geom, "sigma", sigma),
+             sec * 1e6,
+             f"{teps:.3e}_teps_slots{fmt.nnz_stored}", value=teps)
 
 
 def main(scale: int = 13):
@@ -37,26 +138,12 @@ def main(scale: int = 13):
         print(f"{chips},{per.mean():.0f},{per.max()},{skew:.2f}")
         emit(f"affinity.shard_skew.chips{chips}", 0.0, f"{skew:.3f}")
 
-    print(f"# Table 2 analog (b): VMEM population (tile sweep)")
-    # the hostloop driver honors the requested tile exactly against the
-    # bucketed layer sizes (the fused engine clamps small tiles in
-    # interpret mode to bound trace-time grid unrolling)
-    from repro.core import engine
-    policy = engine.ThresholdSimd(16_384)
-    rng = np.random.default_rng(3)
-    deg = np.asarray(g.degrees())
-    roots = rng.choice(np.nonzero(deg > 0)[0], size=2, replace=False)
-    v_pad = g.n_vertices_padded
-    w = v_pad // 32
-    for tile in (512, 1024, 4096, 16384):
-        sec = time_bfs(
-            lambda c, r, t=tile: engine.traverse_hostloop(
-                c, r, policy=policy, tile=t)[0],
-            g, roots)
-        vmem = vmem_budget(w, v_pad, tile)
-        teps = g.n_edges / 2 / sec
-        emit(f"affinity.tile{tile}", sec * 1e6,
-             f"{teps:.3e}_teps_vmem{vmem//1024}KiB")
+    # (b) the knob sweeps, one geometry class per graph family: the
+    # RMAT graph lands in a skew bucket, the torus in skew1 — two
+    # table rows per knob value, resolved independently at lookup
+    _sweep_csr(g, f"RMAT SCALE={scale}")
+    _sweep_csr(_mesh(64), "64x64 torus")
+    _sweep_sell(g, f"RMAT SCALE={scale}")
 
 
 if __name__ == "__main__":

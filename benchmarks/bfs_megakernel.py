@@ -1,0 +1,124 @@
+"""Whole-layer megakernel vs the 3-launch unfused pipeline (ISSUE 6).
+
+The §4 pipeline ran each SIMD layer as three Pallas calls —
+plan_active_tiles, frontier_compact, gather_expand — each paying one
+dispatch and bouncing its intermediate (the active-tile worklist, the
+compacted frontier) through HBM.  ``pipeline="megakernel"``
+(kernels/layer_fused.py) fuses them into ONE call whose plan and
+worklist never leave VMEM/SMEM.  This benchmark pins the two
+acceptance numbers:
+
+* **launches/layer** — counted at trace time by `ops.count_launches`
+  (the same counter `engine.layer_stats` reports per layer): exactly
+  1 for the megakernel, 3 for fused_gather.  On the high-diameter
+  path probe (1 vertex/layer, ~1k layers) dispatch overhead is the
+  whole cost, so this is also where fusion pays most.  The CI gate
+  (`benchmarks.check_bytes_regression`) pins the path-probe
+  megakernel at exactly 1.0 calls/layer.
+* **TEPS** — wall-clock of bit-identical traversals (parity suite in
+  tests/test_megakernel.py) under both pipelines, on the path probe
+  and the RMAT workload.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, graph
+from repro.api import plan as plan_mod
+from repro.api import spec as spec_mod
+from repro.core import engine
+from repro.core.csr import traversed_edges
+from repro.formats.csr_format import CsrFormat
+
+PATH_SCALE = 10    # fixed: the CI launch-gate probe, not --quick'd
+PATH_TILE = 128
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()                                   # warmup / compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)                         # least-noise estimator
+
+
+def _launches_per_simd_layer(res) -> float:
+    """Mean Pallas calls per SIMD/bottom-up layer from the stats
+    buffer (scalar layers launch nothing in either pipeline)."""
+    buf = np.asarray(res.stats)
+    simd = [int(buf[i, engine._ST_LAUNCH])
+            for i in range(buf.shape[0])
+            if buf[i, engine._ST_ACTIVE]
+            and int(buf[i, engine._ST_MODE]) != engine.MODE_SCALAR]
+    return float(np.mean(simd)) if simd else 0.0
+
+
+def path_launch_probe(scale: int = PATH_SCALE,
+                      tile: int = PATH_TILE, time_reps: int = 3) -> dict:
+    """The s10 path probe: launches/layer + TEPS, both pipelines."""
+    from benchmarks.bfs_layers import build_path_graph
+    n = 1 << scale
+    g = build_path_graph(n)
+    fmt = CsrFormat.from_csr(g)
+    out = {}
+    for pipe in ("fused_gather", "megakernel"):
+        spec = spec_mod.TraversalSpec(
+            policy=engine.ThresholdSimd(0), tile=tile,
+            max_layers=n + 2, pipeline=pipe)
+        ct = plan_mod.plan(fmt, spec)
+        res = ct.run(0)
+        out[pipe] = {
+            "launches_per_layer": _launches_per_simd_layer(res),
+            "layers": len(engine.layer_stats(res)),
+            "edges": int(traversed_edges(
+                g, np.asarray(res.state.parent)[:n] < n)),
+            "sec": _time(lambda: jax.block_until_ready(
+                ct.run(0).state.parent), time_reps),
+        }
+    return out
+
+
+def main(scale: int = 12) -> None:
+    probe = path_launch_probe()
+    for pipe, p in probe.items():
+        tag = "mega" if pipe == "megakernel" else "unfused"
+        emit(f"bfs_megakernel.path_launches_per_layer_{tag}", 0.0,
+             f"scale={PATH_SCALE};layers={p['layers']}",
+             value=p["launches_per_layer"])
+        emit(f"bfs_megakernel.path_teps_{tag}", p["sec"] * 1e6,
+             f"teps={p['edges'] / p['sec']:.3e}",
+             value=p["edges"] / p["sec"])
+    mega, unf = probe["megakernel"], probe["fused_gather"]
+    print(f"# path s={PATH_SCALE}: {mega['launches_per_layer']:.1f} "
+          f"calls/layer fused vs {unf['launches_per_layer']:.1f} "
+          f"unfused; speedup {unf['sec'] / mega['sec']:.2f}x")
+
+    # RMAT workload: same comparison on the paper's skewed graph
+    g = graph(scale)
+    fmt = CsrFormat.from_csr(g)
+    rng = np.random.default_rng(7)
+    deg = np.asarray(g.degrees())
+    root = int(rng.choice(np.where(deg > 0)[0]))
+    for pipe in ("fused_gather", "megakernel"):
+        ct = plan_mod.plan(fmt, spec_mod.TraversalSpec(
+            policy=engine.ThresholdSimd(0), pipeline=pipe))
+        res = ct.run(root)
+        reached = np.asarray(
+            res.state.parent)[:g.n_vertices] < g.n_vertices
+        edges = int(traversed_edges(g, reached))
+        t = _time(lambda: jax.block_until_ready(
+            ct.run(root).state.parent))
+        tag = "mega" if pipe == "megakernel" else "unfused"
+        emit(f"bfs_megakernel.rmat_s{scale}_{tag}", t * 1e6,
+             f"teps={edges / t:.3e};"
+             f"lpl={_launches_per_simd_layer(res):.1f}",
+             value=edges / t)
+
+
+if __name__ == "__main__":
+    main()

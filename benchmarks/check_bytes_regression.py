@@ -49,6 +49,18 @@ unpacked probe (`bfs_packed.path_packed_probe`):
    headroom that only order-of-magnitude regressions trip it, not
    runner-class differences.
 
+**Gate 3 — megakernel launch count (ISSUE 6, deterministic).**
+Recomputes the path probe under ``pipeline="megakernel"`` and reads
+the per-layer launch counter (`ops.count_launches`, measured at trace
+time — the ground truth of how many Pallas calls each layer issues):
+
+5. every SIMD layer must issue EXACTLY 1 Pallas call — the fused
+   whole-layer kernel.  A change that silently splits the plan,
+   compaction or gather back out into its own launch (or routes the
+   probe through the VMEM-degrade arm) reads >= 2 and fails
+   immediately; like gate 1 this is counter-based, immune to timing
+   noise, and cannot be ratcheted by committing a new baseline.
+
 Run BEFORE ``make bench-quick`` in CI: the bench run merge-updates
 BENCH_bfs.json, and the gate must read the committed baseline.
 
@@ -161,6 +173,30 @@ def _packed_gate(data) -> int:
     return 0
 
 
+def _launch_gate(data) -> int:
+    """Gate 3: megakernel = EXACTLY one Pallas call per SIMD layer on
+    the path probe (baseline-independent, counter-based)."""
+    from benchmarks.bfs_megakernel import (PATH_SCALE,
+                                           path_launch_probe)
+
+    probe = path_launch_probe(time_reps=1)
+    mega = probe["megakernel"]["launches_per_layer"]
+    unfused = probe["fused_gather"]["launches_per_layer"]
+    print(f"launches/layer (path s={PATH_SCALE}): megakernel={mega:.2f} "
+          f"unfused={unfused:.2f}")
+    if mega != 1.0:
+        print("FAIL: the megakernel no longer runs each SIMD layer as "
+              "ONE Pallas call — a stage split back out into its own "
+              "launch, or the probe degraded to the unfused pipeline")
+        return 1
+    if unfused < 2.0:
+        print("FAIL: the unfused launch counter reads < 2 calls/layer "
+              "— the counter itself broke (it must see plan + compact "
+              "+ gather), so the megakernel check above proves nothing")
+        return 1
+    return 0
+
+
 def main() -> int:
     from benchmarks.common import BENCH_JSON
 
@@ -172,6 +208,7 @@ def main() -> int:
 
     rc = _bytes_gate(data)
     rc = _packed_gate(data) or rc
+    rc = _launch_gate(data) or rc
     print("OK" if rc == 0 else "GATE FAILED")
     return rc
 

@@ -25,7 +25,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (affinity, bfs_batched, bfs_formats,
-                            bfs_layers, bfs_opt_ablation, bfs_packed,
+                            bfs_layers, bfs_megakernel,
+                            bfs_opt_ablation, bfs_packed,
                             bfs_plan_cache, bfs_scaling, lm_roofline)
 
     layer_scale = 20 if args.paper_scale else (12 if args.quick else 16)
@@ -46,6 +47,8 @@ def main() -> None:
             scale=10 if args.quick else 11),
         "bfs_plan_cache": lambda: bfs_plan_cache.main(
             scale=9 if args.quick else 10),
+        "bfs_megakernel": lambda: bfs_megakernel.main(
+            scale=10 if args.quick else 12),
         "affinity": lambda: affinity.main(scale=abl_scale),
         "lm_roofline": lambda: lm_roofline.main(),
     }

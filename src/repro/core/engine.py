@@ -104,12 +104,12 @@ MODE_BOTTOMUP = 2   # frontier-testing kernel (hybrid bottom-up)
 MODE_NAMES = {MODE_SCALAR: "topdown", MODE_SIMD: "topdown",
               MODE_BOTTOMUP: "bottomup"}
 
-PIPELINES = ("fused_gather", "materialized")
+PIPELINES = ("fused_gather", "materialized", "megakernel")
 
 # on-device per-layer stats buffer columns
 (_ST_FRONTIER, _ST_EDGES, _ST_DISCOVERED, _ST_MODE, _ST_ACTIVE,
- _ST_TILES, _ST_TRUNC) = range(7)
-_N_ST = 7
+ _ST_TILES, _ST_TRUNC, _ST_LAUNCH) = range(8)
+_N_ST = 8
 
 
 class BfsState(NamedTuple):
@@ -128,6 +128,8 @@ class LayerStats(NamedTuple):
     #                         (batch-summed; the fused pipeline's
     #                         frontier-proportionality counter)
     truncated_edges: int = 0  # edges clamped by apportionment overflow
+    launches: int = 0       # Pallas calls this layer issued (ISSUE 6:
+    #                         megakernel = 1, fused_gather = 3, ...)
 
 
 class StepAux(NamedTuple):
@@ -138,9 +140,14 @@ class StepAux(NamedTuple):
     bytes-moved counter that makes the fused pipeline's win visible in
     CI even in interpret mode.  ``truncated`` counts edges the
     apportionment clamped (hub-overflow; 0 on the fused path, which
-    never apportions)."""
+    never apportions).  ``launches`` is the number of Pallas calls the
+    step issues per layer — counted at trace time by wrapping the step
+    body in `ops.count_launches`, so the figure is the measured ground
+    truth, not a declaration that can drift (the megakernel's
+    fusion win: 1 vs the unfused pipeline's 3)."""
     tiles: jax.Array        # int32 scalar
     truncated: jax.Array    # int32 scalar
+    launches: jax.Array | int = 0  # int32 scalar (static per step)
 
 
 class Workload(NamedTuple):
@@ -166,7 +173,7 @@ class Workload(NamedTuple):
 class EngineResult(NamedTuple):
     state: BfsState          # final state; batched arrays iff multi-root
     depths: jax.Array        # (B,) int32: layers each root stayed active
-    stats: jax.Array         # (max_layers, 5) int32 on-device buffer
+    stats: jax.Array         # (max_layers, _N_ST) int32 device buffer
 
 
 # ---------------------------------------------------------------------------
@@ -495,64 +502,26 @@ def _auto_tile(e_size: int, interpret: bool) -> int:
 _TILE_ENV = "REPRO_BFS_TILE"
 
 
-@functools.lru_cache(maxsize=1)
-def _bench_table_tile() -> int | None:
-    """Best CSR tile from the committed ``BENCH_bfs.json`` affinity
-    sweep (``affinity.tile<N>`` rows, lowest wall time wins).
-
-    The committed table is the cached tile sweep the default feeds
-    from — re-running ``benchmarks.run --only affinity`` refreshes
-    it.  Returns None when no table/rows exist (fresh checkout,
-    installed package), in which case the caller falls back to the
-    legacy heuristic."""
-    import json
-    import pathlib
-    path = pathlib.Path(__file__).resolve().parents[3] / "BENCH_bfs.json"
-    try:
-        data = json.loads(path.read_text())
-    except (OSError, ValueError):
-        return None
-    best = None
-    best_us = None
-    for key, rec in data.items():
-        if not key.startswith("affinity.tile"):
-            continue
-        try:
-            t = int(key[len("affinity.tile"):])
-            us = float(rec["us_per_call"])
-        except (KeyError, TypeError, ValueError):
-            continue
-        if best_us is None or us < best_us:
-            best, best_us = t, us
-    return best
+def default_tile_csr(fmt=None) -> int:
+    """The auto tile through the shared affinity mechanism
+    (`formats.affinity.resolve` — ISSUE 6 generalized this PR-4
+    one-off into the lookup every auto knob reads).  Priority:
+    ``REPRO_BFS_TILE`` env override > the geometry-keyed committed
+    row (when ``fmt`` is given) > the PR-4 flat ``affinity.tile<N>``
+    rows > the legacy 1024 heuristic."""
+    from repro.formats import affinity
+    return int(affinity.resolve(fmt, "tile", 1024))
 
 
-def default_tile_csr() -> int:
-    """The auto tile, in priority order: ``REPRO_BFS_TILE`` env
-    override > the committed BENCH affinity sweep > the legacy 1024
-    heuristic."""
-    import os
-    env = os.environ.get(_TILE_ENV)
-    if env:
-        try:
-            return max(128, int(env))
-        except ValueError:
-            raise ValueError(
-                f"{_TILE_ENV}={env!r} is not an integer tile size"
-            ) from None
-    table = _bench_table_tile()
-    return table if table else 1024
-
-
-def _resolve_tile_csr(tile: int | None, e_pad: int) -> int:
+def _resolve_tile_csr(tile: int | None, e_pad: int, fmt=None) -> int:
     """The CSR tile rule (`formats.CsrFormat.resolve_tile`).
 
     The tile is the fused pipeline's DMA unit AND its prefetch
     distance (§4's knob); it bottoms out at 128 (one lane set) so
     small graphs still resolve to several blocks and the active-tile
     schedule has something to skip.  The auto choice comes from
-    `default_tile_csr` (env override > committed BENCH sweep — the
-    measured optimum, 4096 on the current table — > 1024), capped at
+    `default_tile_csr` (env override > the geometry-keyed BENCH
+    affinity row for ``fmt`` > the flat sweep rows > 1024), capped at
     ``e_pad/8`` so small graphs keep >= 8 blocks to skip.  The
     interpret-mode floor keeps the unrolled grid <=32 steps, same
     budget as `_auto_tile`.
@@ -563,7 +532,7 @@ def _resolve_tile_csr(tile: int | None, e_pad: int) -> int:
         # auto tiles (table or env) never exceed the edge stream —
         # _pad_rows_to_tile pads rows UP to a tile multiple, so an
         # oversized tile would balloon the padded stream itself
-        tile = max(128, min(default_tile_csr(), max(e_pad // 8, 128)))
+        tile = max(128, min(default_tile_csr(fmt), max(e_pad // 8, 128)))
         tile = min(tile, max(e_pad, 128))
     return max(int(tile), floor)
 
@@ -649,14 +618,16 @@ def _make_scalar_step(colstarts, rows, n_vertices: int, v_pad: int,
     tiles_per_root = -(-e_pad // tile)
 
     def step(frontier, visited, parent):
-        u, v, valid, trunc = _batched_edge_stream(
-            colstarts, rows, frontier, v_pad, n_vertices, e_pad, packed)
-        out, visited, parent = jax.vmap(
-            lambda u1, v1, val1, f1, vi1, p1: expand_candidates(
-                u1, v1, val1, f1, vi1, p1, n_vertices, algorithm)
-        )(u, v, valid, frontier, visited, parent)
+        with ops.count_launches() as c:
+            u, v, valid, trunc = _batched_edge_stream(
+                colstarts, rows, frontier, v_pad, n_vertices, e_pad,
+                packed)
+            out, visited, parent = jax.vmap(
+                lambda u1, v1, val1, f1, vi1, p1: expand_candidates(
+                    u1, v1, val1, f1, vi1, p1, n_vertices, algorithm)
+            )(u, v, valid, frontier, visited, parent)
         aux = StepAux(jnp.int32(frontier.shape[0] * tiles_per_root),
-                      trunc.sum(dtype=jnp.int32))
+                      trunc.sum(dtype=jnp.int32), c.count)
         return out, visited, parent, aux
 
     return step
@@ -685,13 +656,15 @@ def _make_simd_step(colstarts, rows, n_vertices: int, v_pad: int,
     tiles_per_root = -(-e_pad // tile)
 
     def step(frontier, visited, parent):
-        u, v, valid, trunc = _batched_edge_stream(
-            colstarts, rows, frontier, v_pad, n_vertices, e_pad, packed)
-        out, visited, parent = kernel_expand_restore(
-            ops.expand_batched, u, v, valid, frontier, visited, parent,
-            n_vertices, tile)
+        with ops.count_launches() as c:
+            u, v, valid, trunc = _batched_edge_stream(
+                colstarts, rows, frontier, v_pad, n_vertices, e_pad,
+                packed)
+            out, visited, parent = kernel_expand_restore(
+                ops.expand_batched, u, v, valid, frontier, visited,
+                parent, n_vertices, tile)
         aux = StepAux(jnp.int32(frontier.shape[0] * tiles_per_root),
-                      trunc.sum(dtype=jnp.int32))
+                      trunc.sum(dtype=jnp.int32), c.count)
         return out, visited, parent, aux
 
     return step
@@ -728,18 +701,41 @@ def _make_fused_step(colstarts, rows_t, n_vertices: int, tile: int,
     n_blocks = int(rows_t.shape[0]) // tile
 
     def step(frontier, visited, parent):
-        active = ~visited if bottom_up else frontier
-        wl, na = plan_active_tiles_batched(colstarts, active,
-                                           n_vertices, tile, n_blocks,
-                                           packed=packed)
-        out_racy, p_racy = ops.gather_expand_batched(
-            wl, na, rows_t, colstarts, frontier, visited,
-            jnp.zeros_like(frontier), parent, n_vertices=n_vertices,
-            tile=tile, bottom_up=bottom_up,
-            prefetch_depth=prefetch_depth)
-        p_fixed, delta = ops.restore(p_racy, n_vertices=n_vertices)
-        aux = StepAux(na.sum(dtype=jnp.int32), jnp.int32(0))
+        with ops.count_launches() as c:
+            active = ~visited if bottom_up else frontier
+            wl, na = plan_active_tiles_batched(colstarts, active,
+                                               n_vertices, tile,
+                                               n_blocks, packed=packed)
+            out_racy, p_racy = ops.gather_expand_batched(
+                wl, na, rows_t, colstarts, frontier, visited,
+                jnp.zeros_like(frontier), parent, n_vertices=n_vertices,
+                tile=tile, bottom_up=bottom_up,
+                prefetch_depth=prefetch_depth)
+            p_fixed, delta = ops.restore(p_racy, n_vertices=n_vertices)
+        aux = StepAux(na.sum(dtype=jnp.int32), jnp.int32(0), c.count)
         return out_racy | delta, visited | delta, p_fixed, aux
+
+    return step
+
+
+def _make_megakernel_step(colstarts, rows_t, n_vertices: int, tile: int,
+                          bottom_up: bool, prefetch_depth: int = 0):
+    """One whole layer in ONE Pallas call (ISSUE 6): the in-kernel
+    plan + compact + gather-expand + restoration megakernel.  The
+    work-list never leaves SMEM/VMEM; restoration is inlined at the
+    final grid step, so the returned ``out`` is already repaired and
+    the visited merge is a plain word OR (``out == delta | out_racy``
+    holds because every true discovery carries a negative P mark —
+    see kernels/layer_fused.py)."""
+
+    def step(frontier, visited, parent):
+        with ops.count_launches() as c:
+            out, parent, na = ops.layer_fused_batched(
+                rows_t, colstarts, frontier, visited, parent,
+                n_vertices=n_vertices, tile=tile, bottom_up=bottom_up,
+                prefetch_depth=prefetch_depth)
+        aux = StepAux(na.sum(dtype=jnp.int32), jnp.int32(0), c.count)
+        return out, visited | out, parent, aux
 
     return step
 
@@ -766,22 +762,23 @@ def _make_bottomup_step(colstarts, rows, n_vertices: int, v_pad: int,
     tiles_per_root = -(-e_pad // tile)
 
     def step(frontier, visited, parent):
-        if packed and ops.compact_fits(frontier.shape[0], v_pad):
-            cands, _ = ops.frontier_compact_batched(
-                ~visited, size=v_pad, fill=n_vertices)
-            cand, nbr, valid, trunc = jax.vmap(
-                lambda c: apportion(colstarts, rows, c, n_vertices,
-                                    e_pad))(cands)
-        else:
-            cand, nbr, valid, trunc = jax.vmap(
-                lambda vis: _bottomup_stream(colstarts, rows, vis,
-                                             n_vertices, v_pad,
-                                             e_pad))(visited)
-        out, visited, parent = kernel_expand_restore(
-            ops.expand_batched, nbr, cand, valid, frontier, visited,
-            parent, n_vertices, tile, check_frontier=True)
+        with ops.count_launches() as ct:
+            if packed and ops.compact_fits(frontier.shape[0], v_pad):
+                cands, _ = ops.frontier_compact_batched(
+                    ~visited, size=v_pad, fill=n_vertices)
+                cand, nbr, valid, trunc = jax.vmap(
+                    lambda c: apportion(colstarts, rows, c, n_vertices,
+                                        e_pad))(cands)
+            else:
+                cand, nbr, valid, trunc = jax.vmap(
+                    lambda vis: _bottomup_stream(colstarts, rows, vis,
+                                                 n_vertices, v_pad,
+                                                 e_pad))(visited)
+            out, visited, parent = kernel_expand_restore(
+                ops.expand_batched, nbr, cand, valid, frontier, visited,
+                parent, n_vertices, tile, check_frontier=True)
         aux = StepAux(jnp.int32(frontier.shape[0] * tiles_per_root),
-                      trunc.sum(dtype=jnp.int32))
+                      trunc.sum(dtype=jnp.int32), ct.count)
         return out, visited, parent, aux
 
     return step
@@ -800,7 +797,32 @@ def _make_steps(colstarts, rows, n_vertices, v_pad, e_pad, algorithm,
                 tile, pipeline: str = "fused_gather",
                 packed: bool = True, prefetch_depth: int = 0):
     check_pipeline(pipeline)
-    if pipeline == "fused_gather":
+    if pipeline == "megakernel":
+        rows_t = _pad_rows_to_tile(rows, n_vertices, tile)
+        n_blocks = int(rows_t.shape[0]) // tile
+        if ops.megakernel_fits(v_pad // bm.BITS_PER_WORD, v_pad,
+                               int(colstarts.shape[0]), tile,
+                               prefetch_depth, n_blocks):
+            simd = _make_megakernel_step(colstarts, rows_t, n_vertices,
+                                         tile, bottom_up=False,
+                                         prefetch_depth=prefetch_depth)
+            bottomup = _make_megakernel_step(
+                colstarts, rows_t, n_vertices, tile, bottom_up=True,
+                prefetch_depth=prefetch_depth)
+        else:
+            # silent degrade, mirroring ops.compact_fits: a working
+            # set past the fused VMEM budget traverses via the unfused
+            # fused_gather steps (the stats launch counter then
+            # honestly reports the unfused cost)
+            simd = _make_fused_step(colstarts, rows_t, n_vertices,
+                                    tile, bottom_up=False,
+                                    packed=packed,
+                                    prefetch_depth=prefetch_depth)
+            bottomup = _make_fused_step(colstarts, rows_t, n_vertices,
+                                        tile, bottom_up=True,
+                                        packed=packed,
+                                        prefetch_depth=prefetch_depth)
+    elif pipeline == "fused_gather":
         rows_t = _pad_rows_to_tile(rows, n_vertices, tile)
         simd = _make_fused_step(colstarts, rows_t, n_vertices, tile,
                                 bottom_up=False, packed=packed,
@@ -942,7 +964,8 @@ def _traverse_impl(fmt, roots, spec) -> EngineResult:
         # fits, extreme batched sums may clip — diagnostics only)
         stats = stats.at[layer].set(
             jnp.stack([f_count_b.sum(), f_edges_b.sum(), discovered,
-                       mode, jnp.int32(1), aux.tiles, aux.truncated]))
+                       mode, jnp.int32(1), aux.tiles, aux.truncated,
+                       jnp.asarray(aux.launches, jnp.int32)]))
         depths = depths + (f_count_b > 0).astype(jnp.int32)
         return (new_f, visited, parent, layer + 1, bottom_up, depths,
                 stats)
@@ -1104,7 +1127,8 @@ def layer_stats(result: EngineResult) -> list[LayerStats]:
             edges_examined=int(buf[i, _ST_EDGES]),
             discovered=int(buf[i, _ST_DISCOVERED]),
             active_tiles=int(buf[i, _ST_TILES]),
-            truncated_edges=int(buf[i, _ST_TRUNC])))
+            truncated_edges=int(buf[i, _ST_TRUNC]),
+            launches=int(buf[i, _ST_LAUNCH])))
     return out
 
 

@@ -1,0 +1,184 @@
+"""Geometry-keyed affinity table: the ONE auto-knob lookup (ISSUE 6).
+
+Every ``"auto"`` field on a `TraversalSpec` resolves through
+`resolve()` below — the generalization of the PR-4 CSR-tile one-off
+(`engine.default_tile_csr`) into a single mechanism any knob (and any
+future knob: 2-D mesh shape, out-of-core slab size) reads through.
+
+The committed table lives in ``BENCH_bfs.json`` (regenerate with
+``make bench-affinity``).  Sweep rows are keyed by *format* and
+*geometry class*, so a skewed RMAT graph and a uniform mesh resolve
+to different tuned values from the same table:
+
+    affinity.{format}.{geometry}.{knob}{value}
+
+    affinity.csr.skew16.tile4096      {"us_per_call": ...}
+    affinity.csr.skew16.prefetch1     {"us_per_call": ...}
+    affinity.csr.skew16.pipeline_megakernel
+    affinity.sell.skew16.sigma1024
+
+Numeric knobs append the value directly (``tile4096``); string knobs
+separate it with ``_`` (``pipeline_megakernel``).  Within one
+(format, geometry, knob) group the row with the lowest ``us_per_call``
+wins.  The geometry class buckets `autotune.measure` statistics:
+``dense`` when density crosses the bitmap regime threshold, else a
+power-of-4 degree-skew bucket (``skew1`` | ``skew4`` | ``skew16`` |
+``skew64`` — the label is the bucket's lower bound; RMAT graphs land
+in ``skew16``/``skew64``, meshes and paths in ``skew1``).
+
+Precedence, highest first:
+
+1. env override (``REPRO_BFS_TILE``, tile knob only — the A/B lever);
+2. the geometry-keyed committed row;
+3. the PR-4 flat rows (``affinity.tile<N>``, tile knob only) — the
+   back-compat read path for tables committed before ISSUE 6;
+4. the caller's default (the pre-table heuristics).
+
+Geometry classification needs concrete degree values; under tracing
+(a legacy shim planning inside ``jit``) it returns None and the
+lookup falls through to tiers 3-4.  Classes are memoized by the
+graph's geometry (shapes/dtypes + static aux), so a traced resolve of
+an already-seen geometry still lands in its class.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import pathlib
+
+import jax
+
+from repro.formats import autotune
+
+_TILE_ENV = "REPRO_BFS_TILE"
+
+# knobs whose table value is a string (key form ``{knob}_{value}``);
+# everything else parses as int (key form ``{knob}{value}``)
+_STR_KNOBS = frozenset({"pipeline", "policy", "algorithm", "merge"})
+
+# spec field -> key token (compact, underscore-free numeric tokens)
+_KEY_TOKEN = {"prefetch_depth": "prefetch", "max_layers": "maxlayers"}
+
+# degree-skew bucket lower bounds (powers of 4), label = lower bound
+_SKEW_BUCKETS = (64, 16, 4)
+
+_GEOM_CACHE: dict[tuple, str] = {}
+
+
+def _table_path() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[3] / "BENCH_bfs.json"
+
+
+@functools.lru_cache(maxsize=1)
+def _table() -> dict:
+    """The committed BENCH table (cached; `clear_cache` to re-read)."""
+    try:
+        return json.loads(_table_path().read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+def clear_cache() -> None:
+    """Drop the cached table and geometry classes (tests, and the
+    affinity benchmark after it rewrites BENCH_bfs.json)."""
+    _table.cache_clear()
+    _GEOM_CACHE.clear()
+
+
+def _bucket(stats: autotune.GraphStats) -> str:
+    if stats.density >= autotune.DENSITY_THRESHOLD:
+        return "dense"
+    for lo in _SKEW_BUCKETS:
+        if stats.degree_skew >= lo:
+            return f"skew{lo}"
+    return "skew1"
+
+
+def _memo_key(graph) -> tuple:
+    leaves = jax.tree_util.tree_leaves(graph)
+    return (type(graph).__name__,
+            tuple((tuple(getattr(x, "shape", ())),
+                   str(getattr(x, "dtype", type(x).__name__)))
+                  for x in leaves))
+
+
+def geometry_class(graph) -> str | None:
+    """Density/skew bucket of a graph (GraphFormat or Csr) — the
+    middle segment of the affinity keys.  None when the graph's
+    values are traced AND its geometry has never been classified
+    concretely (auto knobs then fall through to the flat/default
+    tiers)."""
+    key = _memo_key(graph)
+    hit = _GEOM_CACHE.get(key)
+    if hit is not None:
+        return hit
+    try:
+        geom = _bucket(autotune.measure(graph))
+    except jax.errors.TracerArrayConversionError:
+        return None
+    except jax.errors.ConcretizationTypeError:
+        return None
+    _GEOM_CACHE[key] = geom
+    return geom
+
+
+def _best_row(prefix: str, knob: str):
+    """argmin over ``us_per_call`` of every table row under
+    ``prefix`` -> parsed knob value (int or str), or None."""
+    token = _KEY_TOKEN.get(knob, knob)
+    sep = f"{token}_" if knob in _STR_KNOBS else token
+    best, best_us = None, None
+    for key, rec in _table().items():
+        tail = key[len(prefix):] if key.startswith(prefix) else None
+        if tail is None or not tail.startswith(sep):
+            continue
+        raw = tail[len(sep):]
+        try:
+            value = raw if knob in _STR_KNOBS else int(raw)
+            us = float(rec["us_per_call"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if best_us is None or us < best_us:
+            best, best_us = value, us
+    return best
+
+
+def key_for(fmt_name: str, geometry: str, knob: str, value) -> str:
+    """The canonical sweep-row key — the writer-side counterpart of
+    `resolve` (benchmarks/affinity.py emits through this so the
+    schema cannot drift between the sweep and the lookup)."""
+    token = _KEY_TOKEN.get(knob, knob)
+    sep = "_" if knob in _STR_KNOBS else ""
+    return f"affinity.{fmt_name}.{geometry}.{token}{sep}{value}"
+
+
+def resolve(graph, knob: str, default, *, fmt_name: str | None = None):
+    """Resolve one auto knob: env > geometry-keyed row > legacy flat
+    row > ``default``.  ``graph`` may be None (no geometry tier —
+    legacy array-level callers); ``fmt_name`` overrides the format
+    segment when ``graph`` is not a built format (e.g. a Csr headed
+    for the SELL builder)."""
+    if knob == "tile":
+        env = os.environ.get(_TILE_ENV)
+        if env:
+            try:
+                return max(128, int(env))
+            except ValueError:
+                raise ValueError(
+                    f"{_TILE_ENV}={env!r} is not an integer tile size"
+                ) from None
+    if graph is not None:
+        name = fmt_name if fmt_name is not None \
+            else getattr(graph, "name", None)
+        geom = geometry_class(graph) if name else None
+        if geom is not None:
+            row = _best_row(f"affinity.{name}.{geom}.", knob)
+            if row is not None:
+                return row
+    if knob == "tile":
+        # PR-4 flat rows: the pre-ISSUE-6 table schema
+        flat = _best_row("affinity.", "tile")
+        if flat is not None:
+            return flat
+    return default

@@ -100,6 +100,18 @@ class GraphFormat(abc.ABC):
     #: and `spec.validate(fmt)` rejects the combination
     supports_prefetch: ClassVar[bool] = True
 
+    #: whether the layout implements the whole-layer megakernel
+    #: (``TraversalSpec.pipeline="megakernel"`` — ISSUE 6: plan +
+    #: compact + gather-expand + restoration in ONE Pallas call).
+    #: Opt-in: the format must build megakernel steps in
+    #: `_build_steps`; `spec.validate(fmt)` rejects the pipeline on
+    #: formats that don't (bitmap has no per-layer launches to fuse;
+    #: SELL's slab sweep drives its cols DMA through scalar-prefetched
+    #: BlockSpec index maps, which bind before launch and so cannot
+    #: consume an in-kernel work-list — fusing it means restructuring
+    #: the whole slab kernel around manual DMA, left as future work)
+    supports_megakernel: ClassVar[bool] = False
+
     # -- construction ----------------------------------------------------
     @classmethod
     @abc.abstractmethod

@@ -129,7 +129,7 @@ class BitmapCompressedFormat(GraphFormat):
         def step(frontier, visited, parent):
             out, vis, par = vm(frontier, visited, parent)
             return out, vis, par, engine.StepAux(
-                jnp.int32(frontier.shape[0]), jnp.int32(0))
+                jnp.int32(frontier.shape[0]), jnp.int32(0), 0)
 
         # one sweep is simultaneously the scalar, SIMD and bottom-up
         # flavour: the dense word AND *is* the bottom-up frontier test

@@ -25,6 +25,9 @@ from repro.formats.registry import register
 @jax.tree_util.register_pytree_node_class
 class CsrFormat(GraphFormat):
     name = "csr"
+    # the whole-layer megakernel (kernels/layer_fused.py) is built on
+    # the CSR rows-block schedule; see GraphFormat.supports_megakernel
+    supports_megakernel = True
 
     def __init__(self, colstarts, rows, n_vertices: int, n_edges: int):
         self.colstarts = colstarts
@@ -87,8 +90,11 @@ class CsrFormat(GraphFormat):
         # lane set (128) so small graphs still split into several
         # blocks for the active-tile schedule to skip; the hostloop
         # A/B driver keeps the legacy `_auto_tile` rule separately.
+        # The auto choice reads the geometry-keyed affinity table
+        # (formats/affinity.py) through the format instance.
         from repro.core import engine
-        return engine._resolve_tile_csr(tile, self.n_edges_padded)
+        return engine._resolve_tile_csr(tile, self.n_edges_padded,
+                                        fmt=self)
 
     # -- accounting ------------------------------------------------------
     def footprint(self) -> Footprint:

@@ -54,6 +54,12 @@ from repro.kernels.sell_expand import SLICE_C, W_QUANT
 @jax.tree_util.register_pytree_node_class
 class SellFormat(GraphFormat):
     name = "sell"
+    # no whole-layer megakernel: the slab sweep's cols DMA rides
+    # scalar-prefetched BlockSpec index maps, which bind before launch
+    # and cannot consume the worklist the megakernel plans in-kernel —
+    # fusing SELL means rebuilding the slab kernel around manual DMA
+    # (future work); `spec.validate` rejects pipeline="megakernel"
+    supports_megakernel = False
 
     DEFAULT_SIGMA = 8 * SLICE_C   # SlimSell's typical local-sort window
 
@@ -128,7 +134,14 @@ class SellFormat(GraphFormat):
                 chunk < n_full[vrow_vertex[:n_vrows]], max_width,
                 tail[vrow_vertex[:n_vrows]])
 
-        sig = cls.DEFAULT_SIGMA if sigma is None else int(sigma)
+        if sigma is None:
+            # auto σ reads the geometry-keyed affinity table like any
+            # other tuned knob (affinity.sell.<geom>.sigma<N> rows)
+            from repro.formats import affinity
+            sig = int(affinity.resolve(csr, "sigma", cls.DEFAULT_SIGMA,
+                                       fmt_name="sell"))
+        else:
+            sig = int(sigma)
         sig = min(round_up(max(sig, c), c), n_rows)
 
         # σ-windowed descending length sort (stable: ties keep order)
@@ -251,27 +264,28 @@ class SellFormat(GraphFormat):
 
         def make_kernel_step(bottom_up: bool):
             def kernel_step(frontier, visited, parent):
-                kw = {}
-                if fused:
-                    # the planning bitmap is the direction's
-                    # *discovery-relevant* membership set: frontier
-                    # rows (top-down) vs unvisited rows (bottom-up)
-                    active = ~visited if bottom_up else frontier
-                    wl, na = jax.vmap(
-                        lambda a: self._plan_slab_steps(
-                            a, tile, n_steps))(active)
-                    kw = dict(worklist=wl, n_active=na)
-                    tiles = na.sum(dtype=jnp.int32)
-                else:
-                    tiles = jnp.int32(frontier.shape[0] * n_steps)
-                out_racy, p_racy = ops.sell_batched(
-                    self.cols, self.slab_rows, frontier, visited,
-                    jnp.zeros_like(frontier), parent, n_vertices=v,
-                    slabs_per_step=tile, bottom_up=bottom_up,
-                    prefetch_depth=prefetch_depth, **kw)
-                p_fixed, delta = ops.restore(p_racy, n_vertices=v)
+                with ops.count_launches() as c:
+                    kw = {}
+                    if fused:
+                        # the planning bitmap is the direction's
+                        # *discovery-relevant* membership set: frontier
+                        # rows (top-down) vs unvisited rows (bottom-up)
+                        active = ~visited if bottom_up else frontier
+                        wl, na = jax.vmap(
+                            lambda a: self._plan_slab_steps(
+                                a, tile, n_steps))(active)
+                        kw = dict(worklist=wl, n_active=na)
+                        tiles = na.sum(dtype=jnp.int32)
+                    else:
+                        tiles = jnp.int32(frontier.shape[0] * n_steps)
+                    out_racy, p_racy = ops.sell_batched(
+                        self.cols, self.slab_rows, frontier, visited,
+                        jnp.zeros_like(frontier), parent, n_vertices=v,
+                        slabs_per_step=tile, bottom_up=bottom_up,
+                        prefetch_depth=prefetch_depth, **kw)
+                    p_fixed, delta = ops.restore(p_racy, n_vertices=v)
                 return (out_racy | delta, visited | delta, p_fixed,
-                        engine.StepAux(tiles, jnp.int32(0)))
+                        engine.StepAux(tiles, jnp.int32(0), c.count))
             return kernel_step
 
         kernel_step = make_kernel_step(bottom_up=False)
@@ -282,7 +296,7 @@ class SellFormat(GraphFormat):
                                                  algorithm))(
                 frontier, visited, parent)
             return out, vis, par, engine.StepAux(
-                jnp.int32(frontier.shape[0] * n_steps), jnp.int32(0))
+                jnp.int32(frontier.shape[0] * n_steps), jnp.int32(0), 0)
 
         # MODE_BOTTOMUP is a true role swap since ISSUE 4: the kernel
         # discovers *rows* gated on "neighbor in frontier", so its

@@ -16,6 +16,7 @@ from repro.core.bitmap import BITS_PER_WORD
 from repro.kernels import bitmap_kernels, frontier_expand as fe
 from repro.kernels import compact as ck
 from repro.kernels import gather_expand as ge
+from repro.kernels import layer_fused as lf
 from repro.kernels import restoration as rest
 from repro.kernels import sell_expand as se
 
@@ -25,6 +26,41 @@ _VMEM_HEADROOM = 0.75          # leave room for pipeline double-buffers
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting
+# ---------------------------------------------------------------------------
+# Every wrapper below charges the Pallas calls it issues to this
+# module-level counter *at trace time* (the wrappers are plain Python;
+# the inner kernels are jit'd).  Tracing one engine layer step under
+# `count_launches()` therefore yields the exact number of Pallas
+# launches that step issues per layer — the ground truth the static
+# `StepAux.launches` declarations are tested against.
+
+_LAUNCH_COUNT = [0]
+
+
+def _charge_launch(n: int = 1) -> None:
+    _LAUNCH_COUNT[0] += n
+
+
+class count_launches:
+    """Context manager counting Pallas calls traced inside the block.
+
+    >>> with ops.count_launches() as c:
+    ...     step(frontier, visited, parent)
+    >>> c.count   # launches one layer of this step costs
+    """
+    count = 0
+
+    def __enter__(self):
+        self._base = _LAUNCH_COUNT[0]
+        return self
+
+    def __exit__(self, *exc):
+        self.count = _LAUNCH_COUNT[0] - self._base
+        return False
 
 
 def expand(nbr, cand, valid, frontier, visited, out_init, p_init, *,
@@ -46,6 +82,7 @@ def expand(nbr, cand, valid, frontier, visited, out_init, p_init, *,
         nbr = jnp.concatenate([nbr, z])
         cand = jnp.concatenate([cand, z])
         valid = jnp.concatenate([valid.astype(jnp.int32), z])
+    _charge_launch()
     return fe.frontier_expand(
         nbr, cand, valid.astype(jnp.int32), frontier, visited, out_init,
         p_init, n_vertices=n_vertices, tile=tile,
@@ -77,6 +114,7 @@ def expand_batched(nbr, cand, valid, frontier, visited, out_init, p_init,
         nbr = jnp.concatenate([nbr, z], axis=1)
         cand = jnp.concatenate([cand, z], axis=1)
         valid = jnp.concatenate([valid.astype(jnp.int32), z], axis=1)
+    _charge_launch()
     return fe.frontier_expand_batched(
         nbr, cand, valid.astype(jnp.int32), frontier, visited, out_init,
         p_init, n_vertices=n_vertices, tile=tile,
@@ -110,6 +148,7 @@ def gather_expand(worklist, n_active, rows, colstarts, frontier,
     _gather_budget_check(visited.shape[0], p_init.shape[0],
                          colstarts.shape[0], tile, prefetch_depth)
     n_active = jnp.atleast_1d(jnp.asarray(n_active, jnp.int32))
+    _charge_launch()
     return ge.gather_expand(
         worklist.astype(jnp.int32), n_active, rows, colstarts, frontier,
         visited, out_init, p_init, n_vertices=n_vertices, tile=tile,
@@ -130,6 +169,7 @@ def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
         interpret = _interpret_default()
     _gather_budget_check(visited.shape[1], p_init.shape[1],
                          colstarts.shape[0], tile, prefetch_depth)
+    _charge_launch()
     return ge.gather_expand_batched(
         worklist.astype(jnp.int32), n_active.astype(jnp.int32), rows,
         colstarts, frontier, visited, out_init, p_init,
@@ -189,6 +229,7 @@ def sell(cols, slab_rows, frontier, visited, out_init, p_init, *,
         n_active = jnp.full((1,), n_steps, jnp.int32)
     else:
         n_active = jnp.atleast_1d(jnp.asarray(n_active, jnp.int32))
+    _charge_launch()
     return se.sell_expand(
         cols, slab_rows, worklist.astype(jnp.int32), n_active, frontier,
         visited, out_init, p_init, n_vertices=n_vertices,
@@ -220,6 +261,7 @@ def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
         worklist = jnp.broadcast_to(jnp.arange(n_steps, dtype=jnp.int32),
                                     (n_batch, n_steps))
         n_active = jnp.full((n_batch,), n_steps, jnp.int32)
+    _charge_launch()
     return se.sell_expand_batched(
         cols, slab_rows, worklist.astype(jnp.int32),
         n_active.astype(jnp.int32), frontier, visited, out_init, p_init,
@@ -239,6 +281,7 @@ def restore(parent, *, n_vertices: int, tile: int = rest.DEFAULT_TILE,
     """
     if interpret is None:
         interpret = _interpret_default()
+    _charge_launch()
     v_pad = parent.shape[-1]
     t = min(tile, v_pad)
     while v_pad % t:
@@ -258,6 +301,7 @@ def restore(parent, *, n_vertices: int, tile: int = rest.DEFAULT_TILE,
 def popcount(words, *, interpret: bool | None = None):
     if interpret is None:
         interpret = _interpret_default()
+    _charge_launch()
     return bitmap_kernels.popcount(words, interpret=interpret)
 
 
@@ -278,6 +322,7 @@ def frontier_compact(words, *, size: int, fill: int,
     replacement for `bitmap.compact` + `bitmap.popcount`."""
     if interpret is None:
         interpret = _interpret_default()
+    _charge_launch()
     return ck.frontier_compact(words, size=size, fill=fill,
                                interpret=interpret)
 
@@ -288,5 +333,78 @@ def frontier_compact_batched(words, *, size: int, fill: int,
     queues, (B,) counts) in one launch."""
     if interpret is None:
         interpret = _interpret_default()
+    _charge_launch()
     return ck.frontier_compact_batched(words, size=size, fill=fill,
                                        interpret=interpret)
+
+
+def _megakernel_budget(n_words: int, v_pad: int, n_cs: int, tile: int,
+                       prefetch_depth: int, n_blocks: int) -> int:
+    return lf.vmem_budget(n_words, v_pad, n_cs, tile, prefetch_depth,
+                          n_blocks)
+
+
+def megakernel_fits(n_words: int, v_pad: int, n_cs: int, tile: int,
+                    prefetch_depth: int = 0, n_blocks: int = 1) -> bool:
+    """True when the whole-layer megakernel's working set (bitmaps +
+    P + colstarts + rows DMA buffers + the in-kernel planning
+    vectors) fits the VMEM budget.  `CsrFormat._build_steps` consults
+    this at build time and silently degrades ``pipeline="megakernel"``
+    to the unfused ``fused_gather`` step when it is False — mirroring
+    `compact_fits`: large graphs keep traversing (at the unfused
+    launch count) instead of failing on the budget check."""
+    return _megakernel_budget(n_words, v_pad, n_cs, tile,
+                              prefetch_depth, n_blocks) \
+        <= VMEM_BYTES * _VMEM_HEADROOM
+
+
+def layer_fused(rows, colstarts, frontier, visited, p_init, *,
+                n_vertices: int, tile: int = ge.DEFAULT_TILE,
+                bottom_up: bool = False, prefetch_depth: int = 0,
+                interpret: bool | None = None):
+    """Run one whole BFS layer (plan + compact + gather-expand +
+    restoration) in ONE Pallas call (kernels/layer_fused.py).
+    ``rows`` must already be padded to a tile multiple at build.
+    Returns (out, parent, n_active) with restoration APPLIED."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n_blocks = rows.shape[0] // tile
+    budget = _megakernel_budget(visited.shape[0], p_init.shape[0],
+                                colstarts.shape[0], tile,
+                                prefetch_depth, n_blocks)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"layer_fused working set {budget/2**20:.1f} MiB exceeds "
+            f"VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py), reduce the tile or "
+            f"prefetch_depth, or run pipeline='fused_gather'")
+    _charge_launch()
+    return lf.layer_fused(
+        rows, colstarts, frontier, visited, p_init,
+        n_vertices=n_vertices, tile=tile, bottom_up=bottom_up,
+        prefetch_depth=prefetch_depth, interpret=interpret)
+
+
+def layer_fused_batched(rows, colstarts, frontier, visited, p_init, *,
+                        n_vertices: int, tile: int = ge.DEFAULT_TILE,
+                        bottom_up: bool = False, prefetch_depth: int = 0,
+                        interpret: bool | None = None):
+    """Batched (leading root-axis) whole-layer megakernel: one launch,
+    B restored layers.  The VMEM budget is per-root."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n_blocks = rows.shape[0] // tile
+    budget = _megakernel_budget(visited.shape[1], p_init.shape[1],
+                                colstarts.shape[0], tile,
+                                prefetch_depth, n_blocks)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"layer_fused working set {budget/2**20:.1f} MiB exceeds "
+            f"VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py), reduce the tile or "
+            f"prefetch_depth, or run pipeline='fused_gather'")
+    _charge_launch()
+    return lf.layer_fused_batched(
+        rows, colstarts, frontier, visited, p_init,
+        n_vertices=n_vertices, tile=tile, bottom_up=bottom_up,
+        prefetch_depth=prefetch_depth, interpret=interpret)

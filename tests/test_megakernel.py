@@ -1,0 +1,243 @@
+"""ISSUE 6: the whole-layer megakernel vs the unfused fused_gather
+pipeline and the serial oracle.
+
+Covers the acceptance matrix:
+
+* bit-parity megakernel vs fused_gather vs the numpy BFS oracle across
+  every graph family x direction policy x packed/unpacked x
+  single/batched root — the two pipelines must agree on the reached
+  set and produce oracle-valid parents;
+* launch accounting: each megakernel SIMD/bottom-up layer issues
+  EXACTLY one Pallas call where the unfused pipeline issues >= 3
+  (plan + compact + gather), measured by the trace-time
+  `ops.count_launches` counter the stats buffer reports;
+* the VMEM-budget degrade: a working set `ops.megakernel_fits`
+  rejects silently falls back to the unfused steps (mirroring the
+  `ops.compact_fits` pattern) and still traverses correctly;
+* the capability gate: ``pipeline="megakernel"`` is rejected by
+  `spec.validate` on formats without `supports_megakernel` (SELL,
+  bitmap) — keyed on the classvar, not the format name.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csr as csr_mod
+from repro.core import engine, rmat
+from repro.core.bfs_parallel import parents_graph500
+from repro.core.bfs_serial import bfs_serial
+from repro.core.rmat import EdgeList
+from repro.core.validate import validate
+from repro.formats.csr_format import CsrFormat
+from repro.kernels import ops
+
+POLICIES = [
+    engine.TopDown(),
+    engine.ThresholdSimd(0),          # SIMD forced: every layer fused
+    engine.PaperLiteralLayers((1, 2)),
+    engine.BeamerHybrid(),
+]
+
+
+def _csr_from_pairs(pairs, n):
+    src = jnp.asarray([a for a, b in pairs] + [b for a, b in pairs],
+                      jnp.int32)
+    dst = jnp.asarray([b for a, b in pairs] + [a for a, b in pairs],
+                      jnp.int32)
+    return csr_mod.from_edges(EdgeList(src, dst, n))
+
+
+GRAPHS = {
+    "rmat10": lambda: csr_mod.from_edges(
+        rmat.generate(jax.random.PRNGKey(3), scale=10, edgefactor=16)),
+    "star": lambda: _csr_from_pairs(
+        [(0, i) for i in range(1, 128)], 128),
+    "path": lambda: _csr_from_pairs(
+        [(i, i + 1) for i in range(95)], 96),
+    "disconnected": lambda: _csr_from_pairs(
+        [(0, i) for i in range(1, 64)]
+        + [(i, i + 1) for i in range(64, 127)], 128),
+}
+ROOTS = {"rmat10": 17, "star": 0, "path": 0, "disconnected": 0}
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {k: v() for k, v in GRAPHS.items()}
+
+
+def check_oracle(csr, parent_g500, root):
+    _, ref_depth = bfs_serial(np.asarray(csr.rows),
+                              np.asarray(csr.colstarts),
+                              csr.n_vertices, root)
+    res = validate(csr, parent_g500, root, reference_depth=ref_depth)
+    assert res.ok, res
+
+
+def _reached(res, n_vertices):
+    return np.asarray(res.state.parent)[..., :n_vertices] < n_vertices
+
+
+def _simd_launches(res):
+    """Per-layer launch counts of the non-scalar layers."""
+    buf = np.asarray(res.stats)
+    return [int(buf[i, engine._ST_LAUNCH])
+            for i in range(buf.shape[0])
+            if buf[i, engine._ST_ACTIVE]
+            and int(buf[i, engine._ST_MODE]) != engine.MODE_SCALAR]
+
+
+# ---------------------------------------------------------------------------
+# Oracle equivalence: megakernel vs fused_gather, every family x policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("packed", [True, False],
+                         ids=["packed", "unpacked"])
+@pytest.mark.parametrize("policy", POLICIES,
+                         ids=lambda p: type(p).__name__)
+@pytest.mark.parametrize("graph_name", list(GRAPHS))
+def test_megakernel_matches_fused(graphs, graph_name, policy, packed):
+    g = graphs[graph_name]
+    root = ROOTS[graph_name]
+    mega = engine.traverse(g, root, policy=policy, max_layers=128,
+                           pipeline="megakernel", packed=packed)
+    fused = engine.traverse(g, root, policy=policy, max_layers=128,
+                            pipeline="fused_gather", packed=packed)
+    np.testing.assert_array_equal(_reached(mega, g.n_vertices),
+                                  _reached(fused, g.n_vertices))
+    assert int(mega.state.layer) == int(fused.state.layer)
+    check_oracle(g, np.asarray(parents_graph500(mega.state,
+                                                g.n_vertices)), root)
+
+
+@pytest.mark.parametrize("packed", [True, False],
+                         ids=["packed", "unpacked"])
+def test_megakernel_batched_multiroot(graphs, packed):
+    g = graphs["disconnected"]
+    # both components + an isolated-ish tail: slot 64's search dies at
+    # a different layer than slot 0's, exercising n_active == 0 rows
+    roots = [0, 64, 1, 127]
+    mega = engine.traverse(g, roots, policy=engine.ThresholdSimd(0),
+                           pipeline="megakernel", packed=packed)
+    fused = engine.traverse(g, roots, policy=engine.ThresholdSimd(0),
+                            pipeline="fused_gather", packed=packed)
+    np.testing.assert_array_equal(_reached(mega, g.n_vertices),
+                                  _reached(fused, g.n_vertices))
+    for b, root in enumerate(roots):
+        st = engine.BfsState(mega.state.frontier[b],
+                             mega.state.visited[b],
+                             mega.state.parent[b], mega.state.layer)
+        check_oracle(g, np.asarray(parents_graph500(st, g.n_vertices)),
+                     root)
+
+
+def test_megakernel_batched_rmat_prefetch(graphs):
+    """Batched skewed workload with the DMA pipeline running ahead."""
+    g = graphs["rmat10"]
+    roots = [17, 200, 5]
+    mega = engine.traverse(g, roots, policy=engine.ThresholdSimd(0),
+                           pipeline="megakernel", prefetch_depth=2)
+    fused = engine.traverse(g, roots, policy=engine.ThresholdSimd(0),
+                            pipeline="fused_gather")
+    np.testing.assert_array_equal(_reached(mega, g.n_vertices),
+                                  _reached(fused, g.n_vertices))
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting (satellite 1): 1 call/layer fused, >= 3 unfused
+# ---------------------------------------------------------------------------
+
+def test_megakernel_single_launch_per_layer(graphs):
+    g = graphs["rmat10"]
+    mega = engine.traverse(g, 17, policy=engine.ThresholdSimd(0),
+                           pipeline="megakernel")
+    fused = engine.traverse(g, 17, policy=engine.ThresholdSimd(0),
+                            pipeline="fused_gather")
+    lm, lf = _simd_launches(mega), _simd_launches(fused)
+    assert lm and lf          # the probe must actually hit SIMD layers
+    assert all(n == 1 for n in lm), lm
+    assert all(n >= 3 for n in lf), lf
+
+
+def test_launch_counter_counts_traced_calls():
+    """The counter is trace-time ground truth, not a declaration."""
+    with ops.count_launches() as c:
+        ops.popcount(jnp.zeros((8,), jnp.uint32))
+        ops.popcount(jnp.zeros((8,), jnp.uint32))
+    assert c.count == 2
+    with ops.count_launches() as c2:
+        pass
+    assert c2.count == 0
+
+
+# ---------------------------------------------------------------------------
+# VMEM-budget degrade (mirrors ops.compact_fits)
+# ---------------------------------------------------------------------------
+
+def test_megakernel_fits_budget():
+    assert ops.megakernel_fits(36, 1152, 1025, 1024)
+    # a 2^22-vertex working set blows the 16 MiB VMEM budget
+    assert not ops.megakernel_fits(1 << 17, 1 << 22, (1 << 22) + 1,
+                                   1024)
+    # deep prefetch on a huge tile also overflows
+    assert not ops.megakernel_fits(36, 1152, 1025, 1 << 20,
+                                   prefetch_depth=3)
+
+
+def test_megakernel_vmem_fallback(graphs, monkeypatch):
+    """Past the VMEM budget the megakernel arm must degrade to the
+    unfused steps — same results, honest (>= 3) launch counter."""
+    from repro.api import plan as api_plan
+    g = graphs["rmat10"]
+    api_plan.clear_cache()     # force a re-trace under the patch
+    monkeypatch.setattr(ops, "megakernel_fits",
+                        lambda *a, **k: False)
+    try:
+        res = engine.traverse(g, 17, policy=engine.ThresholdSimd(0),
+                              pipeline="megakernel")
+        launches = _simd_launches(res)
+    finally:
+        monkeypatch.undo()
+        api_plan.clear_cache()  # drop the degraded executable
+    check_oracle(g, np.asarray(parents_graph500(res.state,
+                                                g.n_vertices)), 17)
+    assert launches and all(n >= 3 for n in launches), launches
+
+
+# ---------------------------------------------------------------------------
+# Validation matrix (satellite 6): capability classvar, not name
+# ---------------------------------------------------------------------------
+
+def test_megakernel_rejected_on_unsupporting_formats(graphs):
+    from repro.api.spec import TraversalSpec
+    from repro.formats import build
+    g = graphs["rmat10"]
+    spec = TraversalSpec(pipeline="megakernel")
+    spec.validate(build(g, "csr"))               # supported: no raise
+    for fmt_name in ("sell", "bitmap"):
+        fmt = build(g, fmt_name)
+        assert not fmt.supports_megakernel
+        with pytest.raises(ValueError, match="megakernel"):
+            spec.validate(fmt)
+        with pytest.raises(ValueError, match="megakernel"):
+            engine.traverse(fmt, 17, spec=spec)
+
+
+def test_megakernel_gate_is_capability_keyed(graphs):
+    """The rejection reads `supports_megakernel`, NOT the format name:
+    flipping the classvar on a throwaway CSR subclass flips the
+    verdict with no name-keyed table to update."""
+    from repro.api.spec import TraversalSpec
+    g = graphs["rmat10"]
+    spec = TraversalSpec(pipeline="megakernel")
+
+    class NoMegaCsr(CsrFormat):
+        supports_megakernel = False
+
+    fmt = NoMegaCsr.from_csr(g)
+    with pytest.raises(ValueError, match="supports_megakernel"):
+        spec.validate(fmt)
+    # auto pipeline must also defensively degrade, never crash
+    resolved = TraversalSpec().resolve(fmt)
+    assert resolved.pipeline != "megakernel"

@@ -90,8 +90,13 @@ def test_packed_parity_formats_policies(built, fmt_name, pol_name):
     b = engine.traverse(fmt, 17, packed=False, **kw)
     for x, y in zip(_state_tuple(a), _state_tuple(b)):
         np.testing.assert_array_equal(x, y)
-    np.testing.assert_array_equal(np.asarray(a.stats),
-                                  np.asarray(b.stats))
+    # workload stats are representation-independent; the launch-count
+    # column is NOT (the packed arm's compaction kernel is one extra
+    # Pallas call per layer — an honest cost difference, not a parity
+    # break), so compare everything except _ST_LAUNCH
+    sa, sb = np.asarray(a.stats), np.asarray(b.stats)
+    keep = [i for i in range(engine._N_ST) if i != engine._ST_LAUNCH]
+    np.testing.assert_array_equal(sa[:, keep], sb[:, keep])
 
 
 @pytest.mark.parametrize("pipeline", engine.PIPELINES)

@@ -78,6 +78,9 @@ def test_plan_every_format(g, fmt_name):
 
 
 def test_plan_batch_width_pads_to_one_trace(g):
+    # the executable cache is process-global: drop hits from earlier
+    # test modules so the traces counter starts at zero here
+    api_plan.clear_cache()
     ct = bfs.plan(g, bfs.TraversalSpec(policy="topdown"), batch=4)
     r1 = ct.run_batched([3, 7])           # padded to 4
     r2 = ct.run_batched([3, 7, 17, 100])  # exactly 4
