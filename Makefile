@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-quick bench bench-quick bench-formats bench-affinity bench-gate
+.PHONY: test test-quick obs-smoke bench bench-quick bench-formats bench-affinity bench-gate
 
 test:            ## full tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -11,7 +11,12 @@ test-quick:      ## BFS substrate + engine + formats + API (fast inner loop)
 	    tests/test_bfs_correctness.py tests/test_engine.py \
 	    tests/test_formats.py tests/test_gather_pipeline.py \
 	    tests/test_packed_engine.py tests/test_plan_api.py \
-	    tests/test_api_surface.py tests/test_megakernel.py
+	    tests/test_api_surface.py tests/test_megakernel.py \
+	    tests/test_obs.py
+	$(MAKE) obs-smoke
+
+obs-smoke:       ## end-to-end obs contract (trace JSON + serve metrics)
+	$(PY) -m benchmarks.obs_smoke
 
 bench:           ## full benchmark harness
 	$(PY) -m benchmarks.run

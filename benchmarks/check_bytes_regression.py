@@ -61,8 +61,26 @@ time — the ground truth of how many Pallas calls each layer issues):
    immediately; like gate 1 this is counter-based, immune to timing
    noise, and cannot be ratcheted by committing a new baseline.
 
+**Gate 4 — cost-model drift (ISSUE 7, deterministic).**  Recomputes
+the analytic-vs-compiled bytes ratio (`repro.obs.cost_drift` on the
+``benchmarks.cost_drift`` probe graph) for CSR fused_gather and
+compares against the committed ``obs.cost_drift.csr.fused_gather``
+baseline:
+
+6. the ratio must stay within DRIFT_TOLERANCE of the baseline in
+   BOTH directions — the analytic `layer_bytes`/`tile_bytes`/
+   `plan_bytes` models and what XLA actually compiles may not drift
+   apart (or together) silently.  Either side moving (a model edit, a
+   kernel rewrite, an XLA upgrade) fails until the new ratio is
+   deliberately committed via ``make bench-quick`` — which also
+   re-stamps ``_meta``, so the baseline's provenance is on record.
+
 Run BEFORE ``make bench-quick`` in CI: the bench run merge-updates
-BENCH_bfs.json, and the gate must read the committed baseline.
+BENCH_bfs.json, and the gate must read the committed baseline.  On
+any failure the committed baseline's ``_meta`` record (git sha,
+timestamp, jax version, device kind, interpret flag — stamped by the
+bench harness) is printed so load-noise or environment-skew
+re-measurements are attributable.
 
     PYTHONPATH=src python -m benchmarks.check_bytes_regression
 """
@@ -78,8 +96,13 @@ REL_TEPS_FLOOR = 0.3   # packed >= 0.3x the co-measured unpacked arm
 #                        (steady state ~0.6-0.8x in interpret — see
 #                        gate 2 sub-check 4a in the module docstring)
 TEPS_FLOOR_FRACTION = 0.15  # absolute backstop vs committed baseline
+DRIFT_TOLERANCE = 1.25  # cost-drift ratio may move <=25% vs baseline
+#                         (both directions: the ratio is deterministic
+#                         for a fixed code + jax version; the headroom
+#                         absorbs minor XLA point-release deltas)
 BASELINE_KEY = "bfs_layers.path_bytes_fused"
 TEPS_KEY = "bfs_packed.path_teps"
+DRIFT_KEY = "obs.cost_drift.csr.fused_gather"
 
 
 def _bytes_gate(data) -> int:
@@ -197,6 +220,46 @@ def _launch_gate(data) -> int:
     return 0
 
 
+def _drift_gate(data) -> int:
+    """Gate 4: the analytic-vs-compiled bytes ratio for CSR
+    fused_gather must match the committed baseline within
+    DRIFT_TOLERANCE (both directions — see module docstring)."""
+    from benchmarks.cost_drift import drift_probe
+
+    if DRIFT_KEY not in data or "value" not in data[DRIFT_KEY]:
+        print(f"no {DRIFT_KEY!r} value committed — run "
+              f"`make bench-quick` and commit the update")
+        return 1
+    baseline = float(data[DRIFT_KEY]["value"])
+
+    row = drift_probe(pipelines=("fused_gather",), quiet=True)
+    d = row["fused_gather"]["drift"]
+    rel = d.ratio / baseline
+    print(f"{DRIFT_KEY}: baseline={baseline:.3f} current="
+          f"{d.ratio:.3f} ({rel:.3f}x; analytic={d.analytic_bytes} B "
+          f"compiled={d.compiled_bytes:.0f} B)")
+    if not (1 / DRIFT_TOLERANCE <= rel <= DRIFT_TOLERANCE):
+        print(f"FAIL: the analytic-vs-compiled bytes ratio drifted "
+              f">{(DRIFT_TOLERANCE - 1) * 100:.0f}% from the committed "
+              f"baseline — the hand-derived bytes model and the "
+              f"compiled program no longer agree; if the change is "
+              f"deliberate, re-commit via `make bench-quick`")
+        return 1
+    return 0
+
+
+def _print_meta(data) -> None:
+    """Surface the committed baseline's provenance on a gate failure
+    (the ``_meta`` record `benchmarks.common.save_results` stamps)."""
+    meta = data.get("_meta")
+    if not meta:
+        print("baseline _meta: none recorded (baseline predates the "
+              "meta stamp — re-commit via `make bench-quick`)")
+        return
+    fields = ", ".join(f"{k}={meta[k]}" for k in sorted(meta))
+    print(f"baseline _meta: {fields}")
+
+
 def main() -> int:
     from benchmarks.common import BENCH_JSON
 
@@ -209,6 +272,9 @@ def main() -> int:
     rc = _bytes_gate(data)
     rc = _packed_gate(data) or rc
     rc = _launch_gate(data) or rc
+    rc = _drift_gate(data) or rc
+    if rc:
+        _print_meta(data)
     print("OK" if rc == 0 else "GATE FAILED")
     return rc
 

@@ -1,0 +1,60 @@
+"""Analytic bytes model vs the compiled program (obs.cost_drift).
+
+Compiles the plan cache's single-layer tick per (format, pipeline) on
+the deterministic RMAT graph ``common.graph(DRIFT_SCALE)`` and records
+the ``compiled / analytic`` bytes ratio (`repro.obs.cost_drift`).  The
+ratio's absolute magnitude reflects everything the model deliberately
+excludes (state bitmaps, interpret-mode Pallas expansion, XLA's own
+materializations); its *stability* is the contract — gate 4 of
+``check_bytes_regression`` recomputes it and fails on movement beyond
+tolerance, so neither the hand-derived model nor the compiled program
+can drift silently.
+
+    PYTHONPATH=src python -m benchmarks.cost_drift
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+DRIFT_SCALE = 10
+#: pipelines compiled for the drift table (CSR supports all three)
+PIPELINES = ("fused_gather", "materialized", "megakernel")
+
+
+def drift_probe(scale: int = DRIFT_SCALE, pipelines=PIPELINES,
+                quiet: bool = False) -> dict:
+    """-> {pipeline: {"drift": obs.cost_drift.Drift, "us": float}} on
+    the deterministic probe graph (what gate 4 recomputes)."""
+    from repro.obs.cost_drift import measure_drift
+
+    csr = common.graph(scale)
+    out: dict = {}
+    for pipeline in pipelines:
+        t0 = time.perf_counter()
+        (d,) = measure_drift(csr, pipelines=(pipeline,))
+        us = (time.perf_counter() - t0) * 1e6
+        out[pipeline] = {"drift": d, "us": us}
+        if not quiet:
+            print(f"# {d.format}/{pipeline}: analytic="
+                  f"{d.analytic_bytes} B compiled="
+                  f"{d.compiled_bytes:.0f} B ratio={d.ratio:.3f} "
+                  f"hlo_ratio={d.hlo_ratio:.3f} tile={d.tile}")
+    return out
+
+
+def main(scale: int = DRIFT_SCALE) -> None:
+    rows = drift_probe(scale)
+    for pipeline, row in rows.items():
+        d = row["drift"]
+        common.emit(
+            f"obs.cost_drift.{d.format}.{pipeline}", row["us"],
+            f"s={scale} analytic={d.analytic_bytes}B "
+            f"compiled={d.compiled_bytes:.0f}B "
+            f"hlo_ratio={d.hlo_ratio:.2f} tile={d.tile}",
+            value=d.ratio)
+
+
+if __name__ == "__main__":
+    main()

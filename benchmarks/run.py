@@ -27,7 +27,11 @@ def main() -> None:
     from benchmarks import (affinity, bfs_batched, bfs_formats,
                             bfs_layers, bfs_megakernel,
                             bfs_opt_ablation, bfs_packed,
-                            bfs_plan_cache, bfs_scaling, lm_roofline)
+                            bfs_plan_cache, bfs_scaling, cost_drift,
+                            lm_roofline)
+
+    # one provenance stamp per harness run (BENCH_bfs.json _meta)
+    started = time.strftime("%Y-%m-%dT%H:%M:%S%z")
 
     layer_scale = 20 if args.paper_scale else (12 if args.quick else 16)
     abl_scale = 13 if not args.quick else 11
@@ -50,6 +54,7 @@ def main() -> None:
         "bfs_megakernel": lambda: bfs_megakernel.main(
             scale=10 if args.quick else 12),
         "affinity": lambda: affinity.main(scale=abl_scale),
+        "cost_drift": lambda: cost_drift.main(),
         "lm_roofline": lambda: lm_roofline.main(),
     }
     failed = []
@@ -70,8 +75,8 @@ def main() -> None:
     # across PRs; merge-update keeps other benchmarks' entries
     from benchmarks import common
     if common.RESULTS:
-        common.save_results()
-        print(f"# wrote {len(common.RESULTS)} metrics to "
+        common.save_results(meta=common.build_meta(timestamp=started))
+        print(f"# wrote {len(common.RESULTS)} metrics (+_meta) to "
               f"{common.BENCH_JSON.name}")
     if failed:
         print(f"\nFAILED benchmarks: {failed}")

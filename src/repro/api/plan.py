@@ -189,6 +189,17 @@ class CompiledTraversal:
         return self.executable.layer_jit(self.fmt, state, visited,
                                          parent)
 
+    def trace_run(self, roots, *, tracer=None, sync: bool = True,
+                  profile_logdir: str | None = None):
+        """Instrumented traversal: host-steps this plan's compiled
+        ``layer_step`` recording per-layer wall-clock spans — the
+        opt-in timing mode (`repro.obs.trace.trace_run`); the fused
+        ``run`` fast path is untouched.  Returns a
+        `repro.obs.trace.TraceRun`."""
+        from repro.obs.trace import trace_run as _trace_run
+        return _trace_run(self, roots, tracer=tracer, sync=sync,
+                          profile_logdir=profile_logdir)
+
     def _run_distributed(self, root):
         from repro.core import bfs_distributed as dist
         if jnp.ndim(root) != 0:

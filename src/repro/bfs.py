@@ -29,6 +29,7 @@ from repro.core.engine import (BeamerHybrid, BfsState, EngineResult,
                                LayerStats, PaperLiteralLayers,
                                ThresholdSimd, TopDown, direction_log,
                                layer_stats, traverse)
+from repro.obs.trace import SpanTracer, TraceRun, trace_run
 
 __all__ = [
     "BeamerHybrid",
@@ -38,8 +39,10 @@ __all__ = [
     "LayerStats",
     "POLICIES",
     "PaperLiteralLayers",
+    "SpanTracer",
     "ThresholdSimd",
     "TopDown",
+    "TraceRun",
     "TraversalSpec",
     "clear_plan_cache",
     "direction_log",
@@ -47,5 +50,6 @@ __all__ = [
     "parents_graph500",
     "plan",
     "plan_cache_info",
+    "trace_run",
     "traverse",
 ]

@@ -921,52 +921,63 @@ def _traverse_impl(fmt, roots, spec) -> EngineResult:
 
     def body(s):
         frontier, visited, parent, layer, bottom_up, depths, stats = s
-        f_count_b, f_edges_b = rows_workload(frontier)
-        # policy counters aggregate in float32: per-root values are
-        # int32-safe, the batch sum may not be (see Workload docstring)
-        if policy.needs_unvisited and packed:
-            # padding is premarked visited, so the word complement IS
-            # the real undiscovered set — no dense mask round trip
-            u_words = ~visited
-            u_count = row_popcounts(u_words).sum().astype(jnp.float32)
-            u_edges = jax.vmap(
-                lambda w: bm.masked_degree_sum(w, deg_mat))(u_words) \
-                .astype(jnp.float32).sum()
-        elif policy.needs_unvisited:
-            u_dense = ~jax.vmap(bm.unpack_bool)(visited)[:, :n_vertices]
-            u_count = u_dense.sum(dtype=jnp.float32)
-            u_edges = masked_edge_sum(u_dense, deg) \
-                .astype(jnp.float32).sum()
-        else:
-            u_count = u_edges = jnp.float32(0)
-        w = Workload(layer, f_count_b.astype(jnp.float32).sum(),
-                     f_edges_b.astype(jnp.float32).sum(), u_count,
-                     u_edges, n_vertices, bottom_up,
-                     n_roots=roots.shape[0])
-        mode, bottom_up = policy.decide(w)
+        # named scopes mark the engine phases in XLA profiles
+        # (obs.trace.xla_profiler / TensorBoard) — trace-time only
+        with jax.named_scope("bfs.measure_decide"):
+            f_count_b, f_edges_b = rows_workload(frontier)
+            # policy counters aggregate in float32: per-root values are
+            # int32-safe, the batch sum may not be (see Workload
+            # docstring)
+            if policy.needs_unvisited and packed:
+                # padding is premarked visited, so the word complement
+                # IS the real undiscovered set — no dense mask round
+                # trip
+                u_words = ~visited
+                u_count = row_popcounts(u_words).sum() \
+                    .astype(jnp.float32)
+                u_edges = jax.vmap(
+                    lambda w: bm.masked_degree_sum(w, deg_mat))(u_words) \
+                    .astype(jnp.float32).sum()
+            elif policy.needs_unvisited:
+                u_dense = ~jax.vmap(
+                    bm.unpack_bool)(visited)[:, :n_vertices]
+                u_count = u_dense.sum(dtype=jnp.float32)
+                u_edges = masked_edge_sum(u_dense, deg) \
+                    .astype(jnp.float32).sum()
+            else:
+                u_count = u_edges = jnp.float32(0)
+            w = Workload(layer, f_count_b.astype(jnp.float32).sum(),
+                         f_edges_b.astype(jnp.float32).sum(), u_count,
+                         u_edges, n_vertices, bottom_up,
+                         n_roots=roots.shape[0])
+            mode, bottom_up = policy.decide(w)
 
-        if len({id(steps[m]) for m in modes}) == 1:
-            # one distinct step (single-mode policy, or a format that
-            # maps every mode onto one sweep): call directly instead
-            # of tracing the same body once per switch branch
-            new_f, visited, parent, aux = steps[modes[0]](
-                frontier, visited, parent)
-        else:
-            branch = sum(jnp.where(mode == m, jnp.int32(i), 0)
-                         for i, m in enumerate(modes))
-            new_f, visited, parent, aux = jax.lax.switch(
-                branch,
-                [functools.partial(lambda fn, op: fn(*op), steps[m])
-                 for m in modes],
-                (frontier, visited, parent))
-        discovered = row_popcounts(new_f).sum()
-        # stats stay int32 (exact Table 1 counters; single-root always
-        # fits, extreme batched sums may clip — diagnostics only)
-        stats = stats.at[layer].set(
-            jnp.stack([f_count_b.sum(), f_edges_b.sum(), discovered,
-                       mode, jnp.int32(1), aux.tiles, aux.truncated,
-                       jnp.asarray(aux.launches, jnp.int32)]))
-        depths = depths + (f_count_b > 0).astype(jnp.int32)
+        with jax.named_scope("bfs.expand"):
+            if len({id(steps[m]) for m in modes}) == 1:
+                # one distinct step (single-mode policy, or a format
+                # that maps every mode onto one sweep): call directly
+                # instead of tracing the same body once per switch
+                # branch
+                new_f, visited, parent, aux = steps[modes[0]](
+                    frontier, visited, parent)
+            else:
+                branch = sum(jnp.where(mode == m, jnp.int32(i), 0)
+                             for i, m in enumerate(modes))
+                new_f, visited, parent, aux = jax.lax.switch(
+                    branch,
+                    [functools.partial(lambda fn, op: fn(*op), steps[m])
+                     for m in modes],
+                    (frontier, visited, parent))
+        with jax.named_scope("bfs.stats"):
+            discovered = row_popcounts(new_f).sum()
+            # stats stay int32 (exact Table 1 counters; single-root
+            # always fits, extreme batched sums may clip — diagnostics
+            # only)
+            stats = stats.at[layer].set(
+                jnp.stack([f_count_b.sum(), f_edges_b.sum(), discovered,
+                           mode, jnp.int32(1), aux.tiles, aux.truncated,
+                           jnp.asarray(aux.launches, jnp.int32)]))
+            depths = depths + (f_count_b > 0).astype(jnp.int32)
         return (new_f, visited, parent, layer + 1, bottom_up, depths,
                 stats)
 

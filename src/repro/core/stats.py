@@ -80,13 +80,20 @@ def choose_roots(key: jax.Array, n_vertices: int, n_roots: int = 64,
 
 def run_harness(csr: Csr, bfs_fn, key: jax.Array, n_roots: int = 64,
                 validate_runs: bool = False,
-                reference_depths_fn=None) -> HarnessResult:
+                reference_depths_fn=None,
+                roots=None) -> HarnessResult:
     """Time ``bfs_fn(csr, root) -> BfsState`` over ``n_roots`` roots.
 
     ``bfs_fn`` must return a ``BfsState`` (or any object with
     ``.parent``).  One warmup run is excluded from timing (jit).
+    ``roots`` overrides the random draw (deterministic tests; the
+    paper's unfiltered-root artifact is reproducible by passing a
+    degree-0 vertex explicitly).
     """
-    roots = choose_roots(key, csr.n_vertices, n_roots)
+    if roots is None:
+        roots = choose_roots(key, csr.n_vertices, n_roots)
+    else:
+        roots = np.asarray(roots)
     result = HarnessResult()
 
     # warmup/compile on the first root

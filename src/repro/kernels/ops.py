@@ -63,6 +63,21 @@ class count_launches:
         return False
 
 
+def _scoped(name: str):
+    """Wrap a kernel wrapper in ``jax.named_scope`` so XLA profiles
+    (`repro.obs.trace.xla_profiler` / TensorBoard) attribute device
+    time to named BFS phases instead of anonymous fusions.  Trace-time
+    only — zero runtime cost inside jit."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with jax.named_scope(name):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco
+
+
+@_scoped("bfs.expand")
 def expand(nbr, cand, valid, frontier, visited, out_init, p_init, *,
            n_vertices: int, tile: int = fe.DEFAULT_TILE,
            check_frontier: bool = False, interpret: bool | None = None):
@@ -89,6 +104,7 @@ def expand(nbr, cand, valid, frontier, visited, out_init, p_init, *,
         check_frontier=check_frontier, interpret=interpret)
 
 
+@_scoped("bfs.expand_batched")
 def expand_batched(nbr, cand, valid, frontier, visited, out_init, p_init,
                    *, n_vertices: int, tile: int = fe.DEFAULT_TILE,
                    check_frontier: bool = False,
@@ -132,6 +148,7 @@ def _gather_budget_check(n_words: int, v_pad: int, n_cs: int,
             f"prefetch_depth")
 
 
+@_scoped("bfs.gather_expand")
 def gather_expand(worklist, n_active, rows, colstarts, frontier,
                   visited, out_init, p_init, *, n_vertices: int,
                   tile: int = ge.DEFAULT_TILE, bottom_up: bool = False,
@@ -156,6 +173,7 @@ def gather_expand(worklist, n_active, rows, colstarts, frontier,
         interpret=interpret)
 
 
+@_scoped("bfs.gather_expand_batched")
 def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
                           visited, out_init, p_init, *, n_vertices: int,
                           tile: int = ge.DEFAULT_TILE,
@@ -203,6 +221,7 @@ def _sell_budget_check(n_words: int, v_pad: int, step: int,
             f"prefetch_depth")
 
 
+@_scoped("bfs.sell")
 def sell(cols, slab_rows, frontier, visited, out_init, p_init, *,
          n_vertices: int, slabs_per_step: int = 1, worklist=None,
          n_active=None, bottom_up: bool = False,
@@ -237,6 +256,7 @@ def sell(cols, slab_rows, frontier, visited, out_init, p_init, *,
         prefetch_depth=prefetch_depth, interpret=interpret)
 
 
+@_scoped("bfs.sell_batched")
 def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
                  *, n_vertices: int, slabs_per_step: int = 1,
                  worklist=None, n_active=None, bottom_up: bool = False,
@@ -270,6 +290,7 @@ def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
         interpret=interpret)
 
 
+@_scoped("bfs.restore")
 def restore(parent, *, n_vertices: int, tile: int = rest.DEFAULT_TILE,
             interpret: bool | None = None):
     """Run the restoration kernel; tile auto-shrinks to divide V_pad.
@@ -298,6 +319,7 @@ def restore(parent, *, n_vertices: int, tile: int = rest.DEFAULT_TILE,
                             interpret=interpret)
 
 
+@_scoped("bfs.popcount")
 def popcount(words, *, interpret: bool | None = None):
     if interpret is None:
         interpret = _interpret_default()
@@ -315,6 +337,7 @@ def compact_fits(n_batch: int, size: int) -> bool:
         <= VMEM_BYTES * _VMEM_HEADROOM
 
 
+@_scoped("bfs.frontier_compact")
 def frontier_compact(words, *, size: int, fill: int,
                      interpret: bool | None = None):
     """Run the SIMD compaction kernel (kernels/compact.py): packed
@@ -327,6 +350,7 @@ def frontier_compact(words, *, size: int, fill: int,
                                interpret=interpret)
 
 
+@_scoped("bfs.frontier_compact_batched")
 def frontier_compact_batched(words, *, size: int, fill: int,
                              interpret: bool | None = None):
     """Batched compaction: (B, W) packed bitmaps -> ((B, size)
@@ -358,6 +382,7 @@ def megakernel_fits(n_words: int, v_pad: int, n_cs: int, tile: int,
         <= VMEM_BYTES * _VMEM_HEADROOM
 
 
+@_scoped("bfs.layer_fused")
 def layer_fused(rows, colstarts, frontier, visited, p_init, *,
                 n_vertices: int, tile: int = ge.DEFAULT_TILE,
                 bottom_up: bool = False, prefetch_depth: int = 0,
@@ -385,6 +410,7 @@ def layer_fused(rows, colstarts, frontier, visited, p_init, *,
         prefetch_depth=prefetch_depth, interpret=interpret)
 
 
+@_scoped("bfs.layer_fused_batched")
 def layer_fused_batched(rows, colstarts, frontier, visited, p_init, *,
                         n_vertices: int, tile: int = ge.DEFAULT_TILE,
                         bottom_up: bool = False, prefetch_depth: int = 0,

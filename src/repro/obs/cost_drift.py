@@ -1,0 +1,151 @@
+"""Analytic bytes model vs what XLA actually compiled.
+
+The repo's CI gates (PR 3/4/6) compare *analytic* per-layer byte
+models (`formats.base.layer_bytes` / `tile_bytes` / `plan_bytes`)
+against each other — fused vs materialized, packed vs dense.  Nothing
+checks the models against the *compiled program*: if a format's
+`layer_bytes` drifts from what its kernels really stream (a refactor
+changes the stream layout, a new XLA version fuses differently), every
+downstream gate keeps passing while measuring fiction.
+
+This module closes that loop.  For each (format, pipeline) it compiles
+the plan cache's single-layer tick — the exact executable `run`,
+`layer_step` and the serve tier share — and reads two independent
+compiled-side byte counts:
+
+* ``jax.jit(...).lower().compile().cost_analysis()`` — XLA's own
+  "bytes accessed" estimate;
+* `roofline.hlo_analyze.analyze` over the optimized HLO text — our
+  trip-count-aware analyzer (tighter fusion model).
+
+against the analytic *full-sweep* per-layer model (the compiled
+program is data-independent — it contains the code for every tile, so
+the comparable analytic figure is all-tiles-active + the planning
+pass, not a measured thin-frontier layer).
+
+The ratio ``compiled / analytic`` is NOT expected to be 1.0 — the
+compiled program also moves state bitmaps, work-lists, and whatever
+XLA materializes between fusions (interpret-mode Pallas adds its own
+overhead).  What the CI gate pins is the ratio's *stability*: the
+measured ratio must stay within tolerance of the committed
+BENCH_bfs.json baseline, so either side drifting (model edit, kernel
+rewrite, XLA upgrade) fails loudly instead of silently skewing the
+PR-3/4/6 gates.  See ``benchmarks/check_bytes_regression.py`` gate 4.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.core import engine as _engine
+
+
+class Drift(NamedTuple):
+    """One (format, pipeline) comparison row."""
+    format: str
+    pipeline: str
+    analytic_bytes: int        # full-sweep per-layer model
+    compiled_bytes: float      # XLA cost_analysis "bytes accessed"
+    hlo_bytes: float           # roofline.hlo_analyze over the HLO text
+    tile: int
+
+    @property
+    def ratio(self) -> float:
+        """compiled / analytic — the drift figure the CI gate pins."""
+        return (self.compiled_bytes / self.analytic_bytes
+                if self.analytic_bytes else float("nan"))
+
+    @property
+    def hlo_ratio(self) -> float:
+        return (self.hlo_bytes / self.analytic_bytes
+                if self.analytic_bytes else float("nan"))
+
+
+def cost_analysis_bytes(compiled) -> float:
+    """'bytes accessed' out of ``compiled.cost_analysis()`` across the
+    jax versions in play (dict, or a one-element list of dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return float(ca.get("bytes accessed", 0.0))
+
+
+def analytic_layer_bytes(fmt, *, pipeline: str, tile: int,
+                         packed: bool = True) -> int:
+    """The model's bytes for one FULL-SWEEP layer — the figure
+    comparable to a compiled (data-independent) layer program.
+
+    ``materialized`` streams the whole apportioned edge stream
+    (`layer_bytes`); the fused pipelines stream every tile plus the
+    planning pass (`tile_bytes * n_blocks + plan_bytes`) — the
+    all-tiles-active ceiling `formats.base.traversal_bytes` charges a
+    dense layer."""
+    _engine.check_pipeline(pipeline)
+    if pipeline == "materialized":
+        return fmt.layer_bytes()
+    n_blocks = -(-fmt.edge_slots // max(tile, 1))
+    return fmt.tile_bytes(tile) * n_blocks + fmt.plan_bytes(tile, packed)
+
+
+def measure_drift(graph, spec=None, *,
+                  pipelines=("fused_gather", "materialized"),
+                  batch: int = 1) -> list[Drift]:
+    """Compile the single-layer tick per pipeline and compare byte
+    counts.  Reuses the plan cache (`repro.bfs.plan`), so a pipeline
+    already compiled by tests/benchmarks costs only the ``lower``/
+    ``compile`` replay, not a new trace.
+
+    Args:
+      graph: Csr/EdgeList/GraphFormat (same contract as ``plan``).
+      spec: base `TraversalSpec`; its ``pipeline`` field is overridden
+        per entry of ``pipelines``.
+      pipelines: which pipeline flavours to compile (the caller skips
+        flavours the format rejects, e.g. megakernel on SELL).
+      batch: root-batch width of the compiled tick (1 = the analytic
+        model's single-root accounting).
+    """
+    import jax.numpy as jnp
+
+    from repro.api.plan import plan as _plan
+    from repro.api.spec import TraversalSpec
+    from repro.roofline import hlo_analyze
+
+    spec = spec if spec is not None else TraversalSpec()
+    out: list[Drift] = []
+    for pipeline in pipelines:
+        ct = _plan(graph, spec.replace(pipeline=pipeline))
+        fmt, rspec = ct.fmt, ct.resolved
+        roots = jnp.zeros((batch,), jnp.int32)
+        f, v, p = _engine._init_batched(roots, fmt.n_vertices,
+                                        fmt.n_vertices_padded)
+        lowered = ct.executable.layer_jit.lower(fmt, f, v, p)
+        compiled = lowered.compile()
+        out.append(Drift(
+            format=type(fmt).name,
+            pipeline=pipeline,
+            analytic_bytes=analytic_layer_bytes(
+                fmt, pipeline=pipeline, tile=rspec.tile,
+                packed=rspec.packed),
+            compiled_bytes=cost_analysis_bytes(compiled),
+            hlo_bytes=float(hlo_analyze.analyze(compiled.as_text())
+                            .bytes),
+            tile=rspec.tile))
+    return out
+
+
+def drift_rows(drifts: list[Drift], prefix: str = "obs.cost_drift"
+               ) -> dict:
+    """BENCH_bfs.json rows: ``{prefix}.{format}.{pipeline}`` ->
+    {analytic_bytes, compiled_bytes, hlo_bytes, ratio, hlo_ratio,
+    tile}.  The ``ratio`` value is what gate 4 of
+    ``check_bytes_regression`` pins against the committed baseline."""
+    rows = {}
+    for d in drifts:
+        rows[f"{prefix}.{d.format}.{d.pipeline}"] = {
+            "analytic_bytes": d.analytic_bytes,
+            "compiled_bytes": d.compiled_bytes,
+            "hlo_bytes": d.hlo_bytes,
+            "ratio": d.ratio,
+            "hlo_ratio": d.hlo_ratio,
+            "tile": d.tile,
+        }
+    return rows

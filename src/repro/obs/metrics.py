@@ -1,0 +1,232 @@
+"""Process-local metrics registry: counters, gauges, histograms.
+
+The serve tier's operational truth lives here — per-query
+submit→harvest latency, tick duration, queue depth, slot occupancy —
+and every benchmark ``emit`` mirrors its value in, so one snapshot
+shows TEPS/bytes next to the serving distributions they explain.
+
+Deliberately dependency-free and synchronous (this is a single-process
+engine; the registry is the in-process end of the pipe a real
+deployment would scrape).  Two export forms:
+
+* `MetricsRegistry.snapshot()` — a JSON-ready dict that round-trips
+  through ``json.dumps``/``loads`` unchanged (the obs-smoke contract);
+* `MetricsRegistry.to_prometheus()` — Prometheus-style text
+  exposition (counters/gauges as samples, histograms as summaries
+  with p50/p90/p99 quantile samples plus ``_count``/``_sum``).
+
+Histograms keep a bounded reservoir of the most recent
+``RESERVOIR_SIZE`` observations for quantiles (exact until the cap,
+sliding-window after) while ``count``/``sum``/``min``/``max`` stay
+exact over the full stream.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import math
+import threading
+import time
+from typing import Iterator
+
+RESERVOIR_SIZE = 4096
+
+#: quantiles exported by snapshots and the text exposition
+QUANTILES = (0.5, 0.9, 0.99)
+
+
+class Counter:
+    """Monotonically increasing counter."""
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(
+                f"counter {self.name!r} cannot decrease (inc by "
+                f"{amount}); use a Gauge for values that go down")
+        self._value += amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+
+    def set(self, value: float) -> None:
+        self._value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        self._value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self._value -= amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Histogram:
+    """Streaming distribution with exact count/sum/min/max and
+    reservoir-backed quantiles (`QUANTILES`)."""
+
+    def __init__(self, name: str, help: str = "",
+                 reservoir: int = RESERVOIR_SIZE):
+        self.name = name
+        self.help = help
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._window: collections.deque = collections.deque(
+            maxlen=reservoir)
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        self.count += 1
+        self.sum += value
+        self.min = min(self.min, value)
+        self.max = max(self.max, value)
+        self._window.append(value)
+
+    def time(self) -> "_Timer":
+        """``with hist.time(): ...`` observes the block's wall
+        seconds."""
+        return _Timer(self)
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 1]; nearest-rank over the reservoir window (NaN
+        when nothing has been observed)."""
+        if not self._window:
+            return math.nan
+        xs = sorted(self._window)
+        idx = min(len(xs) - 1, max(0, math.ceil(p * len(xs)) - 1))
+        return xs[idx]
+
+    def summary(self) -> dict:
+        d = {"count": self.count,
+             "sum": self.sum,
+             "min": self.min if self.count else None,
+             "max": self.max if self.count else None}
+        for q in QUANTILES:
+            v = self.percentile(q)
+            d[f"p{int(q * 100)}"] = None if math.isnan(v) else v
+        return d
+
+
+class _Timer:
+    def __init__(self, hist: Histogram):
+        self._hist = hist
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._hist.observe(time.perf_counter() - self._t0)
+        return False
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named metrics.
+
+    Names are free-form dotted strings (``serve.tick_s``,
+    ``bench.bfs_packed.path_teps``); re-requesting a name returns the
+    existing metric, and requesting it as a different type raises
+    (one name, one meaning)."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, help: str, **kwargs):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name, help, **kwargs)
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(m).__name__}, requested as {cls.__name__}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  reservoir: int = RESERVOIR_SIZE) -> Histogram:
+        return self._get(Histogram, name, help, reservoir=reservoir)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def __iter__(self) -> Iterator[tuple[str, object]]:
+        return iter(sorted(self._metrics.items()))
+
+    def clear(self) -> None:
+        """Drop every metric (tests)."""
+        with self._lock:
+            self._metrics.clear()
+
+    # -- export ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """JSON-ready state: ``{"counters": {...}, "gauges": {...},
+        "histograms": {name: {count, sum, min, max, p50, p90, p99}}}``.
+        Round-trips through ``json.dumps``/``loads`` unchanged."""
+        out: dict = {"counters": {}, "gauges": {}, "histograms": {}}
+        for name, m in self:
+            if isinstance(m, Counter):
+                out["counters"][name] = m.value
+            elif isinstance(m, Gauge):
+                out["gauges"][name] = m.value
+            else:
+                out["histograms"][name] = m.summary()
+        # the round-trip contract, enforced at the source: every value
+        # must be JSON-representable (inf/nan would survive dumps but
+        # not strict parsers)
+        return json.loads(json.dumps(out))
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition (histograms as summaries)."""
+        lines: list[str] = []
+        for name, m in self:
+            pname = name.replace(".", "_").replace("-", "_")
+            if isinstance(m, Counter):
+                lines.append(f"# TYPE {pname} counter")
+                lines.append(f"{pname} {m.value:g}")
+            elif isinstance(m, Gauge):
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f"{pname} {m.value:g}")
+            else:
+                lines.append(f"# TYPE {pname} summary")
+                for q in QUANTILES:
+                    v = m.percentile(q)
+                    if not math.isnan(v):
+                        lines.append(
+                            f'{pname}{{quantile="{q:g}"}} {v:g}')
+                lines.append(f"{pname}_count {m.count}")
+                lines.append(f"{pname}_sum {m.sum:g}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+#: the process-default registry — what the serve tier and benchmark
+#: `emit` record into unless handed an explicit one
+_REGISTRY = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    return _REGISTRY

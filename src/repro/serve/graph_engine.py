@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -38,6 +39,7 @@ import numpy as np
 
 from repro.core import bitmap as bm
 from repro.core import engine
+from repro.obs import metrics as obs_metrics
 
 
 @functools.partial(jax.jit, static_argnames=("slot", "n_vertices"))
@@ -93,13 +95,21 @@ class GraphEngine:
       algorithm/max_layers/pipeline/packed/prefetch_depth: deprecated
         loose-knob form of the same fields (kept for compatibility;
         emits DeprecationWarning).
+      registry: a `repro.obs.MetricsRegistry` to record serving
+        metrics into (default: the process registry,
+        `repro.obs.get_registry()`).  Recorded under ``serve.*``:
+        per-query submit→harvest latency (``serve.query_latency_s``
+        histogram — p50/p99 in its snapshot), tick duration
+        (``serve.tick_s``), queue depth / slot occupancy gauges, and
+        tick/query/skip counters.
     """
 
     def __init__(self, graph, batch_slots: int = 8,
                  algorithm=engine._UNSET, max_layers=engine._UNSET,
                  graph_format: str | None = "auto",
                  pipeline=engine._UNSET, packed=engine._UNSET,
-                 prefetch_depth=engine._UNSET, spec=None):
+                 prefetch_depth=engine._UNSET, spec=None,
+                 registry: obs_metrics.MetricsRegistry | None = None):
         from repro.api.plan import plan as _plan
         from repro.formats import GraphFormat, autotune
         if isinstance(graph, GraphFormat):
@@ -148,6 +158,31 @@ class GraphEngine:
         # serving run
         self.queue: collections.deque[BfsQuery] = collections.deque()
         self.finished: list[BfsQuery] = []
+        # serving metrics (ISSUE 7): the operational distributions the
+        # ROADMAP serve-SLO work will budget against
+        self.metrics = (registry if registry is not None
+                        else obs_metrics.get_registry())
+        self._m_latency = self.metrics.histogram(
+            "serve.query_latency_s",
+            "submit->harvest wall seconds per query")
+        self._m_tick = self.metrics.histogram(
+            "serve.tick_s", "wall seconds per engine tick")
+        self._m_queue = self.metrics.gauge(
+            "serve.queue_depth", "queries waiting for a slot")
+        self._m_occupancy = self.metrics.gauge(
+            "serve.slot_occupancy", "active slots / batch_slots")
+        self._m_ticks = self.metrics.counter(
+            "serve.ticks", "engine ticks that dispatched a layer_step")
+        self._m_skipped = self.metrics.counter(
+            "serve.ticks_skipped",
+            "ticks short-circuited with no active slot (no device "
+            "dispatch)")
+        self._m_submitted = self.metrics.counter(
+            "serve.queries_submitted")
+        self._m_finished = self.metrics.counter("serve.queries_finished")
+        self._m_truncated = self.metrics.counter(
+            "serve.queries_truncated",
+            "queries harvested PARTIAL at the max_layers budget")
 
     # -- resolved-spec views (legacy attribute compatibility) -----------
     @property
@@ -176,7 +211,10 @@ class GraphEngine:
         return self.compiled.resolved.max_layers
 
     def submit(self, query: BfsQuery):
+        query.meta.setdefault("submit_t", time.perf_counter())
         self.queue.append(query)
+        self._m_submitted.inc()
+        self._m_queue.set(len(self.queue))
 
     def _fill_slots(self):
         for i, q in enumerate(self.slots):
@@ -187,6 +225,10 @@ class GraphEngine:
                     self.frontier, self.visited, self.parent,
                     self._base_visited, jnp.asarray(nxt.root, jnp.int32),
                     slot=i, n_vertices=self.n_vertices)
+        self._m_queue.set(len(self.queue))
+
+    def _active_slots(self) -> int:
+        return sum(q is not None and not q.done for q in self.slots)
 
     def _harvest(self, i: int, q: BfsQuery, truncated: bool = False):
         p = np.asarray(self.parent[i, :self.n_vertices])
@@ -194,22 +236,42 @@ class GraphEngine:
         q.truncated = truncated
         q.done = True
         self.finished.append(q)
+        self._m_finished.inc()
+        if truncated:
+            self._m_truncated.inc()
+        t0 = q.meta.get("submit_t")
+        if t0 is not None:
+            q.meta["latency_s"] = time.perf_counter() - t0
+            self._m_latency.observe(q.meta["latency_s"])
 
     def step(self):
-        """One engine tick: advance every active query by one layer."""
-        self._fill_slots()
-        self.frontier, self.visited, self.parent = \
-            self.compiled.layer_step(self.frontier, self.visited,
-                                     self.parent)
-        counts = np.asarray(engine.row_popcounts(self.frontier))
-        for i, q in enumerate(self.slots):
-            if q is None or q.done:
-                continue
-            q.n_layers += 1
-            if counts[i] == 0:
-                self._harvest(i, q)
-            elif q.n_layers >= self.max_layers:
-                self._harvest(i, q, truncated=True)
+        """One engine tick: advance every active query by one layer.
+
+        When every slot is empty/done after the refill (drain tail,
+        or ticking an idle engine) the device ``layer_step`` is NOT
+        dispatched — the tick is a host no-op counted in
+        ``serve.ticks_skipped``.  Before ISSUE 7 every such tick paid
+        a full compiled step for zero active queries."""
+        with self._m_tick.time():
+            self._fill_slots()
+            n_active = self._active_slots()
+            self._m_occupancy.set(n_active / max(len(self.slots), 1))
+            if n_active == 0:
+                self._m_skipped.inc()
+                return
+            self._m_ticks.inc()
+            self.frontier, self.visited, self.parent = \
+                self.compiled.layer_step(self.frontier, self.visited,
+                                         self.parent)
+            counts = np.asarray(engine.row_popcounts(self.frontier))
+            for i, q in enumerate(self.slots):
+                if q is None or q.done:
+                    continue
+                q.n_layers += 1
+                if counts[i] == 0:
+                    self._harvest(i, q)
+                elif q.n_layers >= self.max_layers:
+                    self._harvest(i, q, truncated=True)
 
     def run_until_done(self, max_ticks: int = 100_000) -> int:
         """Drain the queue; returns the number of ticks taken."""
@@ -219,5 +281,14 @@ class GraphEngine:
             self.step()
             ticks += 1
             if ticks >= max_ticks:
-                raise RuntimeError("graph serving did not converge")
+                slot_layers = {i: q.n_layers
+                               for i, q in enumerate(self.slots)
+                               if q is not None and not q.done}
+                raise RuntimeError(
+                    f"graph serving did not converge within "
+                    f"{max_ticks} ticks: queue_depth="
+                    f"{len(self.queue)}, active_slots="
+                    f"{self._active_slots()}/{len(self.slots)}, "
+                    f"per-slot n_layers={slot_layers}, "
+                    f"max_layers={self.max_layers}")
         return ticks

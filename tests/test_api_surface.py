@@ -18,8 +18,10 @@ EXPECTED_ALL = (
     "LayerStats",
     "POLICIES",
     "PaperLiteralLayers",
+    "SpanTracer",
     "ThresholdSimd",
     "TopDown",
+    "TraceRun",
     "TraversalSpec",
     "clear_plan_cache",
     "direction_log",
@@ -27,6 +29,7 @@ EXPECTED_ALL = (
     "parents_graph500",
     "plan",
     "plan_cache_info",
+    "trace_run",
     "traverse",
 )
 

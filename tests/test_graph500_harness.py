@@ -1,0 +1,115 @@
+"""Graph500 harness edge cases (core/stats.py): zero-TEPS runs,
+``n_zero_runs`` bookkeeping, validate wiring, explicit-root override.
+
+Complements test_stats_harness.py (which exercises the random-root
+path on an RMAT graph) with a hand-built path graph + isolated vertex
+so the paper's unfiltered-root artifact (§5.3) is deterministic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csr as csr_mod
+from repro.core.bfs_parallel import run_bfs
+from repro.core.rmat import EdgeList
+from repro.core.stats import HarnessResult, RunResult, choose_roots, \
+    run_harness
+
+N = 8          # vertices 0..6 form a path; vertex 7 is isolated
+ISOLATED = 7
+
+
+@pytest.fixture(scope="module")
+def path_graph():
+    """0-1-2-3-4-5-6 path (both directions) + degree-0 vertex 7."""
+    src = [i for i in range(N - 2)] + [i + 1 for i in range(N - 2)]
+    dst = [i + 1 for i in range(N - 2)] + [i for i in range(N - 2)]
+    return csr_mod.from_edges(EdgeList(
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        n_vertices=N))
+
+
+def _bfs(c, r):
+    return run_bfs(c, r)
+
+
+def _path_depths(root: int) -> np.ndarray:
+    d = np.full(N, -1, np.int64)
+    d[:N - 1] = np.abs(np.arange(N - 1) - root)
+    return d
+
+
+def test_roots_override(path_graph):
+    res = run_harness(path_graph, _bfs, jax.random.PRNGKey(0),
+                      roots=[0, 3, 6])
+    assert [r.root for r in res.runs] == [0, 3, 6]
+    # every root reaches the whole 7-vertex path, never the isolate
+    assert all(r.reached == N - 1 for r in res.runs)
+    assert all(r.edges == N - 2 for r in res.runs)  # 6 undirected edges
+
+
+def test_disconnected_root_is_zero_run(path_graph):
+    res = run_harness(path_graph, _bfs, jax.random.PRNGKey(0),
+                      roots=[ISOLATED])
+    (run,) = res.runs
+    assert run.reached == 1          # only the root itself
+    assert run.edges == 0 and run.teps == 0.0
+    assert res.n_zero_runs == 1
+    # no connected run -> harmonic mean degenerates to 0, not a crash
+    assert res.hmean_teps == 0.0
+    assert res.max_teps == 0.0
+    assert "zero_runs=1" in res.summary()
+
+
+def test_mixed_roots_filtered_hmean(path_graph):
+    res = run_harness(path_graph, _bfs, jax.random.PRNGKey(0),
+                      roots=[0, ISOLATED, 3])
+    assert len(res.runs) == 3 and res.n_zero_runs == 1
+    # hmean is over the two connected runs only (documented deviation)
+    ts = [r.teps for r in res.runs if r.teps > 0]
+    assert len(ts) == 2
+    assert res.hmean_teps == pytest.approx(2 / sum(1 / t for t in ts))
+
+
+def test_validate_wiring(path_graph):
+    calls = []
+
+    def ref(root):
+        calls.append(root)
+        return _path_depths(root)
+
+    res = run_harness(path_graph, _bfs, jax.random.PRNGKey(0),
+                      roots=[0, 4], validate_runs=True,
+                      reference_depths_fn=ref)
+    assert calls == [0, 4]           # reference fn called per run
+    assert all(r.valid is True for r in res.runs)
+    # without validate_runs the field stays None
+    res2 = run_harness(path_graph, _bfs, jax.random.PRNGKey(0),
+                       roots=[0])
+    assert res2.runs[0].valid is None
+
+
+def test_validate_accepts_isolated_root(path_graph):
+    res = run_harness(path_graph, _bfs, jax.random.PRNGKey(0),
+                      roots=[ISOLATED], validate_runs=True)
+    assert res.runs[0].valid is True
+
+
+def test_hmean_zero_on_empty_result():
+    res = HarnessResult()
+    assert res.hmean_teps == 0.0 and res.max_teps == 0.0
+    res.runs.append(RunResult(root=0, seconds=0.0, edges=0, teps=0.0,
+                              reached=1))
+    assert res.n_zero_runs == 1 and res.hmean_teps == 0.0
+
+
+def test_choose_roots_connected_filter(path_graph):
+    deg = np.asarray(path_graph.degrees())
+    roots = choose_roots(jax.random.PRNGKey(3), N, n_roots=16,
+                         degrees=deg, require_connected=True)
+    assert ISOLATED not in roots
+    # unfiltered draw keeps whatever the PRNG lands on
+    unfiltered = choose_roots(jax.random.PRNGKey(3), N, n_roots=16)
+    assert len(unfiltered) == 16

@@ -1,0 +1,217 @@
+"""Unit tests for the obs subsystem (PR 7): span tracer, metrics
+registry, instrumented trace_run, and the cost-drift model probe."""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.bfs as bfs
+from repro.core import csr as csr_mod
+from repro.core import rmat
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       SpanTracer, drift_rows, get_registry,
+                       measure_drift, trace_run)
+from repro.obs.cost_drift import analytic_layer_bytes
+from repro.obs.trace import (LAYER_SPAN, STEP_SPAN, TRAVERSAL_SPAN,
+                             xla_profiler)
+
+
+@pytest.fixture(scope="module")
+def g8():
+    return csr_mod.from_edges(
+        rmat.generate(jax.random.PRNGKey(7), scale=8, edgefactor=8))
+
+
+# -- SpanTracer -----------------------------------------------------------
+
+def test_span_nesting_and_order():
+    tr = SpanTracer()
+    with tr.span("outer", kind="o") as o:
+        with tr.span("inner"):
+            pass
+        o.args["amended"] = 1
+    assert len(tr) == 2
+    inner, outer = tr.spans            # closed innermost-first
+    assert inner.name == "inner" and outer.name == "outer"
+    # containment: inner lives inside outer's [ts, ts+dur] window
+    assert outer.ts_us <= inner.ts_us
+    assert inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us + 1
+    assert outer.args == {"kind": "o", "amended": 1}
+
+
+def test_chrome_export_parses(tmp_path):
+    tr = SpanTracer()
+    with tr.span("a"):
+        pass
+    path = tr.export(str(tmp_path / "t.json"))
+    doc = json.loads(open(path).read())
+    assert doc["displayTimeUnit"] == "ms"
+    meta, ev = doc["traceEvents"]
+    assert meta["ph"] == "M" and meta["args"]["name"] == "repro.bfs"
+    assert ev == {"name": "a", "cat": "bfs", "ph": "X",
+                  "ts": ev["ts"], "dur": ev["dur"],
+                  "pid": meta["pid"], "tid": 1, "args": {}}
+
+
+def test_device_sync_modes():
+    x = jnp.ones(4)
+    SpanTracer(sync=True).device_sync(x)      # blocks, no error
+    SpanTracer(sync=False).device_sync(x)     # no-op
+
+
+def test_xla_profiler_noop_without_logdir():
+    with xla_profiler(None) as ld:
+        assert ld is None
+
+
+# -- metrics --------------------------------------------------------------
+
+def test_counter_monotonic():
+    c = Counter("c")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_updown():
+    g = Gauge("g")
+    g.set(5)
+    g.dec(2)
+    g.inc(0.5)
+    assert g.value == 3.5
+
+
+def test_histogram_exact_and_quantiles():
+    h = Histogram("h")
+    assert math.isnan(h.percentile(0.5))
+    for v in [5, 1, 3, 2, 4]:
+        h.observe(v)
+    assert (h.count, h.sum, h.min, h.max) == (5, 15.0, 1.0, 5.0)
+    assert h.percentile(0.5) == 3.0          # nearest-rank median
+    assert h.percentile(0.99) == 5.0
+    s = h.summary()
+    assert s["count"] == 5 and s["p50"] == 3.0 and s["p99"] == 5.0
+
+
+def test_histogram_reservoir_slides_but_count_exact():
+    h = Histogram("h", reservoir=4)
+    for v in range(10):
+        h.observe(v)
+    assert h.count == 10 and h.min == 0.0 and h.max == 9.0
+    assert h.percentile(0.5) >= 6            # window holds 6..9 only
+
+
+def test_histogram_timer():
+    h = Histogram("h")
+    with h.time():
+        pass
+    assert h.count == 1 and h.sum >= 0
+
+
+def test_registry_get_or_create_and_conflict():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+    assert "x" in reg and "y" not in reg
+    reg.clear()
+    assert "x" not in reg
+
+
+def test_snapshot_roundtrip_and_prometheus():
+    reg = MetricsRegistry()
+    reg.counter("a.b").inc(2)
+    reg.gauge("c-d").set(1.5)
+    reg.histogram("lat").observe(0.25)
+    snap = reg.snapshot()
+    assert snap == json.loads(json.dumps(snap))
+    assert snap["counters"]["a.b"] == 2.0
+    assert snap["histograms"]["lat"]["p50"] == 0.25
+    prom = reg.to_prometheus()
+    assert "# TYPE a_b counter" in prom and "a_b 2" in prom
+    assert "c_d 1.5" in prom
+    assert 'lat{quantile="0.5"} 0.25' in prom
+    assert "lat_count 1" in prom
+
+
+def test_empty_histogram_snapshot_is_json_safe():
+    reg = MetricsRegistry()
+    reg.histogram("never")
+    snap = reg.snapshot()                    # inf min/max must not leak
+    assert snap["histograms"]["never"]["min"] is None
+    assert snap["histograms"]["never"]["p99"] is None
+
+
+def test_default_registry_is_shared():
+    assert get_registry() is get_registry()
+
+
+# -- trace_run ------------------------------------------------------------
+
+def test_trace_run_matches_fused_engine(g8):
+    from repro.core.validate import validate
+
+    ct = bfs.plan(g8)
+    tr = trace_run(g8, 3)
+    ref = ct.run(3)
+    assert int(tr.depths) == int(ref.depths)
+    # parent ties may break differently between the fused program and
+    # the layer tick; both must be valid BFS trees over the same set
+    assert np.array_equal(np.asarray(tr.state.visited),
+                          np.asarray(ref.state.visited))
+    p = bfs.parents_graph500(tr.state, g8.n_vertices)
+    assert validate(g8, p, 3).ok
+    fused = ct.stats(ref)
+    assert len(tr.stats) == len(fused)
+    for a, b in zip(tr.stats, fused):
+        assert (a.frontier_vertices, a.edges_examined, a.discovered) \
+            == (b.frontier_vertices, b.edges_examined, b.discovered)
+
+
+def test_trace_run_span_contract(g8):
+    tr = trace_run(g8, [0, 5])
+    names = [s.name for s in tr.tracer.spans]
+    assert names.count(TRAVERSAL_SPAN) == 1
+    assert names.count(LAYER_SPAN) == len(tr.stats)
+    assert names.count(STEP_SPAN) == len(tr.stats)
+    assert len(tr.layer_seconds) == len(tr.stats)
+    assert all(s >= 0 for s in tr.layer_seconds)
+    assert tr.depths.shape == (2,)
+    top = [s for s in tr.tracer.spans if s.name == TRAVERSAL_SPAN][0]
+    assert top.args["n_roots"] == 2
+    assert top.args["n_layers"] == len(tr.stats)
+
+
+def test_trace_run_reuses_plan_and_tracer(g8):
+    ct = bfs.plan(g8)
+    tracer = SpanTracer()
+    tr = ct.trace_run(0, tracer=tracer)
+    assert tr.tracer is tracer and len(tracer) > 0
+
+
+# -- cost drift -----------------------------------------------------------
+
+def test_analytic_layer_bytes_positive(g8):
+    from repro.formats import build
+    fmt = build(g8, "csr")
+    full = analytic_layer_bytes(fmt, pipeline="materialized", tile=None)
+    fused = analytic_layer_bytes(fmt, pipeline="fused_gather", tile=256)
+    assert full > 0 and fused > 0
+
+
+def test_measure_drift_and_rows(g8):
+    (d,) = measure_drift(g8, pipelines=("fused_gather",))
+    assert d.format == "csr" and d.pipeline == "fused_gather"
+    assert d.analytic_bytes > 0 and d.compiled_bytes > 0
+    assert d.ratio == d.compiled_bytes / d.analytic_bytes
+    assert d.hlo_bytes > 0 and d.hlo_ratio > 0
+    rows = drift_rows([d])
+    assert list(rows) == ["obs.cost_drift.csr.fused_gather"]
+    row = rows["obs.cost_drift.csr.fused_gather"]
+    assert row["ratio"] == pytest.approx(d.ratio)
+    assert row["analytic_bytes"] == d.analytic_bytes
