@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-quick obs-smoke bench bench-quick bench-formats bench-affinity bench-gate
+.PHONY: test test-quick obs-smoke chaos-smoke bench bench-quick bench-formats bench-affinity bench-gate
 
 test:            ## full tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -12,11 +12,16 @@ test-quick:      ## BFS substrate + engine + formats + API (fast inner loop)
 	    tests/test_formats.py tests/test_gather_pipeline.py \
 	    tests/test_packed_engine.py tests/test_plan_api.py \
 	    tests/test_api_surface.py tests/test_megakernel.py \
-	    tests/test_obs.py
+	    tests/test_obs.py tests/test_serve_robust.py \
+	    tests/test_graph_validation.py
 	$(MAKE) obs-smoke
+	$(MAKE) chaos-smoke
 
 obs-smoke:       ## end-to-end obs contract (trace JSON + serve metrics)
 	$(PY) -m benchmarks.obs_smoke
+
+chaos-smoke:     ## serve robustness under fault injection (zero lost queries)
+	$(PY) -m benchmarks.chaos_smoke
 
 bench:           ## full benchmark harness
 	$(PY) -m benchmarks.run

@@ -32,6 +32,35 @@ import numpy as np
 
 from repro.api.spec import TraversalSpec, as_format
 from repro.core import engine as _engine
+from repro.errors import GraphValidationError
+
+
+def check_roots(roots, n_vertices: int) -> None:
+    """Admission-time root validation (ISSUE 8): every root must be an
+    integer in ``[0, n_vertices)``.  Raises `GraphValidationError`
+    (IS-A ``ValueError``) — an out-of-range root would silently index
+    the sentinel/padding region and return a wrong tree.  Tracer-held
+    roots (inside a jitted caller) skip the check."""
+    try:
+        arr = np.asarray(roots)
+    except Exception:
+        return
+    if arr.dtype.kind == "f":
+        if np.any(~np.isfinite(arr)) or np.any(arr != np.floor(arr)):
+            raise GraphValidationError(
+                f"roots must be integers in [0, {n_vertices}), got "
+                f"non-integral/NaN values {arr!r}")
+    elif arr.dtype.kind not in "iu":
+        raise GraphValidationError(
+            f"roots must be integers in [0, {n_vertices}), got dtype "
+            f"{arr.dtype}")
+    if arr.size and (int(arr.min()) < 0
+                     or int(arr.max()) >= n_vertices):
+        bad = int(arr.min()) if int(arr.min()) < 0 else int(arr.max())
+        raise GraphValidationError(
+            f"root {bad} is outside [0, n_vertices={n_vertices}); "
+            f"roots index real vertices (the sentinel/padding region "
+            f"would return a wrong tree, not an error)")
 
 
 def geometry_key(fmt) -> tuple:
@@ -127,6 +156,7 @@ class CompiledTraversal:
         semantics.  On a mesh-bound plan, runs the distributed program
         instead and returns its ``(parent, layers)`` pair."""
         if self.mesh is not None:
+            check_roots(roots, self.fmt.n_vertices)
             return self._run_distributed(roots)
         single = jnp.ndim(roots) == 0
         res = self.run_batched(
@@ -151,6 +181,7 @@ class CompiledTraversal:
             raise NotImplementedError(
                 "mesh-bound plans run one root per launch via .run(); "
                 "batched multi-root distributed search is not wired up")
+        check_roots(roots, self.fmt.n_vertices)
         roots = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
         n = int(roots.shape[0])
         if n == 0:
@@ -278,7 +309,15 @@ def plan(graph, spec: TraversalSpec | None = None, *,
         per-chip program derived from the same resolved spec
         (``merge``/``max_layers``).
     """
+    # admission-time structural validation (ISSUE 8): raw Csr inputs
+    # are checked BEFORE as_format wraps them (CsrFormat's int() ctor
+    # would turn NaN geometry into an untyped ValueError), built
+    # formats through their own validate_structure hook
+    from repro.core.csr import Csr as _Csr, check_structure
+    if isinstance(graph, _Csr):
+        check_structure(graph)
     fmt = as_format(graph)
+    fmt.validate_structure()
     spec = spec if spec is not None else TraversalSpec()
     if mesh is not None:
         # same contract as run_bfs_distributed(spec=): flag

@@ -22,13 +22,16 @@ remainder special cases, with zero branches.
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitmap as bm
 from repro.core.rmat import EdgeList
+from repro.errors import GraphValidationError
 
 LANES = 128  # TPU vector lane count; the "64-byte boundary" analogue.
 
@@ -117,6 +120,109 @@ def padding_premarked_visited(n_vertices: int) -> jax.Array:
 def init_visited(csr: Csr) -> jax.Array:
     """`padding_premarked_visited` for a built CSR."""
     return padding_premarked_visited(csr.n_vertices)
+
+
+def _as_count(name: str, value) -> int:
+    """Coerce a geometry scalar to a non-negative int or raise
+    `GraphValidationError` (NaN/inf/fractional/negative all name the
+    invariant)."""
+    if isinstance(value, bool):
+        raise GraphValidationError(
+            f"{name} must be a non-negative integer, got the bool "
+            f"{value!r}; pass a vertex/edge count")
+    if isinstance(value, float):
+        if math.isnan(value) or math.isinf(value) \
+                or value != int(value):
+            raise GraphValidationError(
+                f"{name} must be a non-negative integer, got {value!r} "
+                f"(NaN/inf/fractional geometry would silently mis-size "
+                f"every vertex-indexed array); pass an exact int")
+        value = int(value)
+    if not isinstance(value, (int, np.integer)):
+        raise GraphValidationError(
+            f"{name} must be a non-negative integer, got "
+            f"{type(value).__name__} {value!r}")
+    value = int(value)
+    if value < 0:
+        raise GraphValidationError(
+            f"{name} must be >= 0, got {value}")
+    return value
+
+
+def check_structure(csr: Csr) -> Csr:
+    """Strict admission-time structural validation (ISSUE 8).
+
+    Raises `repro.errors.GraphValidationError` (which IS-A
+    ``ValueError``) when the CSR could produce a *wrong traversal*
+    rather than an error: non-monotone ``colstarts``, out-of-range
+    neighbor ids, float/NaN geometry, mismatched edge counts, wrong
+    dtypes.  Every message names the violated invariant and the fix.
+
+    Tracer-held arrays (a `Csr` flowing through a jitted legacy shim)
+    skip the data checks — values are unreadable at trace time; the
+    geometry scalars, which are always Python ints, are still checked.
+    Returns ``csr`` so call sites can chain.
+    """
+    v = _as_count("n_vertices", csr.n_vertices)
+    e = _as_count("n_edges", csr.n_edges)
+    if v < 1:
+        raise GraphValidationError(
+            "n_vertices must be >= 1 (a BFS needs at least a root "
+            "vertex); got 0")
+    try:
+        rows = np.asarray(csr.rows)
+        colstarts = np.asarray(csr.colstarts)
+    except Exception:
+        return csr  # tracer-held: data checked at concrete admission
+    for name, arr in (("rows", rows), ("colstarts", colstarts)):
+        if arr.ndim != 1:
+            raise GraphValidationError(
+                f"{name} must be 1-D, got shape {arr.shape}")
+        if arr.dtype.kind not in "iu":
+            raise GraphValidationError(
+                f"{name} must have an integer dtype (vertex ids), got "
+                f"{arr.dtype}; cast with .astype(jnp.int32)")
+    if colstarts.shape[0] != v + 1:
+        raise GraphValidationError(
+            f"colstarts must have n_vertices+1 = {v + 1} entries "
+            f"(one past-the-end offset per vertex), got "
+            f"{colstarts.shape[0]}")
+    if colstarts.shape[0] and int(colstarts[0]) != 0:
+        raise GraphValidationError(
+            f"colstarts[0] must be 0 (offsets index into rows from the "
+            f"start), got {int(colstarts[0])}")
+    if np.any(np.diff(colstarts) < 0):
+        bad = int(np.argmax(np.diff(colstarts) < 0))
+        raise GraphValidationError(
+            f"colstarts must be non-decreasing (adjacency extents "
+            f"cannot have negative length); colstarts[{bad}]="
+            f"{int(colstarts[bad])} > colstarts[{bad + 1}]="
+            f"{int(colstarts[bad + 1])}")
+    if int(colstarts[-1]) != e:
+        raise GraphValidationError(
+            f"colstarts[-1] ({int(colstarts[-1])}) must equal n_edges "
+            f"({e}); the offsets and the declared edge count disagree")
+    if rows.shape[0] < e:
+        raise GraphValidationError(
+            f"rows has {rows.shape[0]} entries but colstarts addresses "
+            f"{e} edges; the adjacency array is truncated")
+    if e:
+        real = rows[:e]
+        lo, hi = int(real.min()), int(real.max())
+        if lo < 0 or hi >= v:
+            bad_val = lo if lo < 0 else hi
+            raise GraphValidationError(
+                f"rows contains neighbor id {bad_val} outside "
+                f"[0, n_vertices={v}); every real adjacency entry must "
+                f"name an existing vertex (the sentinel {v} is only "
+                f"legal in the padding tail)")
+    if rows.shape[0] > e:
+        pad = rows[e:]
+        if np.any(pad < 0) or np.any(pad > v):
+            raise GraphValidationError(
+                f"rows padding tail contains ids outside [0, "
+                f"sentinel={v}]; pad with the sentinel vertex id {v}")
+    return csr
 
 
 def traversed_edges(csr: Csr, reached: jax.Array) -> jax.Array:

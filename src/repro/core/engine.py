@@ -106,6 +106,17 @@ MODE_NAMES = {MODE_SCALAR: "topdown", MODE_SIMD: "topdown",
 
 PIPELINES = ("fused_gather", "materialized", "megakernel")
 
+
+def _record_degrade(site: str, reason: str, fallback: str,
+                    detail: str = ""):
+    """Emit an observable `obs.metrics.DegradeEvent` from a fallback
+    decision (ISSUE 8).  Imported lazily: `repro.obs` pulls the plan
+    layer at package-import time, which pulls this module — the
+    runtime call happens long after both are loaded, so the lazy form
+    is cycle-free where a top-level import would not be."""
+    from repro.obs.metrics import record_degrade
+    return record_degrade(site, reason, fallback, detail)
+
 # on-device per-layer stats buffer columns
 (_ST_FRONTIER, _ST_EDGES, _ST_DISCOVERED, _ST_MODE, _ST_ACTIVE,
  _ST_TILES, _ST_TRUNC, _ST_LAUNCH) = range(8)
@@ -402,16 +413,26 @@ def plan_active_tiles(colstarts, active_words, n_vertices: int,
     range-marks from it; ``packed=True`` compacts the bitmap with the
     SIMD kernel first (V/8 bytes of mask reads + a queue of the live
     vertices) and range-marks from the queue — the packed engine's
-    planning arm.  Oversized working sets silently take the dense arm
+    planning arm.  Oversized working sets take the dense arm
     (`ops.compact_fits`), so huge graphs keep traversing like they
-    did before the packed default.
+    did before the packed default — and since ISSUE 8 the fallback
+    emits a ``serve.degrade.vmem_fallback`` `DegradeEvent` instead of
+    happening silently.
     """
     v_pad = active_words.shape[0] * bm.BITS_PER_WORD
-    if packed and ops.compact_fits(1, v_pad):
-        queue, _ = ops.frontier_compact(active_words, size=v_pad,
-                                        fill=n_vertices)
-        return mark_blocks_from_queue(colstarts, queue, n_vertices,
-                                      tile, n_blocks)
+    if packed:
+        if ops.compact_fits(1, v_pad):
+            queue, _ = ops.frontier_compact(active_words, size=v_pad,
+                                            fill=n_vertices)
+            return mark_blocks_from_queue(colstarts, queue, n_vertices,
+                                          tile, n_blocks)
+        _record_degrade(
+            "vmem_fallback",
+            reason=ops.budget_detail(
+                f"frontier_compact(1x{v_pad})",
+                ops.compact_budget(1, v_pad)),
+            fallback="dense planner (plan_active_tiles, packed arm "
+                     "disabled)")
     dense = bm.unpack_bool(active_words)[:n_vertices]
     start, end = colstarts[:-1], colstarts[1:]
     return _mark_blocks(start, end, dense & (end > start), tile,
@@ -428,12 +449,21 @@ def plan_active_tiles_batched(colstarts, active_words, n_vertices: int,
     kernel's VMEM budget) vmaps the dense planner."""
     n_batch, w = active_words.shape
     v_pad = w * bm.BITS_PER_WORD
-    if packed and ops.compact_fits(n_batch, v_pad):
-        queues, _ = ops.frontier_compact_batched(
-            active_words, size=v_pad, fill=n_vertices)
-        return jax.vmap(
-            lambda q: mark_blocks_from_queue(colstarts, q, n_vertices,
-                                             tile, n_blocks))(queues)
+    if packed:
+        if ops.compact_fits(n_batch, v_pad):
+            queues, _ = ops.frontier_compact_batched(
+                active_words, size=v_pad, fill=n_vertices)
+            return jax.vmap(
+                lambda q: mark_blocks_from_queue(colstarts, q,
+                                                 n_vertices, tile,
+                                                 n_blocks))(queues)
+        _record_degrade(
+            "vmem_fallback",
+            reason=ops.budget_detail(
+                f"frontier_compact({n_batch}x{v_pad})",
+                ops.compact_budget(n_batch, v_pad)),
+            fallback="dense planner (plan_active_tiles_batched, "
+                     "packed arm disabled)")
     return jax.vmap(
         lambda a: plan_active_tiles(colstarts, a, n_vertices, tile,
                                     n_blocks, packed=False))(
@@ -592,14 +622,24 @@ def _batched_edge_stream(colstarts, rows, frontier, list_size: int,
 
     The packed arm compacts the whole batch in one kernel launch and
     vmaps only the pure-jnp apportionment; the legacy arm (and any
-    working set past the compaction kernel's VMEM budget) vmaps the
-    dense `edge_stream` whole."""
-    if packed and ops.compact_fits(frontier.shape[0], list_size):
-        fl, _ = ops.frontier_compact_batched(frontier, size=list_size,
-                                             fill=n_vertices)
-        return jax.vmap(
-            lambda l: apportion(colstarts, rows, l, n_vertices,
-                                n_slots))(fl)
+    working set past the compaction kernel's VMEM budget, observably —
+    ``serve.degrade.vmem_fallback``) vmaps the dense `edge_stream`
+    whole."""
+    n_batch = frontier.shape[0]
+    if packed:
+        if ops.compact_fits(n_batch, list_size):
+            fl, _ = ops.frontier_compact_batched(
+                frontier, size=list_size, fill=n_vertices)
+            return jax.vmap(
+                lambda l: apportion(colstarts, rows, l, n_vertices,
+                                    n_slots))(fl)
+        _record_degrade(
+            "vmem_fallback",
+            reason=ops.budget_detail(
+                f"frontier_compact({n_batch}x{list_size})",
+                ops.compact_budget(n_batch, list_size)),
+            fallback="dense edge_stream (materialized frontier lists, "
+                     "packed arm disabled)")
     return jax.vmap(
         lambda f: edge_stream(colstarts, rows, f, list_size, n_vertices,
                               n_slots))(frontier)
@@ -763,7 +803,17 @@ def _make_bottomup_step(colstarts, rows, n_vertices: int, v_pad: int,
 
     def step(frontier, visited, parent):
         with ops.count_launches() as ct:
-            if packed and ops.compact_fits(frontier.shape[0], v_pad):
+            fits = ops.compact_fits(frontier.shape[0], v_pad)
+            if packed and not fits:
+                _record_degrade(
+                    "vmem_fallback",
+                    reason=ops.budget_detail(
+                        f"frontier_compact({frontier.shape[0]}x"
+                        f"{v_pad})",
+                        ops.compact_budget(frontier.shape[0], v_pad)),
+                    fallback="dense bottom-up candidate stream "
+                             "(packed arm disabled)")
+            if packed and fits:
                 cands, _ = ops.frontier_compact_batched(
                     ~visited, size=v_pad, fill=n_vertices)
                 cand, nbr, valid, trunc = jax.vmap(
@@ -810,10 +860,21 @@ def _make_steps(colstarts, rows, n_vertices, v_pad, e_pad, algorithm,
                 colstarts, rows_t, n_vertices, tile, bottom_up=True,
                 prefetch_depth=prefetch_depth)
         else:
-            # silent degrade, mirroring ops.compact_fits: a working
-            # set past the fused VMEM budget traverses via the unfused
-            # fused_gather steps (the stats launch counter then
-            # honestly reports the unfused cost)
+            # observable degrade, mirroring ops.compact_fits: a
+            # working set past the fused VMEM budget traverses via the
+            # unfused fused_gather steps (the stats launch counter
+            # then honestly reports the unfused cost)
+            _record_degrade(
+                "vmem_fallback",
+                reason=ops.budget_detail(
+                    f"megakernel(v_pad={v_pad}, tile={tile}, "
+                    f"blocks={n_blocks}, depth={prefetch_depth})",
+                    ops.megakernel_budget(
+                        v_pad // bm.BITS_PER_WORD, v_pad,
+                        int(colstarts.shape[0]), tile, prefetch_depth,
+                        n_blocks)),
+                fallback="pipeline='fused_gather' unfused steps "
+                         "(3 launches/layer instead of 1)")
             simd = _make_fused_step(colstarts, rows_t, n_vertices,
                                     tile, bottom_up=False,
                                     packed=packed,

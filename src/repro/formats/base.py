@@ -282,6 +282,28 @@ class GraphFormat(abc.ABC):
         return (self.plan_mask_bytes(packed)    # active mask read
                 + 2 * 4 * n_blocks)             # work-list write+read
 
+    # -- admission-time validation (ISSUE 8) ----------------------------
+    def validate_structure(self) -> "GraphFormat":
+        """Strict structural validation at admission time.
+
+        Raises `repro.errors.GraphValidationError` when the built
+        layout could produce a *wrong traversal* (out-of-range ids,
+        non-monotone extents, NaN geometry).  The default covers the
+        geometry scalars every format shares; layouts with checkable
+        adjacency arrays override (CsrFormat routes through
+        `core.csr.check_structure`).  Tracer-held arrays skip data
+        checks.  Returns ``self`` so call sites can chain.
+        """
+        from repro.core.csr import _as_count
+        from repro.errors import GraphValidationError
+        v = _as_count("n_vertices", self.n_vertices)
+        _as_count("n_edges", self.n_edges)
+        if v < 1:
+            raise GraphValidationError(
+                "n_vertices must be >= 1 (a BFS needs at least a root "
+                "vertex); got 0")
+        return self
+
     # -- shared init helpers --------------------------------------------
     def init_visited(self) -> jax.Array:
         """Visited bitmap with every padding vertex pre-marked — the

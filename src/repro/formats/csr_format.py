@@ -58,6 +58,16 @@ class CsrFormat(GraphFormat):
         return Csr(rows=self.rows, colstarts=self.colstarts,
                    n_vertices=self._n_vertices, n_edges=self._n_edges)
 
+    def validate_structure(self) -> "CsrFormat":
+        # memoized per instance: the data checks read the device
+        # arrays back to host (O(E)), and the plan cache's hot path
+        # re-plans the same format object many times
+        if not getattr(self, "_structure_ok", False):
+            from repro.core.csr import check_structure
+            check_structure(self.to_csr())
+            self._structure_ok = True
+        return self
+
     # -- static geometry -------------------------------------------------
     @property
     def n_vertices(self) -> int:

@@ -24,6 +24,20 @@ VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core
 _VMEM_HEADROOM = 0.75          # leave room for pipeline double-buffers
 
 
+def vmem_limit_bytes() -> int:
+    """The working-set ceiling every ``*_fits`` predicate tests
+    against (VMEM minus double-buffer headroom)."""
+    return int(VMEM_BYTES * _VMEM_HEADROOM)
+
+
+def budget_detail(name: str, budget_bytes: int) -> str:
+    """One-line human record of a failed VMEM budget — what
+    `obs.metrics.record_degrade` reasons are built from, so every
+    degrade log names the budget that failed in the same format."""
+    return (f"{name} working set {budget_bytes / 2**20:.2f} MiB > "
+            f"VMEM budget {vmem_limit_bytes() / 2**20:.1f} MiB")
+
+
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
@@ -327,14 +341,22 @@ def popcount(words, *, interpret: bool | None = None):
     return bitmap_kernels.popcount(words, interpret=interpret)
 
 
+def compact_budget(n_batch: int, size: int) -> int:
+    """Bytes the compaction kernel's (B, size) queue block pins in
+    VMEM — the number `compact_fits` tests and degrade events report."""
+    return ck.vmem_budget(n_batch, size, ck.DEFAULT_TILE_WORDS)
+
+
 def compact_fits(n_batch: int, size: int) -> bool:
     """True when the compaction kernel's (B, size) queue block fits
     the VMEM budget.  The engine's packed planning arms consult this
-    at trace time and silently fall back to the dense planner when it
-    is False — large graphs keep working exactly as they did before
-    the packed default, instead of failing on the budget check."""
-    return ck.vmem_budget(n_batch, size, ck.DEFAULT_TILE_WORDS) \
-        <= VMEM_BYTES * _VMEM_HEADROOM
+    at trace time and fall back to the dense planner when it is False
+    — large graphs keep working exactly as they did before the packed
+    default, instead of failing on the budget check.  Since ISSUE 8
+    the fallback is *observable*: every caller that degrades emits a
+    ``serve.degrade.vmem_fallback`` `obs.metrics.DegradeEvent` naming
+    this budget and the planner actually used."""
+    return compact_budget(n_batch, size) <= VMEM_BYTES * _VMEM_HEADROOM
 
 
 @_scoped("bfs.frontier_compact")
@@ -362,10 +384,15 @@ def frontier_compact_batched(words, *, size: int, fill: int,
                                        interpret=interpret)
 
 
-def _megakernel_budget(n_words: int, v_pad: int, n_cs: int, tile: int,
-                       prefetch_depth: int, n_blocks: int) -> int:
+def megakernel_budget(n_words: int, v_pad: int, n_cs: int, tile: int,
+                      prefetch_depth: int, n_blocks: int) -> int:
+    """Bytes the whole-layer megakernel pins in VMEM — the number
+    `megakernel_fits` tests and degrade events report."""
     return lf.vmem_budget(n_words, v_pad, n_cs, tile, prefetch_depth,
                           n_blocks)
+
+
+_megakernel_budget = megakernel_budget    # back-compat alias
 
 
 def megakernel_fits(n_words: int, v_pad: int, n_cs: int, tile: int,
@@ -373,12 +400,15 @@ def megakernel_fits(n_words: int, v_pad: int, n_cs: int, tile: int,
     """True when the whole-layer megakernel's working set (bitmaps +
     P + colstarts + rows DMA buffers + the in-kernel planning
     vectors) fits the VMEM budget.  `CsrFormat._build_steps` consults
-    this at build time and silently degrades ``pipeline="megakernel"``
-    to the unfused ``fused_gather`` step when it is False — mirroring
+    this at build time and degrades ``pipeline="megakernel"`` to the
+    unfused ``fused_gather`` step when it is False — mirroring
     `compact_fits`: large graphs keep traversing (at the unfused
-    launch count) instead of failing on the budget check."""
-    return _megakernel_budget(n_words, v_pad, n_cs, tile,
-                              prefetch_depth, n_blocks) \
+    launch count) instead of failing on the budget check.  Since
+    ISSUE 8 the degrade emits a ``serve.degrade.vmem_fallback``
+    `obs.metrics.DegradeEvent` naming this budget and the pipeline
+    actually built."""
+    return megakernel_budget(n_words, v_pad, n_cs, tile,
+                             prefetch_depth, n_blocks) \
         <= VMEM_BYTES * _VMEM_HEADROOM
 
 

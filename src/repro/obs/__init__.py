@@ -31,21 +31,27 @@ Three modules, one concern each:
   diverge from the compiled program.
 """
 from repro.obs.cost_drift import Drift, drift_rows, measure_drift
-from repro.obs.metrics import (Counter, Gauge, Histogram,
-                               MetricsRegistry, get_registry)
+from repro.obs.metrics import (Counter, DegradeEvent, Gauge, Histogram,
+                               MetricsRegistry, clear_degrade_log,
+                               degrade_log, get_registry,
+                               record_degrade)
 from repro.obs.trace import SpanTracer, TraceRun, trace_run, xla_profiler
 
 __all__ = [
     "Counter",
+    "DegradeEvent",
     "Drift",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
     "SpanTracer",
     "TraceRun",
+    "clear_degrade_log",
+    "degrade_log",
     "drift_rows",
     "get_registry",
     "measure_drift",
+    "record_degrade",
     "trace_run",
     "xla_profiler",
 ]

@@ -23,7 +23,9 @@ exact over the full stream.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import json
+import logging
 import math
 import threading
 import time
@@ -230,3 +232,98 @@ _REGISTRY = MetricsRegistry()
 
 def get_registry() -> MetricsRegistry:
     return _REGISTRY
+
+
+# ---------------------------------------------------------------------------
+# Degradation events (ISSUE 8)
+# ---------------------------------------------------------------------------
+# Before this tier, every capacity-driven fallback in the kernel/plan
+# path was SILENT: `ops.megakernel_fits` quietly rebuilt the layer as
+# unfused steps, `ops.compact_fits` quietly took the dense planner,
+# and `spec.resolve` quietly downgraded an auto-selected megakernel on
+# formats without one.  Each of those is the right *behavior* (a
+# working set past the VMEM budget must still traverse) but the wrong
+# *observability*: an operator watching a latency regression had no
+# signal that the engine was running a slower pipeline than the spec
+# asked for.  `record_degrade` is the one emission point: every
+# fallback site now produces a `DegradeEvent` — counted under
+# ``serve.degrade.<site>``, appended to a bounded in-process log, and
+# warn-once logged with the budget that failed and the pipeline that
+# actually runs.
+
+_LOG = logging.getLogger("repro.serve")
+
+#: bounded ring of recent events — the post-mortem view `degrade_log`
+#: exposes (counters aggregate; this keeps the *reasons*)
+_DEGRADE_LOG_SIZE = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeEvent:
+    """One observable step down the degradation ladder.
+
+    Attributes:
+      site: stable counter key (``serve.degrade.<site>``) — e.g.
+        ``"vmem_fallback"`` (a VMEM budget rejected the working set)
+        or ``"pipeline_unsupported"`` (the format lacks the
+        auto-selected pipeline).
+      reason: which budget/capability failed, with numbers.
+      fallback: what actually runs instead (the honest record an
+        operator needs next to a latency regression).
+      detail: optional free-form context (geometry, shapes).
+    """
+
+    site: str
+    reason: str
+    fallback: str
+    detail: str = ""
+
+
+_degrade_events: collections.deque = collections.deque(
+    maxlen=_DEGRADE_LOG_SIZE)
+_degrade_warned: set = set()
+_degrade_lock = threading.Lock()
+
+
+def record_degrade(site: str, reason: str, fallback: str,
+                   detail: str = "",
+                   registry: MetricsRegistry | None = None
+                   ) -> DegradeEvent:
+    """Emit a `DegradeEvent`: count + log-once + append to the ring.
+
+    Called from trace/build time code paths (the fallback decisions
+    are host booleans), so it is a pure host side effect — safe inside
+    ``jax.jit`` tracing and ``jax.eval_shape``.  The warn-once key is
+    ``(site, reason)``: the first occurrence logs at WARNING, repeats
+    only count (a serving loop re-tracing per geometry must not spam).
+    """
+    ev = DegradeEvent(site=site, reason=reason, fallback=fallback,
+                      detail=detail)
+    reg = registry if registry is not None else get_registry()
+    reg.counter(
+        f"serve.degrade.{site}",
+        "observable degradation events (see obs.metrics.DegradeEvent)"
+    ).inc()
+    with _degrade_lock:
+        _degrade_events.append(ev)
+        key = (site, reason)
+        first = key not in _degrade_warned
+        if first:
+            _degrade_warned.add(key)
+    if first:
+        _LOG.warning("degrade[%s]: %s -> running %s%s", site, reason,
+                     fallback, f" ({detail})" if detail else "")
+    return ev
+
+
+def degrade_log() -> tuple:
+    """Snapshot of the most recent `DegradeEvent`\\ s (newest last)."""
+    with _degrade_lock:
+        return tuple(_degrade_events)
+
+
+def clear_degrade_log() -> None:
+    """Drop the event ring and re-arm every warn-once (tests)."""
+    with _degrade_lock:
+        _degrade_events.clear()
+        _degrade_warned.clear()

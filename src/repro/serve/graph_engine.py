@@ -25,10 +25,24 @@ graph's degree statistics; any registered name forces that layout.
 Since ISSUE 5 the remaining configuration is ONE `TraversalSpec`
 (``spec=``): the engine stores a `CompiledTraversal` instead of six
 loose attributes, and the tick hits that plan's cached executable.
+
+**Robustness** (ISSUE 8): the queue is *bounded* — `submit` returns a
+typed `serve.robust.AdmissionDecision` or raises
+`repro.errors.QueueFullError` / `AdmissionRejected` (backpressure
+instead of unbounded latency); queries carry optional wall-clock
+deadlines (`repro.errors.DeadlineExceeded` attached to the truncated
+result) and per-query layer budgets; a failed device tick retries
+with capped exponential backoff and, on exhaustion, re-queues every
+in-flight query before raising `TickRetriesExhausted` (zero lost
+queries); every harvested result passes a sanity check (root
+self-parented, ids in range) and a corrupted slot is re-run instead
+of delivered; and the ``serve.circuit_state`` gauge exports the
+healthy/degraded/shedding breaker position.  Chaos coverage drives a
+`serve.robust.ServeFaultInjector` through all of it
+(``make chaos-smoke``).
 """
 from __future__ import annotations
 
-import collections
 import functools
 import time
 from dataclasses import dataclass, field
@@ -39,7 +53,10 @@ import numpy as np
 
 from repro.core import bitmap as bm
 from repro.core import engine
+from repro.errors import (AdmissionRejected, DeadlineExceeded,
+                          QueueFullError, TickRetriesExhausted)
 from repro.obs import metrics as obs_metrics
+from repro.serve import robust
 
 
 @functools.partial(jax.jit, static_argnames=("slot", "n_vertices"))
@@ -65,9 +82,19 @@ class BfsQuery:
     parent: np.ndarray | None = None   # Graph500 convention (-1 unreached)
     n_layers: int = 0
     done: bool = False
-    truncated: bool = False            # hit the max_layers budget: the
-    #                                    parent array is PARTIAL (-1 may
-    #                                    mean "not reached yet")
+    truncated: bool = False            # hit a budget (layers/deadline):
+    #                                    the parent array is PARTIAL
+    #                                    (-1 may mean "not reached
+    #                                    yet") or None (never ran)
+    priority: int = 0                  # admission order; shedding floor
+    deadline_s: float | None = None    # wall-clock budget from submit
+    max_layers: int | None = None      # per-query layer budget override
+    #                                    (None = the engine spec's)
+    error: Exception | None = None     # typed degradation record —
+    #                                    DeadlineExceeded on budget
+    #                                    expiry; None on clean finishes
+    retries: int = 0                   # times this query was re-run
+    #                                    (tick failure / poisoned slot)
     meta: dict = field(default_factory=dict)
 
 
@@ -100,8 +127,22 @@ class GraphEngine:
         `repro.obs.get_registry()`).  Recorded under ``serve.*``:
         per-query submit→harvest latency (``serve.query_latency_s``
         histogram — p50/p99 in its snapshot), tick duration
-        (``serve.tick_s``), queue depth / slot occupancy gauges, and
-        tick/query/skip counters.
+        (``serve.tick_s``), queue depth / slot occupancy /
+        circuit-state gauges, and tick/query/skip/reject/retry
+        counters.
+      queue_capacity: bounded submit-queue size (default
+        ``16 * batch_slots``).  At capacity `submit` raises
+        `QueueFullError` — explicit backpressure instead of unbounded
+        queueing.  Ignored when ``admission`` is passed.
+      admission: a full `serve.robust.AdmissionPolicy` (capacity,
+        degraded depth, optional priority-shedding floor); overrides
+        ``queue_capacity``.
+      injector: a `serve.robust.ServeFaultInjector` — chaos-test hook
+        firing failures/stalls/poisoned rows at configured ticks.
+      max_tick_retries: device-tick retry budget (capped exponential
+        backoff between attempts); on exhaustion every in-flight
+        query is re-queued and `TickRetriesExhausted` raises.
+      retry_backoff_s: backoff base for `serve.robust.backoff_s`.
     """
 
     def __init__(self, graph, batch_slots: int = 8,
@@ -109,9 +150,20 @@ class GraphEngine:
                  graph_format: str | None = "auto",
                  pipeline=engine._UNSET, packed=engine._UNSET,
                  prefetch_depth=engine._UNSET, spec=None,
-                 registry: obs_metrics.MetricsRegistry | None = None):
+                 registry: obs_metrics.MetricsRegistry | None = None,
+                 queue_capacity: int | None = None,
+                 admission: robust.AdmissionPolicy | None = None,
+                 injector: robust.ServeFaultInjector | None = None,
+                 max_tick_retries: int = 3,
+                 retry_backoff_s: float = 0.01):
         from repro.api.plan import plan as _plan
+        from repro.core.csr import Csr as _Csr, check_structure
         from repro.formats import GraphFormat, autotune
+        # admission-time validation (ISSUE 8): a raw Csr is checked
+        # BEFORE autotune re-lays it out — a malformed graph must be
+        # a typed construction error, not a wrong resident layout
+        if isinstance(graph, _Csr):
+            check_structure(graph)
         if isinstance(graph, GraphFormat):
             self.csr = None
             self.fmt = (graph if graph_format in (None, "auto",
@@ -153,10 +205,20 @@ class GraphEngine:
         self.parent = jnp.full((b, v_pad), self.n_vertices, jnp.int32)
         self._base_visited = self.fmt.init_visited()
         self.slots: list[BfsQuery | None] = [None] * b
-        # deque: continuous batching pops from the head every tick —
-        # list.pop(0) is O(queue) per slot fill, O(n^2) over a long
-        # serving run
-        self.queue: collections.deque[BfsQuery] = collections.deque()
+        # bounded priority queue (ISSUE 8): higher priority first,
+        # FIFO within a level; at capacity `submit` rejects with a
+        # typed error instead of queueing unboundedly
+        if admission is None:
+            cap = (int(queue_capacity) if queue_capacity is not None
+                   else 16 * b)
+            admission = robust.AdmissionPolicy(
+                queue_capacity=cap, degraded_depth=max(1, cap // 2))
+        self.admission = admission
+        self.queue = robust.AdmissionQueue(admission.queue_capacity)
+        self.injector = injector
+        self.max_tick_retries = int(max_tick_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self._tick_no = 0
         self.finished: list[BfsQuery] = []
         # serving metrics (ISSUE 7): the operational distributions the
         # ROADMAP serve-SLO work will budget against
@@ -182,7 +244,28 @@ class GraphEngine:
         self._m_finished = self.metrics.counter("serve.queries_finished")
         self._m_truncated = self.metrics.counter(
             "serve.queries_truncated",
-            "queries harvested PARTIAL at the max_layers budget")
+            "queries harvested PARTIAL at a layers/deadline budget")
+        # robustness counters (ISSUE 8)
+        self._m_rejected = self.metrics.counter(
+            "serve.rejected",
+            "submits refused by admission control (queue full / "
+            "priority shed)")
+        self._m_retries = self.metrics.counter(
+            "serve.retries", "failed device-tick attempts retried")
+        self._m_requeued = self.metrics.counter(
+            "serve.requeued",
+            "in-flight queries re-queued after tick failure or a "
+            "corrupted slot")
+        self._m_poisoned = self.metrics.counter(
+            "serve.poisoned",
+            "corrupted slot results caught by the harvest sanity "
+            "check (re-run, never delivered)")
+        self._m_deadline = self.metrics.counter(
+            "serve.deadline_exceeded",
+            "queries harvested with a DeadlineExceeded error")
+        self._m_circuit = self.metrics.gauge(
+            "serve.circuit_state",
+            "admission circuit: 0=healthy 1=degraded 2=shedding")
 
     # -- resolved-spec views (legacy attribute compatibility) -----------
     @property
@@ -210,16 +293,95 @@ class GraphEngine:
     def max_layers(self) -> int:
         return self.compiled.resolved.max_layers
 
-    def submit(self, query: BfsQuery):
+    # -- admission (ISSUE 8) --------------------------------------------
+    def circuit_state(self) -> str:
+        """Current breaker position (`serve.robust.CIRCUIT_*`)."""
+        depth = len(self.queue)
+        if self.queue.full:
+            return robust.CIRCUIT_SHEDDING
+        if (self._active_slots() == len(self.slots)
+                and depth >= self.admission.degraded_depth):
+            return robust.CIRCUIT_DEGRADED
+        return robust.CIRCUIT_HEALTHY
+
+    def _set_circuit_gauge(self, state: str | None = None) -> str:
+        state = state if state is not None else self.circuit_state()
+        self._m_circuit.set(robust.CIRCUIT_CODES[state])
+        return state
+
+    def try_submit(self, query: BfsQuery) -> robust.AdmissionDecision:
+        """Admission decision without raising: validates the root
+        (typed `GraphValidationError` — malformed input is a client
+        bug, not backpressure), then admits or rejects per the
+        circuit."""
+        from repro.api.plan import check_roots
+        check_roots(query.root, self.n_vertices)
+        state = self._set_circuit_gauge()
+        depth = len(self.queue)
+        if state == robust.CIRCUIT_SHEDDING:
+            self._m_rejected.inc()
+            return robust.AdmissionDecision(
+                admitted=False, circuit=state, queue_depth=depth,
+                reason=(f"queue at capacity "
+                        f"({depth}/{self.queue.capacity})"))
+        floor = self.admission.shed_min_priority
+        if (state == robust.CIRCUIT_DEGRADED and floor is not None
+                and query.priority < floor):
+            self._m_rejected.inc()
+            return robust.AdmissionDecision(
+                admitted=False, circuit=state, queue_depth=depth,
+                reason=(f"load shedding: priority {query.priority} < "
+                        f"floor {floor} while degraded"))
         query.meta.setdefault("submit_t", time.perf_counter())
-        self.queue.append(query)
+        self.queue.push(query, query.priority)
         self._m_submitted.inc()
+        self._m_queue.set(len(self.queue))
+        self._set_circuit_gauge()
+        return robust.AdmissionDecision(
+            admitted=True, circuit=state, queue_depth=len(self.queue))
+
+    def submit(self, query: BfsQuery) -> robust.AdmissionDecision:
+        """Admit ``query`` or raise the typed rejection
+        (`QueueFullError` at capacity, `AdmissionRejected` when
+        priority-shed); returns the `AdmissionDecision` on admit."""
+        decision = self.try_submit(query)
+        if not decision.admitted:
+            cls = (QueueFullError
+                   if decision.circuit == robust.CIRCUIT_SHEDDING
+                   else AdmissionRejected)
+            raise cls(f"query uid={query.uid} rejected: "
+                      f"{decision.reason}", decision=decision)
+        return decision
+
+    def _expire_queued(self) -> None:
+        """Harvest queued queries whose deadline passed before they
+        ever got a slot (parent=None — they never ran)."""
+        now = time.perf_counter()
+
+        def expired(q):
+            return (q.deadline_s is not None
+                    and now - q.meta.get("submit_t", now) > q.deadline_s)
+
+        for q in self.queue.remove_if(expired):
+            elapsed = now - q.meta.get("submit_t", now)
+            q.error = DeadlineExceeded(
+                f"query uid={q.uid} expired after {elapsed:.3f}s in "
+                f"the queue (deadline_s={q.deadline_s}) without ever "
+                f"getting a slot", uid=q.uid, elapsed_s=elapsed,
+                budget_s=q.deadline_s, where="queued")
+            q.parent = None
+            q.truncated = True
+            q.done = True
+            self.finished.append(q)
+            self._m_finished.inc()
+            self._m_truncated.inc()
+            self._m_deadline.inc()
         self._m_queue.set(len(self.queue))
 
     def _fill_slots(self):
         for i, q in enumerate(self.slots):
             if (q is None or q.done) and self.queue:
-                nxt = self.queue.popleft()
+                nxt = self.queue.pop()
                 self.slots[i] = nxt
                 self.frontier, self.visited, self.parent = _reset_slot(
                     self.frontier, self.visited, self.parent,
@@ -230,19 +392,96 @@ class GraphEngine:
     def _active_slots(self) -> int:
         return sum(q is not None and not q.done for q in self.slots)
 
-    def _harvest(self, i: int, q: BfsQuery, truncated: bool = False):
+    # -- result integrity / recovery (ISSUE 8) --------------------------
+    def _result_ok(self, i: int, q: BfsQuery) -> bool:
+        """Harvest-time sanity check: the root must be self-parented
+        and every entry a legal id (device convention: unreached ==
+        sentinel ``n_vertices``).  A violation means the slot's state
+        was corrupted (e.g. an injected poisoned result) — the query
+        is re-run, never delivered."""
+        p = np.asarray(self.parent[i, :self.n_vertices])
+        if int(p[q.root]) != q.root:
+            return False
+        return bool(((p >= 0) & (p <= self.n_vertices)).all())
+
+    def _requeue(self, i: int, q: BfsQuery) -> None:
+        """Re-run ``q`` from its root: reset its progress and force it
+        back onto the queue (past capacity if need be — the engine's
+        own recovery must never lose a query to its own
+        backpressure)."""
+        q.n_layers = 0
+        q.done = False
+        q.truncated = False
+        q.parent = None
+        q.retries += 1
+        self.slots[i] = None
+        self.queue.push(q, q.priority, force=True)
+        self._m_requeued.inc()
+        self._m_queue.set(len(self.queue))
+
+    def _requeue_in_flight(self) -> None:
+        for i, q in enumerate(self.slots):
+            if q is not None and not q.done:
+                self._requeue(i, q)
+
+    def _dispatch_with_retry(self, tick_no: int) -> None:
+        """Run the device tick, retrying with capped exponential
+        backoff.  `CompiledTraversal.layer_step` is functional (new
+        arrays out; assignment only on success), so a failed attempt
+        cannot corrupt slot state.  On exhaustion every in-flight
+        query is re-queued (restart from root) and
+        `TickRetriesExhausted` raises — a loud infrastructure error
+        with zero lost queries."""
+        last: Exception | None = None
+        for attempt in range(self.max_tick_retries + 1):
+            try:
+                if self.injector is not None:
+                    stall = self.injector.stall_s(tick_no)
+                    if stall > 0:
+                        time.sleep(stall)
+                    self.injector.check_tick(tick_no)
+                self.frontier, self.visited, self.parent = \
+                    self.compiled.layer_step(
+                        self.frontier, self.visited, self.parent)
+                return
+            except Exception as exc:    # noqa: BLE001 — retry any
+                last = exc              # device-step failure flavour
+                self._m_retries.inc()
+                if attempt < self.max_tick_retries:
+                    time.sleep(robust.backoff_s(
+                        attempt, self.retry_backoff_s))
+        self._requeue_in_flight()
+        raise TickRetriesExhausted(
+            f"serve tick {tick_no} failed {self.max_tick_retries + 1} "
+            f"times; {self._m_requeued.value:g} in-flight queries "
+            f"re-queued (none lost) — last error: {last!r}") from last
+
+    def _harvest(self, i: int, q: BfsQuery, truncated: bool = False,
+                 error: Exception | None = None,
+                 check: bool = True) -> bool:
+        """Deliver slot ``i``'s result; returns False when the sanity
+        check caught a corrupted slot (the query was re-queued
+        instead)."""
+        if check and not self._result_ok(i, q):
+            self._m_poisoned.inc()
+            self._requeue(i, q)
+            return False
         p = np.asarray(self.parent[i, :self.n_vertices])
         q.parent = np.where(p >= self.n_vertices, -1, p)
         q.truncated = truncated
+        q.error = error
         q.done = True
         self.finished.append(q)
         self._m_finished.inc()
         if truncated:
             self._m_truncated.inc()
+        if isinstance(error, DeadlineExceeded):
+            self._m_deadline.inc()
         t0 = q.meta.get("submit_t")
         if t0 is not None:
             q.meta["latency_s"] = time.perf_counter() - t0
             self._m_latency.observe(q.meta["latency_s"])
+        return True
 
     def step(self):
         """One engine tick: advance every active query by one layer.
@@ -253,42 +492,127 @@ class GraphEngine:
         ``serve.ticks_skipped``.  Before ISSUE 7 every such tick paid
         a full compiled step for zero active queries."""
         with self._m_tick.time():
+            self._expire_queued()
             self._fill_slots()
             n_active = self._active_slots()
             self._m_occupancy.set(n_active / max(len(self.slots), 1))
+            self._set_circuit_gauge()
             if n_active == 0:
                 self._m_skipped.inc()
                 return
             self._m_ticks.inc()
-            self.frontier, self.visited, self.parent = \
-                self.compiled.layer_step(self.frontier, self.visited,
-                                         self.parent)
+            tick_no = self._tick_no
+            self._tick_no += 1
+            self._dispatch_with_retry(tick_no)
+            if self.injector is not None:
+                for s in self.injector.poison_slots(tick_no):
+                    if 0 <= s < len(self.slots) \
+                            and self.slots[s] is not None \
+                            and not self.slots[s].done:
+                        # corrupt the slot's parent row the way a bad
+                        # device step would: every entry off-by-one,
+                        # so parent[root] != root
+                        v_pad = self.parent.shape[1]
+                        self.parent = self.parent.at[s].set(
+                            (jnp.arange(v_pad, dtype=jnp.int32) + 1)
+                            % self.n_vertices)
             counts = np.asarray(engine.row_popcounts(self.frontier))
+            now = time.perf_counter()
             for i, q in enumerate(self.slots):
                 if q is None or q.done:
                     continue
                 q.n_layers += 1
+                budget = (q.max_layers if q.max_layers is not None
+                          else self.max_layers)
+                elapsed = now - q.meta.get("submit_t", now)
                 if counts[i] == 0:
                     self._harvest(i, q)
-                elif q.n_layers >= self.max_layers:
+                elif q.deadline_s is not None \
+                        and elapsed > q.deadline_s:
+                    self._harvest(
+                        i, q, truncated=True,
+                        error=DeadlineExceeded(
+                            f"query uid={q.uid} exceeded its "
+                            f"deadline_s={q.deadline_s} after "
+                            f"{elapsed:.3f}s / {q.n_layers} layers "
+                            f"(partial tree delivered)",
+                            uid=q.uid, elapsed_s=elapsed,
+                            budget_s=q.deadline_s, where="in_flight"))
+                elif q.n_layers >= budget:
                     self._harvest(i, q, truncated=True)
 
-    def run_until_done(self, max_ticks: int = 100_000) -> int:
-        """Drain the queue; returns the number of ticks taken."""
+    def _harvest_global_budget(self, budget_s: float,
+                               elapsed: float) -> None:
+        """`run_until_done` budget expiry: deliver every in-flight
+        query as a truncated partial (sanity check still applies) and
+        every queued query as never-ran — nothing is lost, everything
+        is typed."""
+        for i, q in enumerate(self.slots):
+            if q is not None and not q.done:
+                self._harvest(
+                    i, q, truncated=True,
+                    error=DeadlineExceeded(
+                        f"run_until_done budget_s={budget_s} expired "
+                        f"after {elapsed:.3f}s with query uid={q.uid} "
+                        f"in flight ({q.n_layers} layers done)",
+                        uid=q.uid, elapsed_s=elapsed,
+                        budget_s=budget_s, where="global"),
+                    check=False)
+        while self.queue:
+            q = self.queue.pop()
+            q.error = DeadlineExceeded(
+                f"run_until_done budget_s={budget_s} expired after "
+                f"{elapsed:.3f}s with query uid={q.uid} still queued",
+                uid=q.uid, elapsed_s=elapsed, budget_s=budget_s,
+                where="global")
+            q.parent = None
+            q.truncated = True
+            q.done = True
+            self.finished.append(q)
+            self._m_finished.inc()
+            self._m_truncated.inc()
+            self._m_deadline.inc()
+        self._m_queue.set(0)
+
+    def run_until_done(self, max_ticks: int = 100_000,
+                       budget_s: float | None = None) -> int:
+        """Drain the queue; returns the number of ticks taken.
+
+        ``budget_s`` is the global wall-clock budget: when it expires,
+        in-flight queries are delivered as truncated partials and
+        queued ones as never-ran, each carrying a
+        `DeadlineExceeded(where="global")` — graceful degradation
+        instead of an open-ended run."""
         ticks = 0
+        t0 = time.perf_counter()
         while (self.queue or any(q is not None and not q.done
                                  for q in self.slots)):
+            elapsed = time.perf_counter() - t0
+            if budget_s is not None and elapsed > budget_s:
+                self._harvest_global_budget(budget_s, elapsed)
+                break
             self.step()
             ticks += 1
             if ticks >= max_ticks:
-                slot_layers = {i: q.n_layers
-                               for i, q in enumerate(self.slots)
-                               if q is not None and not q.done}
+                now = time.perf_counter()
+                slot_report = {}
+                for i, q in enumerate(self.slots):
+                    if q is None or q.done:
+                        continue
+                    left = (None if q.deadline_s is None else round(
+                        q.deadline_s
+                        - (now - q.meta.get("submit_t", now)), 3))
+                    slot_report[i] = {
+                        "n_layers": q.n_layers,
+                        "deadline_remaining_s": left,
+                        "retries": q.retries,
+                    }
                 raise RuntimeError(
                     f"graph serving did not converge within "
                     f"{max_ticks} ticks: queue_depth="
                     f"{len(self.queue)}, active_slots="
                     f"{self._active_slots()}/{len(self.slots)}, "
-                    f"per-slot n_layers={slot_layers}, "
-                    f"max_layers={self.max_layers}")
+                    f"per-slot state={slot_report}, "
+                    f"max_layers={self.max_layers}, "
+                    f"circuit={self.circuit_state()}")
         return ticks

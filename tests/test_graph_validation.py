@@ -1,0 +1,147 @@
+"""Admission-time graph validation (ISSUE 8).
+
+Property: EVERY corruption of a valid CSR — out-of-range neighbor
+ids, non-monotone ``colstarts``, mismatched edge counts, NaN/negative
+geometry, out-of-range roots — raises a *typed*
+`repro.errors.GraphValidationError` (which IS-A ``ValueError``) from
+every admission surface: ``bfs.plan``, the legacy ``traverse`` shim,
+and `GraphEngine` construction/submit.  A wrong tree delivered
+silently is the failure mode these checks exist to kill.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.bfs as bfs
+from repro.core.csr import Csr, check_structure, from_edges
+from repro.core.rmat import generate
+from repro.errors import GraphValidationError, ReproError
+from repro.serve.graph_engine import BfsQuery, GraphEngine
+
+from _hypothesis_compat import given, settings, st
+
+CSR = from_edges(generate(jax.random.PRNGKey(7), scale=6, edgefactor=4))
+V = CSR.n_vertices
+E = CSR.n_edges
+
+
+def _with(rows=None, colstarts=None, n_vertices=None, n_edges=None):
+    return Csr(
+        rows=CSR.rows if rows is None else rows,
+        colstarts=CSR.colstarts if colstarts is None else colstarts,
+        n_vertices=CSR.n_vertices if n_vertices is None else n_vertices,
+        n_edges=CSR.n_edges if n_edges is None else n_edges)
+
+
+def test_valid_csr_passes_and_chains():
+    assert check_structure(CSR) is CSR
+    bfs.plan(CSR)   # no raise
+
+
+def test_typed_error_is_a_value_error():
+    assert issubclass(GraphValidationError, ValueError)
+    assert issubclass(GraphValidationError, ReproError)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=E - 1),
+       st.integers(min_value=1, max_value=2**30))
+def test_fuzz_out_of_range_neighbor(idx, offset):
+    """Any real adjacency entry pushed outside [0, V) is rejected."""
+    bad_rows = CSR.rows.at[idx].set(V + (offset % 1000))
+    with pytest.raises(GraphValidationError, match="neighbor id"):
+        check_structure(_with(rows=bad_rows))
+    neg_rows = CSR.rows.at[idx].set(-1 - (offset % 7))
+    with pytest.raises(GraphValidationError, match="neighbor id"):
+        bfs.plan(_with(rows=neg_rows))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=V - 1),
+       st.integers(min_value=1, max_value=1000))
+def test_fuzz_non_monotone_colstarts(pos, bump):
+    """A colstarts entry raised above its successor is rejected."""
+    cs = np.asarray(CSR.colstarts).copy()
+    cs[pos] = int(cs[pos + 1]) + bump
+    with pytest.raises(GraphValidationError, match="non-decreasing"):
+        bfs.plan(_with(colstarts=jnp.asarray(cs)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=2**20))
+def test_fuzz_edge_count_mismatch(delta):
+    with pytest.raises(GraphValidationError, match="n_edges"):
+        check_structure(_with(n_edges=E + delta))
+
+
+@pytest.mark.parametrize("n_vertices", [float("nan"), float("inf"),
+                                        -float("inf"), 3.5, -1, None,
+                                        "64", True])
+def test_nan_shaped_geometry(n_vertices):
+    bad = Csr(rows=CSR.rows, colstarts=CSR.colstarts,
+              n_vertices=n_vertices, n_edges=CSR.n_edges)
+    with pytest.raises(GraphValidationError):
+        bfs.plan(bad)
+
+
+def test_zero_vertices_rejected():
+    with pytest.raises(GraphValidationError, match="at least a root"):
+        check_structure(Csr(rows=jnp.zeros((0,), jnp.int32),
+                            colstarts=jnp.zeros((1,), jnp.int32),
+                            n_vertices=0, n_edges=0))
+
+
+def test_wrong_dtype_rejected():
+    with pytest.raises(GraphValidationError, match="integer dtype"):
+        check_structure(_with(rows=CSR.rows.astype(jnp.float32)))
+
+
+def test_colstarts_shape_rejected():
+    with pytest.raises(GraphValidationError, match="n_vertices"):
+        check_structure(_with(colstarts=CSR.colstarts[:-2]))
+
+
+def test_truncated_rows_rejected():
+    with pytest.raises(GraphValidationError, match="truncated"):
+        check_structure(_with(rows=CSR.rows[:E // 2],
+                              n_edges=E))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=2**30))
+def test_fuzz_root_out_of_range(r):
+    ct = bfs.plan(CSR)
+    with pytest.raises(GraphValidationError, match="outside"):
+        ct.run(V + (r % 1000))
+    with pytest.raises(GraphValidationError, match="outside"):
+        ct.run_batched([0, -(1 + r % 50)])
+
+
+def test_traverse_shim_raises_typed():
+    bad_rows = CSR.rows.at[0].set(V + 3)
+    with pytest.raises(GraphValidationError):
+        bfs.traverse(_with(rows=bad_rows), 0)
+    # old-style callers that guard with `except ValueError` still work
+    with pytest.raises(ValueError):
+        bfs.traverse(_with(rows=bad_rows), 0)
+
+
+def test_graph_engine_ctor_and_submit_raise_typed():
+    bad_rows = CSR.rows.at[0].set(-9)
+    with pytest.raises(GraphValidationError):
+        GraphEngine(_with(rows=bad_rows), batch_slots=2)
+    eng = GraphEngine(CSR, batch_slots=2)
+    with pytest.raises(GraphValidationError):
+        eng.submit(BfsQuery(uid=0, root=V + 1))
+    with pytest.raises(GraphValidationError):
+        eng.submit(BfsQuery(uid=1, root=-1))
+
+
+def test_format_validate_structure_memoized():
+    from repro.formats.csr_format import CsrFormat
+    fmt = CsrFormat.from_csr(CSR)
+    assert fmt.validate_structure() is fmt
+    assert fmt._structure_ok
+    # second call is the memoized no-op path
+    assert fmt.validate_structure() is fmt
