@@ -12,8 +12,8 @@ test-quick:      ## BFS substrate + engine + formats + API (fast inner loop)
 	    tests/test_formats.py tests/test_gather_pipeline.py \
 	    tests/test_packed_engine.py tests/test_plan_api.py \
 	    tests/test_api_surface.py tests/test_megakernel.py \
-	    tests/test_obs.py tests/test_serve_robust.py \
-	    tests/test_graph_validation.py
+	    tests/test_persistent.py tests/test_obs.py \
+	    tests/test_serve_robust.py tests/test_graph_validation.py
 	$(MAKE) obs-smoke
 	$(MAKE) chaos-smoke
 
@@ -33,6 +33,7 @@ bench-quick:     ## batched + formats + layer/bytes + packed + plan-cache probes
 	$(PY) -m benchmarks.run --quick --only bfs_packed
 	$(PY) -m benchmarks.run --quick --only bfs_plan_cache
 	$(PY) -m benchmarks.run --quick --only bfs_megakernel
+	$(PY) -m benchmarks.run --quick --only bfs_persistent
 
 bench-formats:   ## the graph-format sweep (TEPS + bytes per layout)
 	$(PY) -m benchmarks.run --only bfs_formats

@@ -41,8 +41,9 @@ from repro.kernels.frontier_expand import vmem_budget
 # per-knob sweep grids (format -> knob -> values)
 CSR_TILES = (512, 1024, 4096, 16384)
 CSR_PREFETCH = (0, 1, 2)
-CSR_PIPELINES = ("fused_gather", "megakernel")
+CSR_PIPELINES = ("fused_gather", "megakernel", "persistent")
 SELL_SIGMAS = (256, 1024, 4096)
+SELL_PIPELINES = ("fused_gather", "megakernel", "persistent")
 
 
 def _mesh(side: int):
@@ -104,7 +105,13 @@ def _sweep_csr(g, label: str):
 
 
 def _sweep_sell(g, label: str):
-    """σ sort-window sweep (SELL's own resource-sharing knob)."""
+    """σ sort-window + pipeline sweeps (SELL's resource-sharing knobs).
+
+    Since ISSUE 9 SELL fuses (megakernel) and runs whole traversals in
+    one launch (persistent), so the pipeline knob is swept here too —
+    ``affinity.sell.{geom}.pipeline_persistent`` rows let ``"auto"``
+    resolve the launch-count ladder per geometry class.
+    """
     from repro.api import plan as plan_mod
     from repro.api import spec as spec_mod
     from repro.formats import affinity
@@ -123,6 +130,13 @@ def _sweep_sell(g, label: str):
         emit(affinity.key_for("sell", geom, "sigma", sigma),
              sec * 1e6,
              f"{teps:.3e}_teps_slots{fmt.nnz_stored}", value=teps)
+    fmt = SellFormat.from_csr(g)
+    for pipe in SELL_PIPELINES:
+        ct = plan_mod.plan(fmt, spec_mod.TraversalSpec(pipeline=pipe))
+        sec = time_bfs(lambda c, r: ct.run(r).state, g, roots)
+        teps = g.n_edges / 2 / sec
+        emit(affinity.key_for("sell", geom, "pipeline", pipe),
+             sec * 1e6, f"{teps:.3e}_teps", value=teps)
 
 
 def main(scale: int = 13):

@@ -1,0 +1,131 @@
+"""Whole-traversal persistent kernel vs per-layer pipelines (ISSUE 9).
+
+The launch-count ladder this repo climbs:
+
+* ``fused_gather`` — 3 Pallas calls per SIMD layer (§4 pipeline),
+* ``megakernel``   — 1 call per layer (ISSUE 6, layer_fused.py),
+* ``persistent``   — 1 call per TRAVERSAL (traversal_fused.py): the
+  layer loop, direction policy and termination all run in-kernel on
+  SMEM counters, so host dispatch leaves the critical path entirely.
+
+This benchmark pins the two acceptance numbers on the same probes
+bfs_megakernel.py uses:
+
+* **launches/traversal** — summed from the per-layer stats buffer
+  (`engine._ST_LAUNCH`); exactly 1 for persistent, ``n_layers`` for
+  the megakernel, ``3*n_simd_layers`` unfused.  The high-diameter
+  path probe (1 vertex/layer, ~1k layers) is where the ladder shows
+  up as wall clock: dispatch overhead IS the cost there.  Gate 5 of
+  ``benchmarks.check_bytes_regression`` pins the persistent probe at
+  exactly 1.0 launches/traversal.
+* **TEPS** — wall-clock of bit-identical traversals (parity suite in
+  tests/test_persistent.py) under all three pipelines, on the path
+  probe and the RMAT workload.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, graph
+from repro.api import plan as plan_mod
+from repro.api import spec as spec_mod
+from repro.core import engine
+from repro.core.csr import traversed_edges
+from repro.formats.csr_format import CsrFormat
+
+PATH_SCALE = 10    # fixed: the CI gate-5 probe, not --quick'd
+PATH_TILE = 128
+PIPELINES = ("fused_gather", "megakernel", "persistent")
+_TAG = {"fused_gather": "unfused", "megakernel": "mega",
+        "persistent": "persistent"}
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()                                   # warmup / compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)                         # least-noise estimator
+
+
+def _launches_per_traversal(res) -> int:
+    """Total Pallas calls for the whole traversal from the stats
+    buffer.  Persistent charges its single launch to layer 0 and
+    zeros the rest of the column, so the sum is the ladder metric."""
+    buf = np.asarray(res.stats)
+    return int(buf[:, engine._ST_LAUNCH].sum())
+
+
+def path_persistent_probe(scale: int = PATH_SCALE,
+                          tile: int = PATH_TILE,
+                          time_reps: int = 3,
+                          pipelines=PIPELINES) -> dict:
+    """The s10 path probe: launches/traversal + TEPS, all pipelines."""
+    from benchmarks.bfs_layers import build_path_graph
+    n = 1 << scale
+    g = build_path_graph(n)
+    fmt = CsrFormat.from_csr(g)
+    out = {}
+    for pipe in pipelines:
+        spec = spec_mod.TraversalSpec(
+            policy=engine.ThresholdSimd(0), tile=tile,
+            max_layers=n + 2, pipeline=pipe)
+        ct = plan_mod.plan(fmt, spec)
+        res = ct.run(0)
+        out[pipe] = {
+            "launches_per_traversal": _launches_per_traversal(res),
+            "layers": len(engine.layer_stats(res)),
+            "edges": int(traversed_edges(
+                g, np.asarray(res.state.parent)[:n] < n)),
+            "sec": _time(lambda: jax.block_until_ready(
+                ct.run(0).state.parent), time_reps),
+        }
+    return out
+
+
+def main(scale: int = 12) -> None:
+    probe = path_persistent_probe()
+    for pipe, p in probe.items():
+        tag = _TAG[pipe]
+        emit(f"bfs_persistent.path_launches_per_traversal_{tag}", 0.0,
+             f"scale={PATH_SCALE};layers={p['layers']}",
+             value=p["launches_per_traversal"])
+        emit(f"bfs_persistent.path_teps_{tag}", p["sec"] * 1e6,
+             f"teps={p['edges'] / p['sec']:.3e}",
+             value=p["edges"] / p["sec"])
+    pers, mega = probe["persistent"], probe["megakernel"]
+    print(f"# path s={PATH_SCALE}: {pers['launches_per_traversal']} "
+          f"call/traversal persistent vs "
+          f"{mega['launches_per_traversal']} megakernel; speedup "
+          f"{mega['sec'] / pers['sec']:.2f}x")
+
+    # RMAT workload: same ladder on the paper's skewed graph (few
+    # layers, fat frontiers — the regime where per-layer dispatch
+    # matters least, so this bounds the ladder's floor)
+    g = graph(scale)
+    fmt = CsrFormat.from_csr(g)
+    rng = np.random.default_rng(7)
+    deg = np.asarray(g.degrees())
+    root = int(rng.choice(np.where(deg > 0)[0]))
+    for pipe in PIPELINES:
+        ct = plan_mod.plan(fmt, spec_mod.TraversalSpec(
+            policy=engine.ThresholdSimd(0), pipeline=pipe))
+        res = ct.run(root)
+        reached = np.asarray(
+            res.state.parent)[:g.n_vertices] < g.n_vertices
+        edges = int(traversed_edges(g, reached))
+        t = _time(lambda: jax.block_until_ready(
+            ct.run(root).state.parent))
+        emit(f"bfs_persistent.rmat_s{scale}_{_TAG[pipe]}", t * 1e6,
+             f"teps={edges / t:.3e};"
+             f"lpt={_launches_per_traversal(res)}",
+             value=edges / t)
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,20 @@ baseline:
    deliberately committed via ``make bench-quick`` — which also
    re-stamps ``_meta``, so the baseline's provenance is on record.
 
+**Gate 5 — persistent launch count (ISSUE 9, deterministic).**
+Recomputes the path probe under ``pipeline="persistent"`` and sums
+the per-layer launch counter over the WHOLE traversal:
+
+7. the persistent traversal must issue EXACTLY 1 Pallas call total —
+   the in-kernel layer loop.  A change that silently re-opens the
+   per-layer dispatch (or routes the probe through the VMEM-degrade
+   arm back to the megakernel) reads ~n_layers and fails; the
+   co-measured megakernel arm must still read >= 2 total so the
+   counter is proven live.  A TEPS backstop vs the committed
+   ``bfs_persistent.path_teps_persistent`` baseline catches
+   order-of-magnitude wall-clock collapse (the in-kernel loop going
+   quadratic) without tripping on runner-class differences.
+
 Run BEFORE ``make bench-quick`` in CI: the bench run merge-updates
 BENCH_bfs.json, and the gate must read the committed baseline.  On
 any failure the committed baseline's ``_meta`` record (git sha,
@@ -103,6 +117,7 @@ DRIFT_TOLERANCE = 1.25  # cost-drift ratio may move <=25% vs baseline
 BASELINE_KEY = "bfs_layers.path_bytes_fused"
 TEPS_KEY = "bfs_packed.path_teps"
 DRIFT_KEY = "obs.cost_drift.csr.fused_gather"
+PERSISTENT_TEPS_KEY = "bfs_persistent.path_teps_persistent"
 
 
 def _bytes_gate(data) -> int:
@@ -248,6 +263,48 @@ def _drift_gate(data) -> int:
     return 0
 
 
+def _persistent_gate(data) -> int:
+    """Gate 5: persistent = EXACTLY one Pallas call per TRAVERSAL on
+    the path probe (counter-based), plus a TEPS backstop vs the
+    committed baseline."""
+    from benchmarks.bfs_persistent import (PATH_SCALE,
+                                           path_persistent_probe)
+
+    if (PERSISTENT_TEPS_KEY not in data
+            or "value" not in data[PERSISTENT_TEPS_KEY]):
+        print(f"no {PERSISTENT_TEPS_KEY!r} value committed — run "
+              f"`make bench-quick` and commit the update")
+        return 1
+    teps_baseline = float(data[PERSISTENT_TEPS_KEY]["value"])
+
+    probe = path_persistent_probe(
+        time_reps=1, pipelines=("megakernel", "persistent"))
+    pers = probe["persistent"]["launches_per_traversal"]
+    mega = probe["megakernel"]["launches_per_traversal"]
+    print(f"launches/traversal (path s={PATH_SCALE}): "
+          f"persistent={pers} megakernel={mega}")
+    if pers != 1:
+        print("FAIL: the persistent traversal no longer runs as ONE "
+              "Pallas call — per-layer dispatch re-opened, or the "
+              "probe degraded to the megakernel arm")
+        return 1
+    if mega < 2:
+        print("FAIL: the megakernel launch counter reads < 2 calls "
+              "for a ~1k-layer traversal — the counter itself broke, "
+              "so the persistent check above proves nothing")
+        return 1
+    teps = probe["persistent"]["edges"] / probe["persistent"]["sec"]
+    floor = teps_baseline * TEPS_FLOOR_FRACTION
+    print(f"{PERSISTENT_TEPS_KEY}: baseline={teps_baseline:.3e} "
+          f"current={teps:.3e} (floor {floor:.3e})")
+    if teps < floor:
+        print(f"FAIL: persistent path-probe TEPS fell below "
+              f"{TEPS_FLOOR_FRACTION:.2f}x of the committed baseline "
+              f"— the in-kernel layer loop got structurally slower")
+        return 1
+    return 0
+
+
 def _print_meta(data) -> None:
     """Surface the committed baseline's provenance on a gate failure
     (the ``_meta`` record `benchmarks.common.save_results` stamps)."""
@@ -273,6 +330,7 @@ def main() -> int:
     rc = _packed_gate(data) or rc
     rc = _launch_gate(data) or rc
     rc = _drift_gate(data) or rc
+    rc = _persistent_gate(data) or rc
     if rc:
         _print_meta(data)
     print("OK" if rc == 0 else "GATE FAILED")

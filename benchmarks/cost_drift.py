@@ -19,8 +19,10 @@ import time
 from benchmarks import common
 
 DRIFT_SCALE = 10
-#: pipelines compiled for the drift table (CSR supports all three)
-PIPELINES = ("fused_gather", "materialized", "megakernel")
+#: pipelines compiled for the drift table (CSR supports all four;
+#: "persistent" compiles the serve-tier per-layer tick, which by
+#: contract is the megakernel step — the drift row pins that routing)
+PIPELINES = ("fused_gather", "materialized", "megakernel", "persistent")
 
 
 def drift_probe(scale: int = DRIFT_SCALE, pipelines=PIPELINES,

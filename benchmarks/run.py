@@ -27,8 +27,8 @@ def main() -> None:
     from benchmarks import (affinity, bfs_batched, bfs_formats,
                             bfs_layers, bfs_megakernel,
                             bfs_opt_ablation, bfs_packed,
-                            bfs_plan_cache, bfs_scaling, cost_drift,
-                            lm_roofline)
+                            bfs_persistent, bfs_plan_cache,
+                            bfs_scaling, cost_drift, lm_roofline)
 
     # one provenance stamp per harness run (BENCH_bfs.json _meta)
     started = time.strftime("%Y-%m-%dT%H:%M:%S%z")
@@ -52,6 +52,8 @@ def main() -> None:
         "bfs_plan_cache": lambda: bfs_plan_cache.main(
             scale=9 if args.quick else 10),
         "bfs_megakernel": lambda: bfs_megakernel.main(
+            scale=10 if args.quick else 12),
+        "bfs_persistent": lambda: bfs_persistent.main(
             scale=10 if args.quick else 12),
         "affinity": lambda: affinity.main(scale=abl_scale),
         "cost_drift": lambda: cost_drift.main(),

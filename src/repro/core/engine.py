@@ -104,7 +104,8 @@ MODE_BOTTOMUP = 2   # frontier-testing kernel (hybrid bottom-up)
 MODE_NAMES = {MODE_SCALAR: "topdown", MODE_SIMD: "topdown",
               MODE_BOTTOMUP: "bottomup"}
 
-PIPELINES = ("fused_gather", "materialized", "megakernel")
+PIPELINES = ("fused_gather", "materialized", "megakernel",
+             "persistent")
 
 
 def _record_degrade(site: str, reason: str, fallback: str,
@@ -847,7 +848,11 @@ def _make_steps(colstarts, rows, n_vertices, v_pad, e_pad, algorithm,
                 tile, pipeline: str = "fused_gather",
                 packed: bool = True, prefetch_depth: int = 0):
     check_pipeline(pipeline)
-    if pipeline == "megakernel":
+    # the persistent pipeline's PER-LAYER steps (the serve tier's
+    # layer_step tick) are the megakernel steps — whole-traversal
+    # queries never reach here (they route through
+    # `_traverse_persistent` before steps are built)
+    if pipeline in ("megakernel", "persistent"):
         rows_t = _pad_rows_to_tile(rows, n_vertices, tile)
         n_blocks = int(rows_t.shape[0]) // tile
         if ops.megakernel_fits(v_pad // bm.BITS_PER_WORD, v_pad,
@@ -930,6 +935,22 @@ def _init_batched(roots, n_vertices: int, v_pad: int):
     )(roots.astype(jnp.int32))
 
 
+def _traverse_persistent(fmt, roots, spec) -> EngineResult:
+    """The ISSUE 9 whole-traversal driver: init the batch state, hand
+    it to the format's persistent kernel (ONE Pallas launch — layer
+    loop, §4.1 direction decision and termination all in-kernel,
+    state VMEM-resident across layers) and repackage its
+    ``(frontier, visited, parent, depths, layers, stats)`` contract
+    as an `EngineResult`.  The stats launch column charges 1 per
+    *traversal* (at the layer-0 row), vs the megakernel's 1/layer."""
+    frontier, visited, parent = _init_batched(roots, fmt.n_vertices,
+                                              fmt.n_vertices_padded)
+    frontier, visited, parent, depths, layers, stats = \
+        fmt.persistent_run(frontier, visited, parent, spec)
+    return EngineResult(BfsState(frontier, visited, parent, layers[0]),
+                        depths, stats)
+
+
 def _traverse_impl(fmt, roots, spec) -> EngineResult:
     """The fused engine body, generic over a `formats.GraphFormat`.
 
@@ -952,6 +973,27 @@ def _traverse_impl(fmt, roots, spec) -> EngineResult:
     4V-byte dense masks the ``packed=False`` (legacy parity) arm
     materializes.
     """
+    if spec.pipeline == "persistent":
+        # trace-time VMEM admission: the persistent kernel pins the
+        # WHOLE batch's state across layers, so the budget scales
+        # with the root batch — past it, degrade observably to the
+        # megakernel per-layer path (1 launch/layer), which has its
+        # own further degrade to the unfused steps in `_make_steps`
+        if fmt.persistent_fits(int(roots.shape[0]), spec):
+            return _traverse_persistent(fmt, roots, spec)
+        fallback = ("megakernel" if fmt.supports_megakernel
+                    else "fused_gather")
+        _record_degrade(
+            "vmem_fallback",
+            reason=(f"persistent(v_pad={fmt.n_vertices_padded}, "
+                    f"roots={int(roots.shape[0])}, tile={spec.tile}, "
+                    f"max_layers={spec.max_layers}, "
+                    f"depth={spec.prefetch_depth}) whole-batch "
+                    f"working set exceeds the VMEM budget"),
+            fallback=f"pipeline={fallback!r} per-layer steps "
+                     f"(>=1 launch/layer instead of 1/traversal)")
+        spec = spec.replace(pipeline=fallback)
+
     policy = spec.policy
     packed = spec.packed
     max_layers = spec.max_layers

@@ -105,12 +105,26 @@ class GraphFormat(abc.ABC):
     #: compact + gather-expand + restoration in ONE Pallas call).
     #: Opt-in: the format must build megakernel steps in
     #: `_build_steps`; `spec.validate(fmt)` rejects the pipeline on
-    #: formats that don't (bitmap has no per-layer launches to fuse;
-    #: SELL's slab sweep drives its cols DMA through scalar-prefetched
-    #: BlockSpec index maps, which bind before launch and so cannot
-    #: consume an in-kernel work-list — fusing it means restructuring
-    #: the whole slab kernel around manual DMA, left as future work)
+    #: formats that don't (bitmap has no per-layer launches to fuse).
+    #: Since ISSUE 9 both streamed layouts fuse: CSR via the rows-block
+    #: schedule, SELL via manual `make_async_copy` cols DMA consuming
+    #: an in-kernel slab work-list (kernels/sell_expand.py)
     supports_megakernel: ClassVar[bool] = False
+
+    #: whether the layout implements the whole-TRAVERSAL persistent
+    #: kernel (``TraversalSpec.pipeline="persistent"`` — ISSUE 9: the
+    #: layer loop, direction decision and termination run INSIDE one
+    #: Pallas launch, frontier/visited/parents VMEM-resident across
+    #: layers).  Opt-in via `persistent_run`/`persistent_fits`;
+    #: `spec.validate(fmt)` rejects the pipeline on formats that don't
+    supports_persistent: ClassVar[bool] = False
+
+    #: scalar algorithms the persistent kernel can honor — the
+    #: in-kernel layer loop has no plain-jnp scalar arm, so a format
+    #: whose MODE_SCALAR semantics differ per algorithm (SELL's
+    #: "nonsimd" dense sweep) restricts the set and `spec.validate`
+    #: rejects the rest
+    persistent_algorithms: ClassVar[tuple] = ()
 
     # -- construction ----------------------------------------------------
     @classmethod
@@ -231,6 +245,28 @@ class GraphFormat(abc.ABC):
         aligned unit).  ``tile`` is the user's override where the
         format honors one; the default accepts any and returns 1."""
         return int(tile) if tile else 1
+
+    # -- persistent (whole-traversal) contract (ISSUE 9) -----------------
+    def persistent_fits(self, n_roots: int, spec) -> bool:
+        """True when the whole-traversal persistent kernel's working
+        set (the full batch's state, resident across layers) fits the
+        VMEM budget for this geometry under the *resolved* ``spec``.
+        The engine consults this at trace time and degrades
+        ``pipeline="persistent"`` observably when False.  Formats
+        without a persistent kernel never fit."""
+        return False
+
+    def persistent_run(self, frontier, visited, parent, spec):
+        """Run the WHOLE multi-root traversal in ONE Pallas launch
+        (``supports_persistent`` formats only): layer loop, §4.1
+        direction decision and termination all in-kernel.  Arguments
+        are the `engine._init_batched` state arrays; returns
+        ``(frontier, visited, parent, depths, layers, stats)`` — the
+        fused engine's whole-traversal contract, with the stats launch
+        column charging 1 per *traversal* (at layer 0)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no whole-traversal persistent "
+            f"kernel (supports_persistent=False)")
 
     # -- accounting ------------------------------------------------------
     @abc.abstractmethod

@@ -28,6 +28,13 @@ class CsrFormat(GraphFormat):
     # the whole-layer megakernel (kernels/layer_fused.py) is built on
     # the CSR rows-block schedule; see GraphFormat.supports_megakernel
     supports_megakernel = True
+    # the whole-traversal persistent kernel (ISSUE 9,
+    # kernels/traversal_fused.py) keeps the in-kernel scalar arm
+    # mode-blended into the same racy sweep, so both scalar
+    # algorithms' reached sets are honored (the racy-parent tie-break
+    # is tile-partition-determined either way)
+    supports_persistent = True
+    persistent_algorithms = ("simd", "nonsimd")
 
     def __init__(self, colstarts, rows, n_vertices: int, n_edges: int):
         self.colstarts = colstarts
@@ -93,6 +100,29 @@ class CsrFormat(GraphFormat):
                                   self.n_edges_padded, spec.algorithm,
                                   spec.tile, spec.pipeline, spec.packed,
                                   spec.prefetch_depth)
+
+    def persistent_fits(self, n_roots: int, spec) -> bool:
+        from repro.core import bitmap as bm
+        from repro.core.engine import _pad_rows_to_tile
+        from repro.kernels import ops
+        rows_t = _pad_rows_to_tile(self.rows, self._n_vertices,
+                                   spec.tile)
+        return ops.persistent_fits(
+            self.n_vertices_padded // bm.BITS_PER_WORD,
+            self.n_vertices_padded, int(self.colstarts.shape[0]),
+            spec.tile, int(n_roots), spec.max_layers,
+            spec.prefetch_depth, int(rows_t.shape[0]) // spec.tile)
+
+    def persistent_run(self, frontier, visited, parent, spec):
+        from repro.core.engine import _pad_rows_to_tile
+        from repro.kernels import ops
+        rows_t = _pad_rows_to_tile(self.rows, self._n_vertices,
+                                   spec.tile)
+        return ops.traversal_fused_batched(
+            rows_t, self.colstarts, frontier, visited, parent,
+            n_vertices=self._n_vertices, tile=spec.tile,
+            policy=spec.policy, max_layers=spec.max_layers,
+            prefetch_depth=spec.prefetch_depth)
 
     def resolve_tile(self, tile: int | None) -> int:
         # CSR tiles the rows array: the fused pipeline's DMA block ==

@@ -54,12 +54,20 @@ from repro.kernels.sell_expand import SLICE_C, W_QUANT
 @jax.tree_util.register_pytree_node_class
 class SellFormat(GraphFormat):
     name = "sell"
-    # no whole-layer megakernel: the slab sweep's cols DMA rides
-    # scalar-prefetched BlockSpec index maps, which bind before launch
-    # and cannot consume the worklist the megakernel plans in-kernel —
-    # fusing SELL means rebuilding the slab kernel around manual DMA
-    # (future work); `spec.validate` rejects pipeline="megakernel"
-    supports_megakernel = False
+    # since ISSUE 9 the slab sweep fuses: `sell_layer_fused` rebuilds
+    # the cols DMA around manual `make_async_copy`, so the kernel's
+    # own t==0 slab plan (an SMEM work-list) drives the pipeline
+    # instead of a scalar-prefetched BlockSpec index map that binds
+    # before launch — the whole layer (plan + sweep + restoration) is
+    # ONE Pallas call, and the whole traversal one launch under
+    # pipeline="persistent"
+    supports_megakernel = True
+    # persistent is SIMD-only: the in-kernel layer loop has no dense
+    # jnp arm, and SELL's "nonsimd" MODE_SCALAR semantics (Algorithm
+    # 2 exact updates) need exactly that arm — `spec.validate`
+    # rejects the combination
+    supports_persistent = True
+    persistent_algorithms = ("simd",)
 
     DEFAULT_SIGMA = 8 * SLICE_C   # SlimSell's typical local-sort window
 
@@ -255,12 +263,39 @@ class SellFormat(GraphFormat):
         # membership test over slab_rows), so ``spec.packed`` does
         # not change the step bodies — both parity arms run the same
         # packed-word plan.
+        from repro.core import bitmap as bm
         from repro.core import engine
         algorithm, tile = spec.algorithm, spec.tile
         prefetch_depth = spec.prefetch_depth
         v = self._n_vertices
         n_steps = -(-self.n_slabs // tile)
-        fused = spec.pipeline == "fused_gather"
+        # the persistent pipeline's PER-LAYER steps (the serve tier's
+        # tick path) are the megakernel steps — whole-traversal
+        # queries bypass steps entirely via `persistent_run`
+        mega = spec.pipeline in ("megakernel", "persistent")
+        if mega:
+            n_words = self.n_vertices_padded // bm.BITS_PER_WORD
+            if not ops.sell_megakernel_fits(n_words,
+                                            self.n_vertices_padded,
+                                            self.n_slabs, tile,
+                                            prefetch_depth):
+                # observable degrade, mirroring engine._make_steps'
+                # CSR megakernel arm: past the VMEM budget the layer
+                # traverses via the unfused active-slab steps
+                engine._record_degrade(
+                    "vmem_fallback",
+                    reason=ops.budget_detail(
+                        f"sell_megakernel(v_pad="
+                        f"{self.n_vertices_padded}, "
+                        f"slabs={self.n_slabs}, spp={tile}, "
+                        f"depth={prefetch_depth})",
+                        ops.sell_megakernel_budget(
+                            n_words, self.n_vertices_padded,
+                            self.n_slabs, tile, prefetch_depth)),
+                    fallback="pipeline='fused_gather' unfused slab "
+                             "steps (3 launches/layer instead of 1)")
+                mega = False
+        fused = (not mega) and spec.pipeline != "materialized"
 
         def make_kernel_step(bottom_up: bool):
             def kernel_step(frontier, visited, parent):
@@ -288,7 +323,23 @@ class SellFormat(GraphFormat):
                         engine.StepAux(tiles, jnp.int32(0), c.count))
             return kernel_step
 
-        kernel_step = make_kernel_step(bottom_up=False)
+        def make_mega_step(bottom_up: bool):
+            # ONE Pallas call per layer: in-kernel slab plan + manual
+            # cols DMA + sweep + restoration (kernels/sell_expand.py)
+            def mega_step(frontier, visited, parent):
+                with ops.count_launches() as c:
+                    out, p_fixed, na = ops.sell_layer_fused_batched(
+                        self.cols, self.slab_rows, frontier, visited,
+                        parent, n_vertices=v, slabs_per_step=tile,
+                        bottom_up=bottom_up,
+                        prefetch_depth=prefetch_depth)
+                return (out, visited | out, p_fixed,
+                        engine.StepAux(na.sum(dtype=jnp.int32),
+                                       jnp.int32(0), c.count))
+            return mega_step
+
+        make_step = make_mega_step if mega else make_kernel_step
+        kernel_step = make_step(bottom_up=False)
 
         def jnp_step(frontier, visited, parent):
             out, vis, par = jax.vmap(
@@ -311,7 +362,22 @@ class SellFormat(GraphFormat):
         scalar_step = kernel_step if algorithm == "simd" else jnp_step
         return {engine.MODE_SCALAR: scalar_step,
                 engine.MODE_SIMD: kernel_step,
-                engine.MODE_BOTTOMUP: make_kernel_step(bottom_up=True)}
+                engine.MODE_BOTTOMUP: make_step(bottom_up=True)}
+
+    def persistent_fits(self, n_roots: int, spec) -> bool:
+        from repro.core import bitmap as bm
+        return ops.sell_persistent_fits(
+            self.n_vertices_padded // bm.BITS_PER_WORD,
+            self.n_vertices_padded, self.n_slabs, spec.tile,
+            int(n_roots), spec.max_layers, spec.prefetch_depth)
+
+    def persistent_run(self, frontier, visited, parent, spec):
+        return ops.sell_traversal_fused_batched(
+            self.cols, self.slab_rows, self.deg, frontier, visited,
+            parent, n_vertices=self._n_vertices,
+            slabs_per_step=spec.tile, policy=spec.policy,
+            max_layers=spec.max_layers,
+            prefetch_depth=spec.prefetch_depth)
 
     def resolve_tile(self, tile: int | None) -> int:
         """SELL's tile is *slabs per grid step*; the slice geometry

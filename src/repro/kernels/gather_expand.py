@@ -149,11 +149,18 @@ def _gather_batched_kernel(n_vertices: int, tile: int, n_cs: int,
 
 
 def vmem_budget(n_words: int, v_pad: int, n_cs: int, tile: int,
-                prefetch_depth: int = 0) -> int:
+                prefetch_depth: int = 0,
+                n_blocks: int | None = None) -> int:
     """Bytes of VMEM pinned (bitmaps x3 + P x2 + colstarts + rows
-    tile buffers — 2 for the automatic BlockSpec pipeline,
-    ``prefetch_depth + 1`` for the manual DMA pipeline)."""
-    n_buf = max(2, prefetch_depth + 1)
+    tile buffers — 2 for the automatic BlockSpec pipeline, the
+    resolved ``depth + 1`` for the manual DMA pipeline).  The wrappers
+    clamp ``prefetch_depth`` to the block count, so the budget charges
+    the clamped depth too (ISSUE 9 satellite: budgets from the
+    resolved spec only)."""
+    depth = max(int(prefetch_depth), 0)
+    if n_blocks is not None:
+        depth = min(depth, max(int(n_blocks), 1))
+    n_buf = max(2, depth + 1)
     return 4 * (3 * n_words + 2 * v_pad + n_cs) + n_buf * 4 * tile
 
 

@@ -186,8 +186,15 @@ def vmem_budget(n_words: int, v_pad: int, n_cs: int, tile: int,
     """Bytes of VMEM the megakernel pins: bitmaps x3 + P x2 +
     colstarts + the rows DMA buffers, PLUS the planning working set
     (the dense activity vector and the block-mark vectors) that the
-    unfused pipeline keeps outside the kernel."""
-    n_buf = max(1, prefetch_depth + 1)
+    unfused pipeline keeps outside the kernel.
+
+    The buffer count charges the *resolved* pipeline depth — the
+    wrappers clamp ``prefetch_depth`` to ``n_blocks``, so the budget
+    must too, or a deep affinity-resolved prefetch on a small graph
+    double-counts DMA buffers the kernel never allocates (ISSUE 9
+    satellite)."""
+    n_buf = min(max(int(prefetch_depth), 0),
+                max(int(n_blocks), 1)) + 1
     plan = 4 * (v_pad + 3 * (n_blocks + 1))
     return (4 * (3 * n_words + 2 * v_pad + n_cs) + n_buf * 4 * tile
             + plan)

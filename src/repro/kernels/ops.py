@@ -19,6 +19,7 @@ from repro.kernels import gather_expand as ge
 from repro.kernels import layer_fused as lf
 from repro.kernels import restoration as rest
 from repro.kernels import sell_expand as se
+from repro.kernels import traversal_fused as tf
 
 VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core
 _VMEM_HEADROOM = 0.75          # leave room for pipeline double-buffers
@@ -152,8 +153,10 @@ def expand_batched(nbr, cand, valid, frontier, visited, out_init, p_init,
 
 
 def _gather_budget_check(n_words: int, v_pad: int, n_cs: int,
-                         tile: int, prefetch_depth: int = 0) -> None:
-    budget = ge.vmem_budget(n_words, v_pad, n_cs, tile, prefetch_depth)
+                         tile: int, prefetch_depth: int = 0,
+                         n_blocks: int | None = None) -> None:
+    budget = ge.vmem_budget(n_words, v_pad, n_cs, tile, prefetch_depth,
+                            n_blocks)
     if budget > VMEM_BYTES * _VMEM_HEADROOM:
         raise ValueError(
             f"gather_expand working set {budget/2**20:.1f} MiB exceeds "
@@ -177,7 +180,8 @@ def gather_expand(worklist, n_active, rows, colstarts, frontier,
     if interpret is None:
         interpret = _interpret_default()
     _gather_budget_check(visited.shape[0], p_init.shape[0],
-                         colstarts.shape[0], tile, prefetch_depth)
+                         colstarts.shape[0], tile, prefetch_depth,
+                         rows.shape[0] // tile)
     n_active = jnp.atleast_1d(jnp.asarray(n_active, jnp.int32))
     _charge_launch()
     return ge.gather_expand(
@@ -200,7 +204,8 @@ def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
     if interpret is None:
         interpret = _interpret_default()
     _gather_budget_check(visited.shape[1], p_init.shape[1],
-                         colstarts.shape[0], tile, prefetch_depth)
+                         colstarts.shape[0], tile, prefetch_depth,
+                         rows.shape[0] // tile)
     _charge_launch()
     return ge.gather_expand_batched(
         worklist.astype(jnp.int32), n_active.astype(jnp.int32), rows,
@@ -225,8 +230,10 @@ def _pad_slabs(cols, slab_rows, n_vertices: int, step: int):
 
 
 def _sell_budget_check(n_words: int, v_pad: int, step: int,
-                       prefetch_depth: int = 0) -> None:
-    budget = se.vmem_budget(n_words, v_pad, step, prefetch_depth)
+                       prefetch_depth: int = 0,
+                       n_steps: int | None = None) -> None:
+    budget = se.vmem_budget(n_words, v_pad, step, prefetch_depth,
+                            n_steps)
     if budget > VMEM_BYTES * _VMEM_HEADROOM:
         raise ValueError(
             f"sell_expand working set {budget/2**20:.1f} MiB exceeds "
@@ -253,7 +260,8 @@ def sell(cols, slab_rows, frontier, visited, out_init, p_init, *,
     if interpret is None:
         interpret = _interpret_default()
     _sell_budget_check(visited.shape[0], p_init.shape[0],
-                       slabs_per_step, prefetch_depth)
+                       slabs_per_step, prefetch_depth,
+                       -(-cols.shape[0] // slabs_per_step))
     cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
                                  slabs_per_step)
     n_steps = cols.shape[0] // slabs_per_step
@@ -286,7 +294,8 @@ def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
     if interpret is None:
         interpret = _interpret_default()
     _sell_budget_check(visited.shape[1], p_init.shape[1],
-                       slabs_per_step, prefetch_depth)
+                       slabs_per_step, prefetch_depth,
+                       -(-cols.shape[0] // slabs_per_step))
     cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
                                  slabs_per_step)
     n_steps = cols.shape[0] // slabs_per_step
@@ -463,4 +472,210 @@ def layer_fused_batched(rows, colstarts, frontier, visited, p_init, *,
     return lf.layer_fused_batched(
         rows, colstarts, frontier, visited, p_init,
         n_vertices=n_vertices, tile=tile, bottom_up=bottom_up,
+        prefetch_depth=prefetch_depth, interpret=interpret)
+
+
+def sell_megakernel_budget(n_words: int, v_pad: int, n_slabs: int,
+                           slabs_per_step: int, prefetch_depth: int = 0
+                           ) -> int:
+    """Bytes the whole-layer SELL megakernel pins in VMEM — the
+    number `sell_megakernel_fits` tests and degrade events report.
+    ``n_slabs`` is the raw slab count; step padding and the pipeline
+    depth clamp are resolved here (budgets from the resolved spec)."""
+    n_steps = -(-int(n_slabs) // int(slabs_per_step))
+    n_slabs_p = n_steps * int(slabs_per_step)
+    return se.megakernel_vmem_budget(n_words, v_pad, n_slabs_p,
+                                     slabs_per_step, prefetch_depth,
+                                     n_steps)
+
+
+def sell_megakernel_fits(n_words: int, v_pad: int, n_slabs: int,
+                         slabs_per_step: int,
+                         prefetch_depth: int = 0) -> bool:
+    """True when the whole-layer SELL megakernel (resident
+    ``slab_rows`` + cols DMA buffers + bitmaps/P) fits the VMEM
+    budget.  `SellFormat._build_steps` consults this at build time and
+    degrades to the unfused ``fused_gather`` steps when False, with a
+    metric-counted `DegradeEvent` — the `megakernel_fits` contract."""
+    return sell_megakernel_budget(n_words, v_pad, n_slabs,
+                                  slabs_per_step, prefetch_depth) \
+        <= VMEM_BYTES * _VMEM_HEADROOM
+
+
+@_scoped("bfs.sell_layer_fused")
+def sell_layer_fused(cols, slab_rows, frontier, visited, p_init, *,
+                     n_vertices: int, slabs_per_step: int = 1,
+                     bottom_up: bool = False, prefetch_depth: int = 0,
+                     interpret: bool | None = None):
+    """Run one whole SELL layer (in-kernel slab plan + manual cols DMA
+    + sweep + restoration) in ONE Pallas call
+    (kernels/sell_expand.py `sell_layer_fused`).  Pads the slab axis
+    itself.  Returns (out, parent, n_active) with restoration
+    APPLIED."""
+    if interpret is None:
+        interpret = _interpret_default()
+    budget = sell_megakernel_budget(visited.shape[0], p_init.shape[0],
+                                    cols.shape[0], slabs_per_step,
+                                    prefetch_depth)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"sell_layer_fused working set {budget/2**20:.1f} MiB "
+            f"exceeds VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py), reduce slabs_per_step or "
+            f"prefetch_depth, or run pipeline='fused_gather'")
+    cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
+                                 slabs_per_step)
+    _charge_launch()
+    return se.sell_layer_fused(
+        cols, slab_rows, frontier, visited, p_init,
+        n_vertices=n_vertices, slabs_per_step=slabs_per_step,
+        bottom_up=bottom_up, prefetch_depth=prefetch_depth,
+        interpret=interpret)
+
+
+@_scoped("bfs.sell_layer_fused_batched")
+def sell_layer_fused_batched(cols, slab_rows, frontier, visited,
+                             p_init, *, n_vertices: int,
+                             slabs_per_step: int = 1,
+                             bottom_up: bool = False,
+                             prefetch_depth: int = 0,
+                             interpret: bool | None = None):
+    """Batched (leading root-axis) whole-layer SELL megakernel: one
+    launch, B restored layers.  The VMEM budget is per-root."""
+    if interpret is None:
+        interpret = _interpret_default()
+    budget = sell_megakernel_budget(visited.shape[1], p_init.shape[1],
+                                    cols.shape[0], slabs_per_step,
+                                    prefetch_depth)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"sell_layer_fused working set {budget/2**20:.1f} MiB "
+            f"exceeds VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py), reduce slabs_per_step or "
+            f"prefetch_depth, or run pipeline='fused_gather'")
+    cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
+                                 slabs_per_step)
+    _charge_launch()
+    return se.sell_layer_fused_batched(
+        cols, slab_rows, frontier, visited, p_init,
+        n_vertices=n_vertices, slabs_per_step=slabs_per_step,
+        bottom_up=bottom_up, prefetch_depth=prefetch_depth,
+        interpret=interpret)
+
+
+def persistent_budget(n_words: int, v_pad: int, n_cs: int, tile: int,
+                      n_batch: int, max_layers: int,
+                      prefetch_depth: int = 0,
+                      n_blocks: int = 1) -> int:
+    """Bytes the CSR whole-traversal persistent kernel pins in VMEM —
+    the number `persistent_fits` tests and degrade events report.
+    Unlike the per-layer kernels the whole batch's state is resident
+    at once, so the budget scales with ``n_batch``."""
+    return tf.vmem_budget(n_words, v_pad, n_cs, tile, n_batch,
+                          max_layers, prefetch_depth, n_blocks)
+
+
+def persistent_fits(n_words: int, v_pad: int, n_cs: int, tile: int,
+                    n_batch: int, max_layers: int,
+                    prefetch_depth: int = 0, n_blocks: int = 1) -> bool:
+    """True when the CSR persistent kernel's whole-batch working set
+    (state x2 + colstarts + plan vectors + rows DMA buffers + stats)
+    fits the VMEM budget.  The engine consults this at trace time and
+    degrades ``pipeline="persistent"`` to megakernel (then unfused)
+    when False, emitting a metric-counted `DegradeEvent` per the
+    ISSUE 8 contract."""
+    return persistent_budget(n_words, v_pad, n_cs, tile, n_batch,
+                             max_layers, prefetch_depth, n_blocks) \
+        <= VMEM_BYTES * _VMEM_HEADROOM
+
+
+def sell_persistent_budget(n_words: int, v_pad: int, n_slabs: int,
+                           slabs_per_step: int, n_batch: int,
+                           max_layers: int,
+                           prefetch_depth: int = 0) -> int:
+    """Bytes the SELL whole-traversal persistent kernel pins in VMEM
+    (resident ``slab_rows`` + degrees + cols DMA buffers + the whole
+    batch's state)."""
+    n_steps = -(-int(n_slabs) // int(slabs_per_step))
+    n_slabs_p = n_steps * int(slabs_per_step)
+    return tf.sell_vmem_budget(n_words, v_pad, n_slabs_p,
+                               slabs_per_step, n_batch, max_layers,
+                               prefetch_depth, n_steps)
+
+
+def sell_persistent_fits(n_words: int, v_pad: int, n_slabs: int,
+                         slabs_per_step: int, n_batch: int,
+                         max_layers: int,
+                         prefetch_depth: int = 0) -> bool:
+    """`persistent_fits` for the SELL persistent kernel."""
+    return sell_persistent_budget(n_words, v_pad, n_slabs,
+                                  slabs_per_step, n_batch, max_layers,
+                                  prefetch_depth) \
+        <= VMEM_BYTES * _VMEM_HEADROOM
+
+
+@_scoped("bfs.traversal_fused")
+def traversal_fused_batched(rows, colstarts, frontier, visited, p_init,
+                            *, n_vertices: int,
+                            tile: int = ge.DEFAULT_TILE, policy,
+                            max_layers: int = 64,
+                            prefetch_depth: int = 0,
+                            interpret: bool | None = None):
+    """Run the WHOLE multi-root BFS traversal in ONE Pallas call
+    (kernels/traversal_fused.py): layer loop, direction decision and
+    termination all inside the kernel, state VMEM-resident across
+    layers.  ``rows`` must already be padded to a tile multiple.
+    Returns (frontier, visited, parent, depths, layers, stats) — the
+    engine's whole-traversal contract — and charges exactly ONE launch
+    to the trace-time counter."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n_blocks = rows.shape[0] // tile
+    budget = persistent_budget(visited.shape[1], p_init.shape[1],
+                               colstarts.shape[0], tile,
+                               visited.shape[0], max_layers,
+                               prefetch_depth, n_blocks)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"traversal_fused working set {budget/2**20:.1f} MiB "
+            f"exceeds VMEM budget; reduce the batch width, the tile "
+            f"or max_layers, or run pipeline='megakernel'")
+    _charge_launch()
+    return tf.traversal_fused_batched(
+        rows, colstarts, frontier, visited, p_init,
+        n_vertices=n_vertices, tile=tile, policy=policy,
+        max_layers=max_layers, prefetch_depth=prefetch_depth,
+        interpret=interpret)
+
+
+@_scoped("bfs.sell_traversal_fused")
+def sell_traversal_fused_batched(cols, slab_rows, deg, frontier,
+                                 visited, p_init, *, n_vertices: int,
+                                 slabs_per_step: int = 1, policy,
+                                 max_layers: int = 64,
+                                 prefetch_depth: int = 0,
+                                 interpret: bool | None = None):
+    """The whole multi-root SELL traversal in ONE Pallas call.  Pads
+    the slab axis itself; ``deg`` is the (V,) degree array (SELL has
+    no colstarts for the in-kernel Table 1 counters).  Same contract
+    and launch accounting as `traversal_fused_batched`."""
+    if interpret is None:
+        interpret = _interpret_default()
+    budget = sell_persistent_budget(visited.shape[1], p_init.shape[1],
+                                    cols.shape[0], slabs_per_step,
+                                    visited.shape[0], max_layers,
+                                    prefetch_depth)
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"sell_traversal_fused working set {budget/2**20:.1f} MiB "
+            f"exceeds VMEM budget; reduce the batch width, "
+            f"slabs_per_step or max_layers, or run "
+            f"pipeline='megakernel'")
+    cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
+                                 slabs_per_step)
+    _charge_launch()
+    return tf.sell_traversal_fused_batched(
+        cols, slab_rows, deg, frontier, visited, p_init,
+        n_vertices=n_vertices, slabs_per_step=slabs_per_step,
+        policy=policy, max_layers=max_layers,
         prefetch_depth=prefetch_depth, interpret=interpret)

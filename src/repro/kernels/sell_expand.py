@@ -56,6 +56,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bitmap import WORD_MASK, WORD_SHIFT
+from repro.kernels.gather_expand import _dma_pipeline
+from repro.kernels.layer_fused import _restore_in_kernel
 from repro.kernels.pallas_compat import CompilerParams
 
 SLICE_C = 128   # rows per slice = TPU vector lane count (csr.LANES)
@@ -243,13 +245,19 @@ def _sell_dma_batched_kernel(n_vertices: int, bottom_up: bool,
 
 
 def vmem_budget(n_words: int, v_pad: int, slabs_per_step: int,
-                prefetch_depth: int = 0) -> int:
+                prefetch_depth: int = 0, n_steps: int | None = None) -> int:
     """Bytes of VMEM pinned (bitmaps x4 + P x2 + slab buffers — 2 for
-    the automatic BlockSpec pipeline, ``prefetch_depth + 1`` for the
-    manual DMA pipeline)."""
+    the automatic BlockSpec pipeline, ``depth + 1`` for the manual DMA
+    pipeline).  ``depth`` is the *resolved* pipeline depth: the
+    wrappers clamp ``prefetch_depth`` to the step count, so the budget
+    must too — charging the unclamped depth rejects shallow sweeps
+    that the kernel would actually run with fewer buffers (ISSUE 9
+    satellite: budgets compute from the resolved spec only)."""
     slab = slabs_per_step * (W_QUANT + 1) * SLICE_C * 4
-    return 4 * (4 * n_words + 2 * v_pad) \
-        + max(2, prefetch_depth + 1) * slab
+    depth = max(int(prefetch_depth), 0)
+    if n_steps is not None:
+        depth = min(depth, max(int(n_steps), 1))
+    return 4 * (4 * n_words + 2 * v_pad) + max(2, depth + 1) * slab
 
 
 @functools.partial(jax.jit, static_argnames=("n_vertices",
@@ -401,3 +409,249 @@ def sell_expand_batched(cols, slab_rows, worklist, n_active, frontier,
     )(worklist, n_active, cols, slab_rows, frontier, visited, out_init,
       p_init)
     return out, parent
+
+
+# ---------------------------------------------------------------------------
+# SELL megakernel: the whole layer in ONE Pallas call (ISSUE 9).
+#
+# The active-step scheduling above rides scalar-prefetched BlockSpec
+# index maps, which forces the slab plan onto the host side of the
+# launch — the reason `SellFormat.supports_megakernel` stayed False
+# through PR 6.  These kernels restructure the sweep around manual
+# `make_async_copy` DMA exactly like `layer_fused.py`: the plan runs
+# *inside* the kernel at step 0 (frontier x slab_rows membership,
+# compacted with the same rank-scatter idiom — no host work-list), the
+# SMEM work-list drives the cols DMA pipeline, and step n-1 inlines
+# the restoration pass.  ``slab_rows`` stays fully VMEM-resident: the
+# plan must read every slab's lane owners anyway, and at 128 int32 per
+# slab it is W_QUANT x smaller than the cols stream it lets us skip.
+# ---------------------------------------------------------------------------
+
+
+def _plan_slabs_in_kernel(n_vertices: int, spp: int, n_steps: int,
+                          words, slab_rows):
+    """The in-kernel transcription of `formats.sell._plan_slab_steps`:
+    from the (W,) planning bitmap (frontier, or ~visited bottom-up)
+    and the resident (n_slabs, C) ``slab_rows``, build the compacted
+    active slab-group work-list.  Same contract as
+    `layer_fused._plan_in_kernel`: active prefix first, tail clamped
+    to the last active group, plus the live count.  ``slab_rows`` must
+    be pre-padded to an ``spp`` multiple (sentinel rows are never
+    members, so padding slabs plan inactive — the zero-pad of the host
+    planner)."""
+    sw = jnp.clip(slab_rows >> WORD_SHIFT, 0, words.shape[0] - 1)
+    sb = (slab_rows & WORD_MASK).astype(jnp.uint32)
+    member = ((words[sw] >> sb) & jnp.uint32(1)) != 0
+    act_slab = (member & (slab_rows < n_vertices)).any(axis=1)
+    covered = act_slab.reshape(n_steps, spp).any(axis=1).astype(jnp.int32)
+    n_active = covered.sum(dtype=jnp.int32)
+    # rank-scatter compaction (jnp.nonzero is unavailable in-kernel)
+    rank = jnp.cumsum(covered) - covered
+    steps = jnp.arange(n_steps, dtype=jnp.int32)
+    wl = jnp.zeros((n_steps,), jnp.int32) \
+        .at[jnp.where(covered != 0, rank, n_steps)] \
+        .set(steps, mode="drop")
+    last = wl[jnp.clip(n_active - 1, 0, n_steps - 1)]
+    wl = jnp.where(steps < n_active, wl, last)
+    return wl, n_active
+
+
+def _sell_layer_kernel(n_vertices: int, bottom_up: bool, spp: int,
+                       depth: int, n_steps: int, cols_ref, rows_ref,
+                       frontier_ref, vis_ref, p0_ref, out_ref, p_ref,
+                       na_out_ref, wl_ref, na_ref, cols_buf, sems):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _plan():
+        out_ref[...] = jnp.zeros(out_ref.shape, jnp.uint32)
+        p_ref[...] = p0_ref[...]
+        words = ~vis_ref[...] if bottom_up else frontier_ref[...]
+        wl, na = _plan_slabs_in_kernel(n_vertices, spp, n_steps, words,
+                                       rows_ref[...])
+        wl_ref[...] = wl
+        na_ref[0] = na
+        na_out_ref[0] = na
+
+    def work(cols_blk):
+        @pl.when(t < na_ref[0])
+        def _work():
+            rows_blk = rows_ref[pl.ds(wl_ref[t] * spp, spp), :]
+            out, p = _sell_tile(n_vertices, bottom_up, cols_blk,
+                                rows_blk, frontier_ref[...],
+                                vis_ref[...], out_ref[...], p_ref[...])
+            out_ref[...] = out
+            p_ref[...] = p
+
+    _dma_pipeline(cols_ref, cols_buf, sems, lambda s: wl_ref[s], spp,
+                  depth, n_steps, t, t == 0, work)
+
+    @pl.when(t == n_steps - 1)
+    def _restore():
+        out, p = _restore_in_kernel(n_vertices, out_ref[...], p_ref[...])
+        out_ref[...] = out
+        p_ref[...] = p
+
+
+def _sell_layer_batched_kernel(n_vertices: int, bottom_up: bool,
+                               spp: int, depth: int, n_steps: int,
+                               cols_ref, rows_ref, frontier_ref,
+                               vis_ref, p0_ref, out_ref, p_ref,
+                               na_out_ref, wl_ref, na_ref, cols_buf,
+                               sems):
+    """Batched variant: grid (roots, slice steps), root axis outer and
+    sequential — each root re-plans into the shared SMEM scratch at
+    its step 0, exactly the `layer_fused._layer_batched_kernel`
+    shape."""
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _plan():
+        out_ref[...] = jnp.zeros(out_ref.shape, jnp.uint32)
+        p_ref[...] = p0_ref[...]
+        words = ~vis_ref[0] if bottom_up else frontier_ref[0]
+        wl, na = _plan_slabs_in_kernel(n_vertices, spp, n_steps, words,
+                                       rows_ref[...])
+        wl_ref[...] = wl
+        na_ref[0] = na
+        na_out_ref[0] = na
+
+    def work(cols_blk):
+        @pl.when(t < na_ref[0])
+        def _work():
+            rows_blk = rows_ref[pl.ds(wl_ref[t] * spp, spp), :]
+            out, p = _sell_tile(n_vertices, bottom_up, cols_blk,
+                                rows_blk, frontier_ref[0], vis_ref[0],
+                                out_ref[0], p_ref[0])
+            out_ref[...] = out[None]
+            p_ref[...] = p[None]
+
+    _dma_pipeline(cols_ref, cols_buf, sems, lambda s: wl_ref[s], spp,
+                  depth, n_steps, t, t == 0, work)
+
+    @pl.when(t == n_steps - 1)
+    def _restore():
+        out, p = _restore_in_kernel(n_vertices, out_ref[0], p_ref[0])
+        out_ref[...] = out[None]
+        p_ref[...] = p[None]
+
+
+def megakernel_vmem_budget(n_words: int, v_pad: int, n_slabs: int,
+                           slabs_per_step: int, prefetch_depth: int = 0,
+                           n_steps: int = 1) -> int:
+    """Bytes of VMEM the SELL megakernel pins: bitmaps x3 + P x2 + the
+    fully resident ``slab_rows`` (x2 for the plan's membership working
+    set) + the cols slab DMA buffers at the *clamped* pipeline
+    depth + the SMEM work-list."""
+    depth = min(max(int(prefetch_depth), 0), max(int(n_steps), 1))
+    slab_cols = slabs_per_step * W_QUANT * SLICE_C * 4
+    plan = 2 * 4 * n_slabs * SLICE_C + 4 * 3 * (n_steps + 1)
+    return 4 * (3 * n_words + 2 * v_pad) \
+        + (depth + 1) * slab_cols + plan
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices",
+                                             "slabs_per_step",
+                                             "bottom_up",
+                                             "prefetch_depth",
+                                             "interpret"))
+def sell_layer_fused(cols, slab_rows, frontier, visited, p_init, *,
+                     n_vertices: int, slabs_per_step: int = 1,
+                     bottom_up: bool = False, prefetch_depth: int = 0,
+                     interpret: bool = True):
+    """One SELL layer in ONE Pallas call: in-kernel slab plan + manual
+    cols DMA + slab sweep + restoration.
+
+    Same contract as `layer_fused.layer_fused`: returns the RESTORED
+    ``(out, parent, n_active)`` — no host planning pass, no separate
+    restore launch.  ``cols``/``slab_rows`` must be pre-padded to a
+    ``slabs_per_step`` multiple (`ops._pad_slabs`).
+    """
+    n_slabs = cols.shape[0]
+    assert n_slabs % slabs_per_step == 0, \
+        "pad the slab count to the step size"
+    n_steps = n_slabs // slabs_per_step
+    n_words = visited.shape[0]
+    v_pad = p_init.shape[0]
+    depth = min(max(int(prefetch_depth), 0), n_steps)
+
+    whole = lambda n: pl.BlockSpec((n,), lambda t: (0,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(n_steps,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+                  pl.BlockSpec((n_slabs, SLICE_C), lambda t: (0, 0)),
+                  whole(n_words), whole(n_words), whole(v_pad)],
+        out_specs=[whole(n_words), whole(v_pad), whole(1)],
+        scratch_shapes=[pltpu.SMEM((n_steps,), jnp.int32),
+                        pltpu.SMEM((1,), jnp.int32),
+                        pltpu.VMEM((depth + 1, slabs_per_step, W_QUANT,
+                                    SLICE_C), jnp.int32),
+                        pltpu.SemaphoreType.DMA((depth + 1,))],
+    )
+    out, parent, n_active = pl.pallas_call(
+        functools.partial(_sell_layer_kernel, n_vertices, bottom_up,
+                          slabs_per_step, depth, n_steps),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_words,), jnp.uint32),
+                   jax.ShapeDtypeStruct((v_pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        compiler_params=CompilerParams(
+            # SMEM work-list + accumulating outputs => sequential grid
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="bfs_sell_layer_fused",
+    )(cols, slab_rows, frontier, visited, p_init)
+    return out, parent, n_active
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices",
+                                             "slabs_per_step",
+                                             "bottom_up",
+                                             "prefetch_depth",
+                                             "interpret"))
+def sell_layer_fused_batched(cols, slab_rows, frontier, visited,
+                             p_init, *, n_vertices: int,
+                             slabs_per_step: int = 1,
+                             bottom_up: bool = False,
+                             prefetch_depth: int = 0,
+                             interpret: bool = True):
+    """Multi-root SELL megakernel: B independent layer sweeps in one
+    launch, each root planning its own in-kernel work-list."""
+    n_slabs = cols.shape[0]
+    assert n_slabs % slabs_per_step == 0, \
+        "pad the slab count to the step size"
+    n_steps = n_slabs // slabs_per_step
+    n_batch, n_words = visited.shape
+    v_pad = p_init.shape[1]
+    depth = min(max(int(prefetch_depth), 0), n_steps)
+
+    whole = lambda n: pl.BlockSpec((1, n), lambda b, t: (b, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(n_batch, n_steps),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+                  pl.BlockSpec((n_slabs, SLICE_C), lambda b, t: (0, 0)),
+                  whole(n_words), whole(n_words), whole(v_pad)],
+        out_specs=[whole(n_words), whole(v_pad),
+                   pl.BlockSpec((1,), lambda b, t: (b,))],
+        scratch_shapes=[pltpu.SMEM((n_steps,), jnp.int32),
+                        pltpu.SMEM((1,), jnp.int32),
+                        pltpu.VMEM((depth + 1, slabs_per_step, W_QUANT,
+                                    SLICE_C), jnp.int32),
+                        pltpu.SemaphoreType.DMA((depth + 1,))],
+    )
+    out, parent, n_active = pl.pallas_call(
+        functools.partial(_sell_layer_batched_kernel, n_vertices,
+                          bottom_up, slabs_per_step, depth, n_steps),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_batch, n_words), jnp.uint32),
+                   jax.ShapeDtypeStruct((n_batch, v_pad), jnp.int32),
+                   jax.ShapeDtypeStruct((n_batch,), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="bfs_sell_layer_fused_batched",
+    )(cols, slab_rows, frontier, visited, p_init)
+    return out, parent, n_active

@@ -48,6 +48,11 @@ from repro.core import engine as _engine
 TRAVERSAL_SPAN = "bfs.traversal"
 LAYER_SPAN = "bfs.layer"
 STEP_SPAN = "bfs.layer_step"
+#: the whole-traversal persistent pipeline (ISSUE 9) is ONE Pallas
+#: launch — there is no per-layer host boundary to time, so trace_run
+#: records ONE span of this name and recovers per-layer counters from
+#: the kernel's on-device stats buffer instead of host recomputation
+PERSISTENT_SPAN = "bfs.traversal.persistent"
 
 
 @dataclass
@@ -213,11 +218,46 @@ def trace_run(graph, roots, *, spec=None, tracer: SpanTracer | None = None,
     tracer = tracer if tracer is not None else SpanTracer(sync=sync)
     fmt, rspec = ct.fmt, ct.resolved
     n_vertices, v_pad = fmt.n_vertices, fmt.n_vertices_padded
-    deg_mat = bm.degree_matrix(fmt.degrees(), v_pad)
 
     single = jnp.ndim(roots) == 0
     roots_b = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
     n_roots = int(roots_b.shape[0])
+
+    if rspec.pipeline == "persistent":
+        # ONE launch, ONE span: the layer loop runs inside the kernel
+        # (ISSUE 9), so there is no per-layer host boundary to time.
+        # Per-layer Table 1 counters come back from the kernel's
+        # on-device stats buffer (`engine.layer_stats`); the per-layer
+        # seconds are the single span's duration amortized over the
+        # recovered layers — the honest figure when layers cannot be
+        # individually observed (len(stats) == len(layer_seconds)
+        # still holds for every consumer).
+        with xla_profiler(profile_logdir), \
+             tracer.span(PERSISTENT_SPAN, n_roots=n_roots,
+                         format=type(fmt).__name__,
+                         pipeline=rspec.pipeline,
+                         algorithm=rspec.algorithm,
+                         n_vertices=n_vertices) as top:
+            res = ct.run_batched(roots_b)
+            tracer.device_sync(res.state.frontier, res.state.visited,
+                               res.state.parent, res.stats)
+            stats = _engine.layer_stats(res)
+            top.args["n_layers"] = len(stats)
+            top.args["launches"] = sum(s.launches for s in stats)
+            top.args["layers"] = [
+                {"frontier_vertices": s.frontier_vertices,
+                 "edges_examined": s.edges_examined,
+                 "discovered": s.discovered} for s in stats]
+        per_layer_s = (top.dur_us / 1e6) / max(len(stats), 1)
+        layer_seconds = [per_layer_s] * len(stats)
+        state, depths_j = res.state, res.depths
+        if single:
+            state = _engine.BfsState(state.frontier[0], state.visited[0],
+                                     state.parent[0], state.layer)
+            depths_j = depths_j[0]
+        return TraceRun(state, depths_j, stats, layer_seconds, tracer)
+
+    deg_mat = bm.degree_matrix(fmt.degrees(), v_pad)
 
     stats: list[_engine.LayerStats] = []
     layer_seconds: list[float] = []

@@ -483,6 +483,18 @@ class GraphEngine:
             self._m_latency.observe(q.meta["latency_s"])
         return True
 
+    def run_direct(self, roots) -> engine.EngineResult:
+        """Whole-traversal fast path: run root(s) to completion
+        through the plan's compiled program, bypassing the per-tick
+        slot machinery (no per-layer host sync, no admission queue).
+        Under ``spec.pipeline="persistent"`` (ISSUE 9) the batch is
+        ONE Pallas launch — layer loop, direction decision and
+        termination in-kernel.  The tick path (`step`) keeps the
+        per-layer steps regardless of pipeline: a tick is by
+        definition one layer, so ``"persistent"`` ticks run the
+        whole-layer megakernel steps instead."""
+        return self.compiled.run(roots)
+
     def step(self):
         """One engine tick: advance every active query by one layer.
 

@@ -180,9 +180,16 @@ def test_megakernel_fits_budget():
     # a 2^22-vertex working set blows the 16 MiB VMEM budget
     assert not ops.megakernel_fits(1 << 17, 1 << 22, (1 << 22) + 1,
                                    1024)
-    # deep prefetch on a huge tile also overflows
+    # deep prefetch on a huge tile also overflows (enough blocks that
+    # the resolved pipeline depth really is 3)
     assert not ops.megakernel_fits(36, 1152, 1025, 1 << 20,
-                                   prefetch_depth=3)
+                                   prefetch_depth=3, n_blocks=8)
+    # ISSUE 9 satellite regression: the budget charges the RESOLVED
+    # depth, not the requested one — a single-block graph clamps the
+    # pipeline to one in-flight buffer, so the same deep-prefetch
+    # request fits (the kernel never allocates the extra buffers)
+    assert ops.megakernel_fits(36, 1152, 1025, 1 << 20,
+                               prefetch_depth=3, n_blocks=1)
 
 
 def test_megakernel_vmem_fallback(graphs, monkeypatch):
@@ -215,7 +222,9 @@ def test_megakernel_rejected_on_unsupporting_formats(graphs):
     g = graphs["rmat10"]
     spec = TraversalSpec(pipeline="megakernel")
     spec.validate(build(g, "csr"))               # supported: no raise
-    for fmt_name in ("sell", "bitmap"):
+    # SELL fuses since ISSUE 9 (manual cols DMA) — also no raise
+    spec.validate(build(g, "sell"))
+    for fmt_name in ("bitmap",):
         fmt = build(g, fmt_name)
         assert not fmt.supports_megakernel
         with pytest.raises(ValueError, match="megakernel"):

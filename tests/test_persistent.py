@@ -1,0 +1,343 @@
+"""ISSUE 9: the whole-traversal persistent kernel vs the per-layer
+megakernel and the serial oracle.
+
+Covers the acceptance matrix:
+
+* bit-parity persistent vs megakernel across every graph family x
+  direction policy x packed/unpacked x single/batched root — parents
+  must be IDENTICAL (both pipelines run the same racy first-tile-wins
+  parent selection over the same resolved tile partition), and
+  oracle-valid;
+* launch accounting: a persistent traversal issues EXACTLY one Pallas
+  call total (charged to layer 0 of the stats buffer) where the
+  megakernel issues one per layer, measured by the trace-time
+  `ops.count_launches` counter;
+* the VMEM-budget degrade: a whole-batch working set
+  `fmt.persistent_fits` rejects falls back to the per-layer megakernel
+  steps via an observable ``serve.degrade.vmem_fallback``
+  `DegradeEvent` — and still traverses correctly;
+* SELL joins both fused tiers (ISSUE 9 lifts
+  ``supports_megakernel=False`` via the manual cols-DMA rebuild):
+  megakernel and persistent parity on the sorted-slab layout;
+* the capability gate: ``pipeline="persistent"`` is rejected by
+  `spec.validate` on formats without `supports_persistent`, and the
+  `persistent_algorithms` honor check rejects scalar algorithms the
+  in-kernel layer loop cannot run — both keyed on classvars, not
+  format names.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csr as csr_mod
+from repro.core import engine, rmat
+from repro.core.bfs_parallel import parents_graph500
+from repro.core.bfs_serial import bfs_serial
+from repro.core.rmat import EdgeList
+from repro.core.validate import validate
+from repro.formats.csr_format import CsrFormat
+from repro.formats.sell import SellFormat
+from repro.kernels import ops
+from repro.kernels import traversal_fused
+
+POLICIES = [
+    engine.TopDown(),
+    engine.ThresholdSimd(0),          # SIMD forced: every layer fused
+    engine.PaperLiteralLayers((1, 2)),
+    engine.BeamerHybrid(),
+]
+
+
+def _csr_from_pairs(pairs, n):
+    src = jnp.asarray([a for a, b in pairs] + [b for a, b in pairs],
+                      jnp.int32)
+    dst = jnp.asarray([b for a, b in pairs] + [a for a, b in pairs],
+                      jnp.int32)
+    return csr_mod.from_edges(EdgeList(src, dst, n))
+
+
+GRAPHS = {
+    "rmat10": lambda: csr_mod.from_edges(
+        rmat.generate(jax.random.PRNGKey(3), scale=10, edgefactor=16)),
+    "star": lambda: _csr_from_pairs(
+        [(0, i) for i in range(1, 128)], 128),
+    "path": lambda: _csr_from_pairs(
+        [(i, i + 1) for i in range(95)], 96),
+    "disconnected": lambda: _csr_from_pairs(
+        [(0, i) for i in range(1, 64)]
+        + [(i, i + 1) for i in range(64, 127)], 128),
+}
+ROOTS = {"rmat10": 17, "star": 0, "path": 0, "disconnected": 0}
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {k: v() for k, v in GRAPHS.items()}
+
+
+def check_oracle(csr, parent_g500, root):
+    _, ref_depth = bfs_serial(np.asarray(csr.rows),
+                              np.asarray(csr.colstarts),
+                              csr.n_vertices, root)
+    res = validate(csr, parent_g500, root, reference_depth=ref_depth)
+    assert res.ok, res
+
+
+def _reached(res, n_vertices):
+    return np.asarray(res.state.parent)[..., :n_vertices] < n_vertices
+
+
+def _launch_col(res):
+    return np.asarray(res.stats)[:, engine._ST_LAUNCH]
+
+
+def _total_launches(res) -> int:
+    return int(_launch_col(res).sum())
+
+
+# ---------------------------------------------------------------------------
+# Bit-parity: persistent vs megakernel, every family x policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("packed", [True, False],
+                         ids=["packed", "unpacked"])
+@pytest.mark.parametrize("policy", POLICIES,
+                         ids=lambda p: type(p).__name__)
+@pytest.mark.parametrize("graph_name", list(GRAPHS))
+def test_persistent_matches_megakernel(graphs, graph_name, policy,
+                                       packed):
+    g = graphs[graph_name]
+    root = ROOTS[graph_name]
+    pers = engine.traverse(g, root, policy=policy, max_layers=128,
+                           pipeline="persistent", packed=packed)
+    mega = engine.traverse(g, root, policy=policy, max_layers=128,
+                           pipeline="megakernel", packed=packed)
+    # same resolved tile -> same racy tiebreak -> IDENTICAL parents
+    np.testing.assert_array_equal(np.asarray(pers.state.parent),
+                                  np.asarray(mega.state.parent))
+    assert int(pers.state.layer) == int(mega.state.layer)
+    assert int(pers.depths) == int(mega.depths)
+    check_oracle(g, np.asarray(parents_graph500(pers.state,
+                                                g.n_vertices)), root)
+
+
+@pytest.mark.parametrize("packed", [True, False],
+                         ids=["packed", "unpacked"])
+def test_persistent_batched_multiroot(graphs, packed):
+    g = graphs["disconnected"]
+    # both components + an isolated-ish tail: slot 64's search dies at
+    # a different layer than slot 0's, exercising the per-root layer
+    # loop running past a finished slot inside the single launch
+    roots = [0, 64, 1, 127]
+    pers = engine.traverse(g, roots, policy=engine.ThresholdSimd(0),
+                           pipeline="persistent", packed=packed)
+    mega = engine.traverse(g, roots, policy=engine.ThresholdSimd(0),
+                           pipeline="megakernel", packed=packed)
+    np.testing.assert_array_equal(np.asarray(pers.state.parent),
+                                  np.asarray(mega.state.parent))
+    np.testing.assert_array_equal(np.asarray(pers.depths),
+                                  np.asarray(mega.depths))
+    for b, root in enumerate(roots):
+        st = engine.BfsState(pers.state.frontier[b],
+                             pers.state.visited[b],
+                             pers.state.parent[b], pers.state.layer)
+        check_oracle(g, np.asarray(parents_graph500(st, g.n_vertices)),
+                     root)
+
+
+def test_persistent_batched_rmat_prefetch(graphs):
+    """Batched skewed workload with the DMA pipeline running ahead
+    inside the single launch."""
+    g = graphs["rmat10"]
+    roots = [17, 200, 5]
+    pers = engine.traverse(g, roots, policy=engine.ThresholdSimd(0),
+                           pipeline="persistent", prefetch_depth=2)
+    mega = engine.traverse(g, roots, policy=engine.ThresholdSimd(0),
+                           pipeline="megakernel", prefetch_depth=2)
+    np.testing.assert_array_equal(np.asarray(pers.state.parent),
+                                  np.asarray(mega.state.parent))
+    np.testing.assert_array_equal(np.asarray(pers.depths),
+                                  np.asarray(mega.depths))
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting: 1 call/TRAVERSAL vs 1 call/layer
+# ---------------------------------------------------------------------------
+
+def test_persistent_single_launch_per_traversal(graphs):
+    g = graphs["rmat10"]
+    pers = engine.traverse(g, 17, policy=engine.ThresholdSimd(0),
+                           pipeline="persistent")
+    mega = engine.traverse(g, 17, policy=engine.ThresholdSimd(0),
+                           pipeline="megakernel")
+    assert _total_launches(pers) == 1
+    # ...charged to layer 0; every later row reads 0 (the launch
+    # column is the ladder metric, so the shape matters, not just
+    # the sum)
+    col = _launch_col(pers)
+    assert col[0] == 1 and not col[1:].any(), col
+    n_layers = len(engine.layer_stats(mega))
+    assert n_layers >= 2
+    assert _total_launches(mega) == n_layers
+
+
+def test_persistent_stats_match_megakernel(graphs):
+    """Cols 0-4 (active/frontier/edges/discovered/mode) of the stats
+    buffer are recovered from in-kernel counters and must agree with
+    the per-layer pipeline's accounting exactly."""
+    g = graphs["rmat10"]
+    pers = engine.traverse(g, 17, policy=engine.ThresholdSimd(0),
+                           pipeline="persistent")
+    mega = engine.traverse(g, 17, policy=engine.ThresholdSimd(0),
+                           pipeline="megakernel")
+    np.testing.assert_array_equal(np.asarray(pers.stats)[:, :5],
+                                  np.asarray(mega.stats)[:, :5])
+
+
+def test_mode_constants_pinned():
+    """The persistent kernel restates the engine's MODE encoding for
+    its in-kernel policy arm — the two must never drift apart."""
+    assert traversal_fused.MODE_SCALAR == engine.MODE_SCALAR
+    assert traversal_fused.MODE_SIMD == engine.MODE_SIMD
+    assert traversal_fused.MODE_BOTTOMUP == engine.MODE_BOTTOMUP
+
+
+# ---------------------------------------------------------------------------
+# VMEM-budget degrade: persistent -> megakernel, observable
+# ---------------------------------------------------------------------------
+
+def test_persistent_fits_budget():
+    assert ops.persistent_fits(36, 1152, 1025, 1024, 1, 64)
+    # a 2^22-vertex whole-batch working set blows the VMEM budget
+    assert not ops.persistent_fits(1 << 17, 1 << 22, (1 << 22) + 1,
+                                   1024, 8, 64)
+
+
+def test_persistent_vmem_fallback(graphs, monkeypatch):
+    """Past the VMEM budget the persistent arm must degrade to the
+    per-layer megakernel steps — same results, honest (1/layer)
+    launch counter, and an observable DegradeEvent."""
+    from repro.api import plan as api_plan
+    from repro.obs.metrics import (clear_degrade_log, degrade_log,
+                                   get_registry)
+    g = graphs["rmat10"]
+    clear_degrade_log()
+    reg = get_registry()
+    before = reg.counter("serve.degrade.vmem_fallback").value
+    api_plan.clear_cache()     # force a re-trace under the patch
+    monkeypatch.setattr(ops, "persistent_fits",
+                        lambda *a, **k: False)
+    try:
+        res = engine.traverse(g, 17, policy=engine.ThresholdSimd(0),
+                              pipeline="persistent")
+    finally:
+        monkeypatch.undo()
+        api_plan.clear_cache()  # drop the degraded executable
+    check_oracle(g, np.asarray(parents_graph500(res.state,
+                                                g.n_vertices)), 17)
+    # fell back to the megakernel: one launch per layer, not one total
+    n_layers = len(engine.layer_stats(res))
+    assert _total_launches(res) == n_layers >= 2
+    assert reg.counter("serve.degrade.vmem_fallback").value \
+        == before + 1
+    events = [e for e in degrade_log() if e.site == "vmem_fallback"]
+    assert events, "no DegradeEvent recorded"
+    assert "persistent" in events[-1].reason
+    assert "megakernel" in events[-1].fallback
+    clear_degrade_log()
+
+
+# ---------------------------------------------------------------------------
+# SELL: both fused tiers on the sorted-slab layout (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def test_sell_megakernel_matches_unfused(graphs):
+    """The lifted capability: SELL's whole-layer fused kernel (manual
+    cols DMA) agrees with its own unfused slab pipeline."""
+    g = graphs["rmat10"]
+    fmt = SellFormat.from_csr(g)
+    assert fmt.supports_megakernel
+    mega = engine.traverse(fmt, 17, policy=engine.ThresholdSimd(0),
+                           pipeline="megakernel")
+    fused = engine.traverse(fmt, 17, policy=engine.ThresholdSimd(0),
+                            pipeline="fused_gather")
+    np.testing.assert_array_equal(_reached(mega, g.n_vertices),
+                                  _reached(fused, g.n_vertices))
+    check_oracle(g, np.asarray(parents_graph500(mega.state,
+                                                g.n_vertices)), 17)
+    buf = np.asarray(mega.stats)
+    simd = [int(buf[i, engine._ST_LAUNCH])
+            for i in range(buf.shape[0])
+            if buf[i, engine._ST_ACTIVE]
+            and int(buf[i, engine._ST_MODE]) != engine.MODE_SCALAR]
+    assert simd and all(n == 1 for n in simd), simd
+
+
+def test_sell_persistent_matches_megakernel(graphs):
+    g = graphs["rmat10"]
+    fmt = SellFormat.from_csr(g)
+    assert fmt.supports_persistent
+    pers = engine.traverse(fmt, 17, policy=engine.ThresholdSimd(0),
+                           pipeline="persistent")
+    mega = engine.traverse(fmt, 17, policy=engine.ThresholdSimd(0),
+                           pipeline="megakernel")
+    np.testing.assert_array_equal(np.asarray(pers.state.parent),
+                                  np.asarray(mega.state.parent))
+    assert _total_launches(pers) == 1
+    assert _total_launches(mega) == len(engine.layer_stats(mega))
+    check_oracle(g, np.asarray(parents_graph500(pers.state,
+                                                g.n_vertices)), 17)
+
+
+# ---------------------------------------------------------------------------
+# Validation matrix: capability classvars, not format names
+# ---------------------------------------------------------------------------
+
+def test_persistent_rejected_on_unsupporting_formats(graphs):
+    from repro.api.spec import TraversalSpec
+    from repro.formats import build
+    g = graphs["rmat10"]
+    spec = TraversalSpec(pipeline="persistent")
+    spec.validate(build(g, "csr"))               # supported: no raise
+    spec.validate(build(g, "sell"))
+    fmt = build(g, "bitmap")
+    assert not fmt.supports_persistent
+    with pytest.raises(ValueError, match="supports_persistent"):
+        spec.validate(fmt)
+    with pytest.raises(ValueError, match="supports_persistent"):
+        engine.traverse(fmt, 17, spec=spec)
+
+
+def test_persistent_algorithm_honor(graphs):
+    """SELL's persistent kernel is SIMD-only (`persistent_algorithms`)
+    — asking for the nonsimd scalar expander must raise, not silently
+    run a different algorithm."""
+    from repro.api.spec import TraversalSpec
+    g = graphs["rmat10"]
+    fmt = SellFormat.from_csr(g)
+    assert fmt.persistent_algorithms == ("simd",)
+    spec = TraversalSpec(pipeline="persistent", algorithm="nonsimd")
+    with pytest.raises(ValueError, match="persistent_algorithms|"
+                                         "honors algorithm"):
+        spec.validate(fmt)
+    # CSR's in-kernel loop carries both scalar arms — no raise
+    spec.validate(CsrFormat.from_csr(g))
+
+
+def test_persistent_gate_is_capability_keyed(graphs):
+    """The rejection reads `supports_persistent`, NOT the format name:
+    flipping the classvar on a throwaway CSR subclass flips the
+    verdict with no name-keyed table to update."""
+    from repro.api.spec import TraversalSpec
+    g = graphs["rmat10"]
+
+    class NoPersistCsr(CsrFormat):
+        supports_persistent = False
+
+    fmt = NoPersistCsr.from_csr(g)
+    with pytest.raises(ValueError, match="supports_persistent"):
+        TraversalSpec(pipeline="persistent").validate(fmt)
+    # auto pipeline must also defensively degrade, never crash
+    resolved = TraversalSpec().resolve(fmt)
+    assert resolved.pipeline != "persistent"
