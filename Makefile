@@ -34,6 +34,7 @@ bench-quick:     ## batched + formats + layer/bytes + packed + plan-cache probes
 	$(PY) -m benchmarks.run --quick --only bfs_plan_cache
 	$(PY) -m benchmarks.run --quick --only bfs_megakernel
 	$(PY) -m benchmarks.run --quick --only bfs_persistent
+	$(PY) -m benchmarks.run --quick --only bfs_algorithms
 
 bench-formats:   ## the graph-format sweep (TEPS + bytes per layout)
 	$(PY) -m benchmarks.run --only bfs_formats

@@ -44,6 +44,12 @@ CSR_PREFETCH = (0, 1, 2)
 CSR_PIPELINES = ("fused_gather", "megakernel", "persistent")
 SELL_SIGMAS = (256, 1024, 4096)
 SELL_PIPELINES = ("fused_gather", "megakernel", "persistent")
+# crossed axis (ISSUE 10 satellite): the whole-traversal persistent
+# kernel (ISSUE 9) carries the §4 manual prefetch distance *into* the
+# in-kernel layer loop, so depth tunes differently there than under
+# the per-layer pipelines — sweep the cross explicitly and commit
+# `affinity.{fmt}.{geom}.persistent_prefetch{d}` rows per geometry
+PERSISTENT_PREFETCH = (0, 1, 2)
 
 
 def _mesh(side: int):
@@ -102,6 +108,13 @@ def _sweep_csr(g, label: str):
         teps = g.n_edges / 2 / sec
         emit(affinity.key_for("csr", geom, "pipeline", pipe),
              sec * 1e6, f"{teps:.3e}_teps", value=teps)
+    for depth in PERSISTENT_PREFETCH:
+        sec = run(spec_mod.TraversalSpec(pipeline="persistent",
+                                         prefetch_depth=depth))
+        teps = g.n_edges / 2 / sec
+        emit(affinity.key_for("csr", geom, "persistent_prefetch",
+                              depth),
+             sec * 1e6, f"{teps:.3e}_teps", value=teps)
 
 
 def _sweep_sell(g, label: str):
@@ -136,6 +149,14 @@ def _sweep_sell(g, label: str):
         sec = time_bfs(lambda c, r: ct.run(r).state, g, roots)
         teps = g.n_edges / 2 / sec
         emit(affinity.key_for("sell", geom, "pipeline", pipe),
+             sec * 1e6, f"{teps:.3e}_teps", value=teps)
+    for depth in PERSISTENT_PREFETCH:
+        ct = plan_mod.plan(fmt, spec_mod.TraversalSpec(
+            pipeline="persistent", prefetch_depth=depth))
+        sec = time_bfs(lambda c, r: ct.run(r).state, g, roots)
+        teps = g.n_edges / 2 / sec
+        emit(affinity.key_for("sell", geom, "persistent_prefetch",
+                              depth),
              sec * 1e6, f"{teps:.3e}_teps", value=teps)
 
 

@@ -1,0 +1,129 @@
+"""Semiring algorithm portfolio benchmark (ISSUE 10).
+
+One engine, a portfolio of graph algorithms: SSSP (min-plus over the
+synthetic hash weights), connected components (min-label propagation)
+and k-source BFS all run through the same relax kernels and plan
+cache as BFS.  Two row families per (algorithm, layout):
+
+* ``bfs_algorithms.{alg}.{fmt}.teps`` — TEPS-equivalent throughput
+  (edge relaxations per second, from the driver's on-device stats
+  buffer over interpret-mode wall clock);
+* ``bfs_algorithms.{alg}.{fmt}.bytes`` — analytic HBM bytes-moved for
+  the traversal (`formats.base.traversal_bytes` over the measured
+  active tiles — the frontier-proportionality evidence).
+
+`semiring_path_probe` is the zero-abstraction-tax probe: BFS run AS a
+semiring instance (``ksource_bfs``, one root) on the exact
+`bfs_layers.path_probe` geometry (path graph SCALE-10, fixed tile).
+Its analytic bytes must EQUAL the committed
+``bfs_layers.path_bytes_fused`` baseline — the generic relax schedule
+plans the same active tiles as the hard-wired BFS engine, so the
+abstraction costs zero bytes.  `benchmarks.check_bytes_regression`
+gates on it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, graph, time_bfs
+from repro.core import engine
+
+#: generous iteration ceiling: SSSP drains one delta bucket per driver
+#: iteration (more iterations than BFS diameter); while_loop exits
+#: early so the headroom is free
+MAX_LAYERS = 512
+ALGORITHMS = ("sssp", "cc", "ksource_bfs")
+FORMATS = ("csr", "sell")
+KSOURCE_ROOTS = 4
+
+
+def semiring_path_probe(quiet: bool = False) -> dict:
+    """Analytic bytes for BFS-as-a-semiring on the CI path-probe
+    geometry.  Deterministic (no timing) — safe as a CI gate."""
+    from benchmarks.bfs_layers import (PATH_SCALE, PATH_TILE,
+                                       build_path_graph)
+    from repro.api.plan import plan
+    from repro.api.spec import TraversalSpec
+    from repro.formats.base import traversal_bytes
+    from repro.formats.csr_format import CsrFormat
+
+    n = 1 << PATH_SCALE
+    fmt = CsrFormat.from_csr(build_path_graph(n))
+    t = fmt.resolve_tile(PATH_TILE)
+    ct = plan(fmt, TraversalSpec(algorithm="ksource_bfs",
+                                 policy="topdown", tile=PATH_TILE,
+                                 max_layers=n + 2))
+    res = ct.run(0)
+    stats = engine.layer_stats(res)
+    out = {
+        "layers": len(stats),
+        "tile": t,
+        "bytes_semiring": traversal_bytes(fmt, stats, tile=t,
+                                          pipeline="fused_gather"),
+        "max_layer_tiles": max(s.active_tiles for s in stats),
+    }
+    if not quiet:
+        emit("bfs_algorithms.path_bytes_semiring", 0.0,
+             f"scale={PATH_SCALE};tile={t};"
+             f"bytes={out['bytes_semiring']}",
+             value=out["bytes_semiring"])
+    return out
+
+
+def main(scale: int = 12, root_seed: int = 0):
+    from repro.api.plan import plan
+    from repro.api.spec import TraversalSpec
+    from repro.formats import registry
+    from repro.formats.base import traversal_bytes
+
+    g = graph(scale)
+    rng = np.random.default_rng(root_seed)
+    deg = np.asarray(g.degrees())
+    roots = rng.choice(np.nonzero(deg > 0)[0], size=KSOURCE_ROOTS,
+                       replace=False).astype(np.int32)
+
+    print(f"# algorithm portfolio: SCALE={scale} edgefactor=16 "
+          f"roots={roots.tolist()}")
+    print("algorithm,format,layers,relaxations,teps_equiv,bytes")
+    for fmt_name in FORMATS:
+        fmt = registry.get(fmt_name).from_graph(g)
+        for alg in ALGORITHMS:
+            ct = plan(fmt, TraversalSpec(algorithm=alg,
+                                         policy="topdown",
+                                         max_layers=MAX_LAYERS))
+            if alg == "ksource_bfs":
+                # the k-source contract: ONE traversal, k depth rows
+                sec = time_bfs(
+                    lambda c, r: ct.run_batched(roots).state, g,
+                    roots[:1])
+                res = ct.run_batched(roots)
+            else:
+                sec = time_bfs(lambda c, r: ct.run(r).state, g,
+                               roots[:2])
+                res = ct.run(int(roots[0]))
+            stats = engine.layer_stats(res)
+            relaxations = sum(s.edges_examined for s in stats)
+            teps = relaxations / sec
+            nbytes = traversal_bytes(fmt, stats,
+                                     tile=ct.resolved.tile,
+                                     pipeline="fused_gather")
+            print(f"{alg},{fmt_name},{len(stats)},{relaxations},"
+                  f"{teps:.3e},{nbytes}")
+            emit(f"bfs_algorithms.{alg}.{fmt_name}.teps", sec * 1e6,
+                 f"{teps:.3e}_relax_per_s", value=teps)
+            emit(f"bfs_algorithms.{alg}.{fmt_name}.bytes", 0.0,
+                 f"scale={scale};tile={ct.resolved.tile};"
+                 f"bytes={nbytes}", value=nbytes)
+
+    # the zero-abstraction-tax probe: BFS via the semiring machinery
+    # must plan the same bytes as the hard-wired engine (the CI gate
+    # compares against the committed bfs_layers baseline)
+    probe = semiring_path_probe()
+    print(f"# path probe: semiring BFS "
+          f"{probe['bytes_semiring'] / 2**20:.2f} MiB over "
+          f"{probe['layers']} layers, max "
+          f"{probe['max_layer_tiles']} tile(s)/layer")
+
+
+if __name__ == "__main__":
+    main()

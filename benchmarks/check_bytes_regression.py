@@ -89,6 +89,17 @@ the per-layer launch counter over the WHOLE traversal:
    order-of-magnitude wall-clock collapse (the in-kernel loop going
    quadratic) without tripping on runner-class differences.
 
+**Gate 6 — semiring zero-tax (ISSUE 10, deterministic).**  Recomputes
+the path probe with BFS running AS a semiring instance
+(`benchmarks.bfs_algorithms.semiring_path_probe`: ``ksource_bfs``,
+one root, same geometry/tile):
+
+8. the semiring traversal's analytic bytes must EQUAL the committed
+   ``bfs_layers.path_bytes_fused`` baseline — the portfolio
+   abstraction may not move one byte more than the hard-wired BFS
+   engine (equality, not a tolerance: both numbers are deterministic
+   functions of the same active-tile planner).
+
 Run BEFORE ``make bench-quick`` in CI: the bench run merge-updates
 BENCH_bfs.json, and the gate must read the committed baseline.  On
 any failure the committed baseline's ``_meta`` record (git sha,
@@ -305,6 +316,34 @@ def _persistent_gate(data) -> int:
     return 0
 
 
+def _semiring_gate(data) -> int:
+    """Gate 6 (ISSUE 10): zero abstraction tax.  BFS run AS a
+    semiring instance (ksource_bfs, one root) on the path-probe
+    geometry must plan EXACTLY the committed BFS baseline's analytic
+    bytes — the generic relax schedule may not move one byte more
+    than the hard-wired engine (equality, not a tolerance: both
+    numbers are deterministic functions of the same planner)."""
+    from benchmarks.bfs_algorithms import semiring_path_probe
+
+    if BASELINE_KEY not in data or "value" not in data[BASELINE_KEY]:
+        print(f"no {BASELINE_KEY!r} value committed — run "
+              f"`make bench-quick` and commit the update")
+        return 1
+    baseline = int(float(data[BASELINE_KEY]["value"]))
+
+    probe = semiring_path_probe(quiet=True)
+    current = int(probe["bytes_semiring"])
+    print(f"semiring-BFS analytic bytes: {current} B vs committed "
+          f"BFS baseline {baseline} B over {probe['layers']} layers")
+    if current != baseline:
+        print("FAIL: BFS-via-semiring plans different bytes than the "
+              "hard-wired BFS engine — the portfolio abstraction "
+              "grew a byte tax (or the relax schedule stopped being "
+              "frontier-proportional)")
+        return 1
+    return 0
+
+
 def _print_meta(data) -> None:
     """Surface the committed baseline's provenance on a gate failure
     (the ``_meta`` record `benchmarks.common.save_results` stamps)."""
@@ -331,6 +370,7 @@ def main() -> int:
     rc = _launch_gate(data) or rc
     rc = _drift_gate(data) or rc
     rc = _persistent_gate(data) or rc
+    rc = _semiring_gate(data) or rc
     if rc:
         _print_meta(data)
     print("OK" if rc == 0 else "GATE FAILED")

@@ -3,8 +3,9 @@
 End-to-end assertion of the obs contract on a small graph:
 
 1. `repro.bfs.trace_run` produces a Chrome trace-event JSON
-   (``obs_trace.json`` at the repo root — CI uploads it as a workflow
-   artifact) that PARSES, contains >= 1 ``bfs.traversal`` span, and
+   (``artifacts/obs_trace.json`` — CI uploads the ``artifacts/`` dir
+   as a workflow artifact; it is never committed) that PARSES,
+   contains >= 1 ``bfs.traversal`` span, and
    whose ``bfs.layer`` span count equals ``len(stats)`` — the
    per-layer timing really is attached to the LayerStats rows.
 2. A `GraphEngine` run records serve metrics: the snapshot reports
@@ -22,12 +23,16 @@ import json
 import pathlib
 import sys
 
-TRACE_JSON = pathlib.Path(__file__).resolve().parent.parent \
-    / "obs_trace.json"
+#: run outputs live under the git-ignored artifacts dir, never at the
+#: repo root (a committed trace JSON churns every CI run)
+ARTIFACTS_DIR = pathlib.Path(__file__).resolve().parent.parent \
+    / "artifacts"
+TRACE_JSON = ARTIFACTS_DIR / "obs_trace.json"
 SMOKE_SCALE = 8
 
 
 def main(out_path: str | pathlib.Path = TRACE_JSON) -> int:
+    pathlib.Path(out_path).parent.mkdir(parents=True, exist_ok=True)
     import repro.bfs as bfs
     from benchmarks import common
     from repro.obs import MetricsRegistry

@@ -24,8 +24,8 @@ def main() -> None:
                     help="run a single benchmark by name")
     args = ap.parse_args()
 
-    from benchmarks import (affinity, bfs_batched, bfs_formats,
-                            bfs_layers, bfs_megakernel,
+    from benchmarks import (affinity, bfs_algorithms, bfs_batched,
+                            bfs_formats, bfs_layers, bfs_megakernel,
                             bfs_opt_ablation, bfs_packed,
                             bfs_persistent, bfs_plan_cache,
                             bfs_scaling, cost_drift, lm_roofline)
@@ -54,6 +54,8 @@ def main() -> None:
         "bfs_megakernel": lambda: bfs_megakernel.main(
             scale=10 if args.quick else 12),
         "bfs_persistent": lambda: bfs_persistent.main(
+            scale=10 if args.quick else 12),
+        "bfs_algorithms": lambda: bfs_algorithms.main(
             scale=10 if args.quick else 12),
         "affinity": lambda: affinity.main(scale=abl_scale),
         "cost_drift": lambda: cost_drift.main(),

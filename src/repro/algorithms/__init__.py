@@ -1,0 +1,22 @@
+"""Semiring-generic traversal: one engine, a portfolio of algorithms.
+
+`semiring` holds the (⊕, ⊗) abstraction and the registered instances
+(bfs / ksource_bfs / sssp / cc); `traversal` is the whole-traversal
+driver the plan cache routes `TraversalSpec.algorithm` values in
+`SEMIRING_ALGORITHMS` through.  This ``__init__`` re-exports only the
+semiring layer — `traversal` imports the kernel stack, and the kernels
+import `semiring` back for the synthetic edge weights, so keeping the
+package root thin keeps the import graph acyclic.
+"""
+from repro.algorithms.semiring import (SEMIRING_ALGORITHMS, SEMIRINGS,
+                                       Semiring, edge_weight,
+                                       edge_weight_np, get)
+
+__all__ = [
+    "SEMIRING_ALGORITHMS",
+    "SEMIRINGS",
+    "Semiring",
+    "edge_weight",
+    "edge_weight_np",
+    "get",
+]

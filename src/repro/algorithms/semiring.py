@@ -1,0 +1,196 @@
+"""Semiring — the algebraic view of the vectorized sweep (ISSUE 10).
+
+SlimSell [Besta et al., arXiv:2010.09913] observes that the SELL/CSR
+frontier sweep is a semiring SpMV: one layer computes
+
+    vals' = vals ⊕ (A ⊗ vals)        over the (⊕, ⊗) pair,
+
+and BFS is just the (select2nd, min) instance.  Buluç–Madduri
+[arXiv:1104.4518] build their whole distributed traversal stack on the
+same algebraic view.  This module is the ONE home of the pair: a
+frozen, hashable `Semiring` record that `kernels/gather_expand.py`
+(`gather_relax*`), `kernels/sell_expand.py` (`sell_relax*`) and the
+engine's `expand_candidates` are parameterized over, plus the
+registered instances behind the `TraversalSpec.algorithm` values.
+
+Every instance here is a *tropical* (min-⊕) semiring, so the kernels
+share one deterministic primitive: a masked **scatter-min** of edge
+candidates (min is commutative + associative — unlike the BFS bitmap
+scatter there is no §3.3.2 race to restore, duplicate updates are
+benign by algebra).  ⊗ is data, not code: a candidate along edge
+(u, v) is
+
+    cand = vals[u] + unit + (w(u, v) if weighted else 0)
+
+which covers the whole portfolio (``unit``/``weighted`` per instance):
+
+==============  ======  =====  ========  ===========================
+name            dtype   unit   weighted  algorithm
+==============  ======  =====  ========  ===========================
+bfs             int32   1      no        BFS depths / min-parent tree
+ksource_bfs     int32   1      no        batched k-root BFS (the
+                                         per-source depth matrix)
+sssp            float32 0      yes       min-plus shortest paths
+cc              int32   0      no        min-label propagation
+==============  ======  =====  ========  ===========================
+
+The "improved" predicate (strict ``cand < old``) doubles as the
+frontier generator: a vertex whose value improved this layer is
+exactly a member of the next frontier — for BFS that degenerates to
+"newly discovered" (values are set once; later candidates are never
+smaller), so BFS through this path visits the same vertices in the
+same layers as the hard-wired engine.
+
+**Synthetic edge weights** (`edge_weight`): the adjacency layouts
+store no weight array, so SSSP draws Graph500-SSSP-style weights from
+a deterministic symmetric hash of the endpoints — uniform in [1, 2),
+computed on the fly inside the kernels (zero extra HBM streams, zero
+bytes-model tax) and mirrored bit-exactly in numpy for the Dijkstra
+oracle (`edge_weight_np`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+#: ⊕-identity == the "unreached" value.  int32 uses a half-range
+#: infinity so ``identity + unit`` cannot wrap; float32 uses inf.
+INT_INF = np.int32(np.iinfo(np.int32).max // 2)
+FLOAT_INF = np.float32(np.inf)
+
+#: the `TraversalSpec.algorithm` values resolved through the semiring
+#: engine (the BFS default stays on the hard-wired engine paths and is
+#: reachable here as the "bfs" instance for the parity/bytes gates)
+SEMIRING_ALGORITHMS = ("sssp", "cc", "ksource_bfs")
+
+#: SSSP delta-stepping bucket width.  Weights live in [1, 2), so
+#: delta == the minimum edge weight makes each bucket Dijkstra-like
+#: (a settled bucket never reopens a lighter one).
+SSSP_DELTA = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """One (⊕, ⊗) pair.  Frozen + hashable so kernels can take it as
+    a jit-static argument; ⊗ is carried as data (``unit``/
+    ``weighted``), ⊕ is min for every registered instance.
+
+    Fields:
+      name: registry key (== the `TraversalSpec.algorithm` value).
+      dtype: value dtype name ("int32" | "float32").
+      identity: ⊕-identity — the "unreached" value (`INT_INF`/inf).
+      annihilator: ⊗-annihilator (0 for the additive ⊗ family: a
+        zero-length self-edge changes nothing) — documented for the
+        algebra, the kernels never materialize it.
+      unit: constant added along an edge (1 = hop counting, 0 = label
+        copy / pure weight).
+      weighted: add the synthetic `edge_weight` along each edge.
+      all_vertices_frontier: seed the frontier with EVERY real vertex
+        instead of the roots (CC's init: each vertex its own label).
+    """
+
+    name: str
+    dtype: str
+    identity: float
+    annihilator: float = 0.0
+    unit: int = 0
+    weighted: bool = False
+    all_vertices_frontier: bool = False
+
+    @property
+    def jnp_dtype(self):
+        return jnp.float32 if self.dtype == "float32" else jnp.int32
+
+    def identity_value(self):
+        return jnp.asarray(self.identity, self.jnp_dtype)
+
+    # -- the (⊕, ⊗) pair on jnp values ----------------------------------
+    def add(self, a, b):
+        """⊕ — min for every registered (tropical) instance."""
+        return jnp.minimum(a, b)
+
+    def mul(self, u_val, u, v):
+        """⊗ along edge (u, v): the candidate value offered to v."""
+        if self.weighted:
+            return u_val + edge_weight(u, v)
+        if self.unit:
+            return u_val + self.jnp_dtype(self.unit)
+        return u_val
+
+    def improved(self, old, new):
+        """Strict improvement — the frontier-generation predicate AND
+        the update gate (values only ever move toward ⊕)."""
+        return new < old
+
+    # -- initial state ---------------------------------------------------
+    def init_vals(self, roots, n_vertices: int, v_pad: int):
+        """(B, V_pad) initial value rows for a (B,) root batch."""
+        ids = jnp.arange(v_pad, dtype=jnp.int32)
+        if self.all_vertices_frontier:       # CC: own id, padding = INF
+            row = jnp.where(ids < n_vertices, ids.astype(self.jnp_dtype),
+                            self.identity_value())
+            return jnp.broadcast_to(row, (roots.shape[0], v_pad))
+        return jnp.full((roots.shape[0], v_pad), self.identity_value(),
+                        self.jnp_dtype).at[
+            jnp.arange(roots.shape[0]), roots].set(self.jnp_dtype(0))
+
+
+# -- synthetic edge weights (Graph500-SSSP-style, hash-derived) ---------
+
+_MIX1 = 0x7FEB352D
+_MIX2 = 0x846CA68B
+_GOLD = 0x9E3779B1
+
+
+def _mix_u32(x, xp):
+    """32-bit avalanche (splitmix-style) in either jnp or numpy."""
+    u32 = xp.uint32
+    x = (x ^ (x >> u32(16))) * u32(_MIX1)
+    x = (x ^ (x >> u32(15))) * u32(_MIX2)
+    return x ^ (x >> u32(16))
+
+
+def _weight_impl(u, v, xp):
+    u32, f32 = xp.uint32, xp.float32
+    a = xp.minimum(u, v).astype(u32)        # symmetric: w(u,v)==w(v,u)
+    b = xp.maximum(u, v).astype(u32)
+    h = _mix_u32(a * u32(_GOLD) + b, xp)
+    # top 24 hash bits -> uniform [0, 1); weights live in [1, 2)
+    return f32(1.0) + (h >> u32(8)).astype(f32) * f32(1.0 / (1 << 24))
+
+
+def edge_weight(u, v):
+    """Deterministic symmetric weight in [1, 2) — jnp, kernel-safe."""
+    return _weight_impl(jnp.asarray(u), jnp.asarray(v), jnp)
+
+
+def edge_weight_np(u, v):
+    """The numpy mirror of `edge_weight` (bit-identical) — what the
+    serial Dijkstra oracle in tests/test_algorithms.py runs on."""
+    with np.errstate(over="ignore"):       # uint32 wraparound is spec
+        return _weight_impl(np.asarray(u), np.asarray(v), np)
+
+
+# -- registry -----------------------------------------------------------
+
+SEMIRINGS: dict[str, Semiring] = {
+    "bfs": Semiring("bfs", "int32", int(INT_INF), unit=1),
+    "ksource_bfs": Semiring("ksource_bfs", "int32", int(INT_INF),
+                            unit=1),
+    "sssp": Semiring("sssp", "float32", float(FLOAT_INF),
+                     weighted=True),
+    "cc": Semiring("cc", "int32", int(INT_INF),
+                   all_vertices_frontier=True),
+}
+
+
+def get(name: str) -> Semiring:
+    """Look up a registered semiring; KeyError lists what exists."""
+    try:
+        return SEMIRINGS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown semiring {name!r}; registered: "
+            f"{sorted(SEMIRINGS)}") from None

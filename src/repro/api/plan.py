@@ -85,10 +85,19 @@ class _Executable:
 
         def _run(fmt, roots):
             self.traces += 1          # trace-time side effect only
+            if spec.is_semiring:
+                from repro.algorithms.traversal import traverse_semiring
+                return traverse_semiring(fmt, roots, spec)
             return _engine._traverse_impl(fmt, roots, spec)
 
         def _layer(fmt, frontier, visited, parent):
             self.layer_traces += 1
+            if spec.is_semiring:
+                raise NotImplementedError(
+                    f"semiring algorithm {spec.algorithm!r} has no "
+                    f"single-layer tick: the portfolio driver owns "
+                    f"the value/frontier carry — use run()/"
+                    f"run_batched() for whole traversals")
             steps = fmt.make_steps(spec)
             mode = (_engine.MODE_SIMD if spec.algorithm == "simd"
                     else _engine.MODE_SCALAR)
@@ -166,7 +175,8 @@ class CompiledTraversal:
             return _engine.EngineResult(
                 _engine.BfsState(st.frontier[0], st.visited[0],
                                  st.parent[0], st.layer),
-                res.depths[0], res.stats)
+                res.depths[0], res.stats,
+                None if res.values is None else res.values[0])
         return res
 
     def run_batched(self, roots) -> _engine.EngineResult:
@@ -200,7 +210,8 @@ class CompiledTraversal:
             return _engine.EngineResult(
                 _engine.BfsState(st.frontier[:n], st.visited[:n],
                                  st.parent[:n], st.layer),
-                res.depths[:n], res.stats)
+                res.depths[:n], res.stats,
+                None if res.values is None else res.values[:n])
         return self.executable.run_jit(self.fmt, roots)
 
     def layer_step(self, state, visited=None, parent=None):

@@ -186,6 +186,10 @@ class EngineResult(NamedTuple):
     state: BfsState          # final state; batched arrays iff multi-root
     depths: jax.Array        # (B,) int32: layers each root stayed active
     stats: jax.Array         # (max_layers, _N_ST) int32 device buffer
+    values: jax.Array | None = None  # semiring value matrix (B, V_pad)
+    #                          — distances/labels/depth rows for the
+    #                          algorithm portfolio (ISSUE 10); None on
+    #                          the hard-wired BFS paths
 
 
 # ---------------------------------------------------------------------------
@@ -573,15 +577,42 @@ def _resolve_tile_csr(tile: int | None, e_pad: int, fmt=None) -> int:
 # ---------------------------------------------------------------------------
 
 def expand_candidates(u, v, valid, frontier, visited, parent,
-                      n_vertices: int, algorithm: str):
+                      n_vertices: int, algorithm: str, semiring=None,
+                      vals=None):
     """The post-gather Algorithm 2/3 body on any layout's edge stream.
 
     The single home of the test-mask-scatter(-restore) sequence:
     ``(u, v, valid)`` is a gathered candidate stream — CSR's
     apportioned `edge_stream`, SELL's flattened slab sweep — and the
     body is layout-independent.  Returns (out, visited, parent).
+
+    Passing a `repro.algorithms.semiring.Semiring` (with its ``vals``
+    row) switches the body to the generic relaxation — the pure-jnp
+    reference of the scatter-min kernels: fold each frontier edge's
+    ``vals[u] ⊗ w`` candidate with ⊕ (= min, commutative: no race, no
+    restoration), then resolve min-id parents against the finalized
+    values.  Returns ``(improved_words, new_vals, parent)`` — the
+    frontier-generation triple of `algorithms.traversal`.  With
+    ``semiring=None`` (the BFS default) the bit test-and-set paths
+    below run byte-identically to every release since ISSUE 1.
     """
     v_pad = parent.shape[0]
+    if semiring is not None:
+        in_front = bm.test_bits(frontier, u)
+        mask = valid & in_front & (v < n_vertices)
+        u_val = vals[jnp.clip(u, 0, v_pad - 1)]
+        cand = semiring.mul(u_val, u, v)
+        idx = jnp.where(mask, v, v_pad)
+        new_vals = vals.at[idx].min(cand, mode="drop")
+        cur = new_vals[jnp.clip(v, 0, v_pad - 1)]
+        win = mask & (cand == cur) \
+            & semiring.improved(vals[jnp.clip(v, 0, v_pad - 1)], cur)
+        p_layer = jnp.full((v_pad,), jnp.iinfo(jnp.int32).max,
+                           jnp.int32).at[jnp.where(win, v, v_pad)] \
+            .min(u, mode="drop")
+        improved = semiring.improved(vals, new_vals)
+        parent = jnp.where(improved, p_layer, parent)
+        return bm.pack_bool(improved), new_vals, parent
     if algorithm == "nonsimd":         # Algorithm 2: exact dense updates
         vis_dense = bm.unpack_bool(visited)
         mask = valid & ~vis_dense[jnp.clip(v, 0, v_pad - 1)]

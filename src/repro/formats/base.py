@@ -126,6 +126,15 @@ class GraphFormat(abc.ABC):
     #: rejects the rest
     persistent_algorithms: ClassVar[tuple] = ()
 
+    #: semiring `TraversalSpec.algorithm` values this layout can run
+    #: (ISSUE 10: "sssp" / "cc" / "ksource_bfs").  Opt-in via
+    #: `_build_semiring_step`: the layout must offer a per-layer
+    #: relaxation step (the scatter-min kernels) — the bitmap word
+    #: sweep stores no per-edge stream to relax over and keeps the
+    #: empty default, which `spec.validate(fmt)` turns into a typed
+    #: rejection instead of a silent wrong answer
+    supported_semirings: ClassVar[tuple] = ()
+
     # -- construction ----------------------------------------------------
     @classmethod
     @abc.abstractmethod
@@ -239,6 +248,30 @@ class GraphFormat(abc.ABC):
     def _build_steps(self, spec) -> dict:
         """Format-owned step construction from a resolved, validated
         `TraversalSpec` (see `make_steps` for the contract)."""
+
+    def make_semiring_step(self, spec, semiring):
+        """One batched per-layer semiring relaxation step (ISSUE 10).
+
+        ``spec`` must be resolved with ``spec.algorithm`` in this
+        format's ``supported_semirings`` (`spec.validate(fmt)` is the
+        one rejection home, as for `make_steps`); ``semiring`` is the
+        registered `algorithms.semiring.Semiring` instance.  Returns
+        ``fn(frontier, vals, dense) -> (new_vals, p_layer, StepAux)``
+        where ``frontier`` is (B, W) packed words, ``vals`` the
+        (B, V_pad) value rows, ``dense`` a (B,) bool selecting the
+        full-work-list sweep (the CC endgame's dense arm), and
+        ``p_layer`` the per-layer min-id parent scatter the driver
+        merges under the improved mask.
+        """
+        spec.validate(self)
+        return self._build_semiring_step(spec, semiring)
+
+    def _build_semiring_step(self, spec, semiring):
+        """Format-owned semiring step construction; formats that list
+        nothing in ``supported_semirings`` never reach here (validate
+        rejects first), so the default is a hard error."""
+        raise NotImplementedError(
+            f"{type(self).__name__} declares no supported_semirings")
 
     def resolve_tile(self, tile: int | None) -> int:
         """The format owns tile selection (§4.2: the layout fixes the

@@ -39,6 +39,10 @@ from repro.formats.registry import register
 class BitmapCompressedFormat(GraphFormat):
     name = "bitmap"
     supports_prefetch = False    # dense word sweep: no edge stream
+    # the word sweep stores bits, not neighbor ids — there is no
+    # per-edge candidate stream to relax a semiring over, so the
+    # algorithm portfolio (ISSUE 10) is rejected by `spec.validate`
+    supported_semirings = ()
 
     def __init__(self, adj, deg, n_vertices: int, n_edges: int):
         self.adj = adj              # (V_pad, W) uint32 adjacency rows

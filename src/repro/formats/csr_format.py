@@ -35,6 +35,11 @@ class CsrFormat(GraphFormat):
     # is tile-partition-determined either way)
     supports_persistent = True
     persistent_algorithms = ("simd", "nonsimd")
+    # the semiring portfolio (ISSUE 10) rides the fused gather's
+    # active-tile schedule with the scatter-min relax kernel
+    # (kernels/gather_expand.py `gather_relax_batched`); see
+    # GraphFormat.supported_semirings
+    supported_semirings = ("sssp", "cc", "ksource_bfs")
 
     def __init__(self, colstarts, rows, n_vertices: int, n_edges: int):
         self.colstarts = colstarts
@@ -100,6 +105,39 @@ class CsrFormat(GraphFormat):
                                   self.n_edges_padded, spec.algorithm,
                                   spec.tile, spec.pipeline, spec.packed,
                                   spec.prefetch_depth)
+
+    def _build_semiring_step(self, spec, semiring):
+        import jax.numpy as jnp
+
+        from repro.core import engine
+        from repro.kernels import ops
+        tile = spec.tile
+        rows_t = engine._pad_rows_to_tile(self.rows, self._n_vertices,
+                                          tile)
+        n_blocks = rows_t.shape[0] // tile
+        v = self._n_vertices
+        full_wl = jnp.arange(n_blocks, dtype=jnp.int32)
+
+        def step(frontier, vals, dense):
+            with ops.count_launches() as c:
+                wl, na = engine.plan_active_tiles_batched(
+                    self.colstarts, frontier, v, tile, n_blocks,
+                    packed=spec.packed)
+                # dense arm (CC endgame): skip the compacted schedule,
+                # sweep every block — the planner still ran (its cost
+                # is charged), but a near-full frontier makes the full
+                # work-list the cheaper schedule
+                wl = jnp.where(dense[:, None], full_wl[None], wl)
+                na = jnp.where(dense, jnp.int32(n_blocks), na)
+                new_vals, p_layer = ops.gather_relax_batched(
+                    wl, na, rows_t, self.colstarts, frontier, vals,
+                    n_vertices=v, tile=tile, unit=semiring.unit,
+                    weighted=semiring.weighted)
+            aux = engine.StepAux(na.sum(dtype=jnp.int32),
+                                 jnp.int32(0), c.count)
+            return new_vals, p_layer, aux
+
+        return step
 
     def persistent_fits(self, n_roots: int, spec) -> bool:
         from repro.core import bitmap as bm

@@ -68,6 +68,11 @@ class SellFormat(GraphFormat):
     # rejects the combination
     supports_persistent = True
     persistent_algorithms = ("simd",)
+    # the semiring portfolio (ISSUE 10) is the SlimSell SpMV reading
+    # taken literally: the slab sweep over the (min, ⊗) pair
+    # (kernels/sell_expand.py `sell_relax_batched`); see
+    # GraphFormat.supported_semirings
+    supported_semirings = ("sssp", "cc", "ksource_bfs")
 
     DEFAULT_SIGMA = 8 * SLICE_C   # SlimSell's typical local-sort window
 
@@ -257,6 +262,32 @@ class SellFormat(GraphFormat):
                 [active, jnp.zeros((pad,), bool)])
         act_step = active.reshape(n_steps, slabs_per_step).any(axis=1)
         return compact_worklist(act_step, n_steps)
+
+    def _build_semiring_step(self, spec, semiring):
+        from repro.core import engine
+        tile = spec.tile                       # slabs per step
+        n_steps = -(-self.n_slabs // tile)
+        v = self._n_vertices
+        full_wl = jnp.arange(n_steps, dtype=jnp.int32)
+
+        def step(frontier, vals, dense):
+            with ops.count_launches() as c:
+                wl, na = jax.vmap(
+                    lambda a: self._plan_slab_steps(a, tile, n_steps)
+                )(frontier)
+                # dense arm (CC endgame): a near-full frontier sweeps
+                # the full slab work-list instead of the compaction
+                wl = jnp.where(dense[:, None], full_wl[None], wl)
+                na = jnp.where(dense, jnp.int32(n_steps), na)
+                new_vals, p_layer = ops.sell_relax_batched(
+                    self.cols, self.slab_rows, wl, na, frontier, vals,
+                    n_vertices=v, slabs_per_step=tile,
+                    unit=semiring.unit, weighted=semiring.weighted)
+            aux = engine.StepAux(na.sum(dtype=jnp.int32),
+                                 jnp.int32(0), c.count)
+            return new_vals, p_layer, aux
+
+        return step
 
     def _build_steps(self, spec) -> dict:
         # SELL's planning is word-native already (a packed-bitmap

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.bitmap import WORD_MASK, WORD_SHIFT
 from repro.kernels.frontier_expand import _expand_tile
 from repro.kernels.pallas_compat import CompilerParams
 
@@ -333,6 +334,175 @@ def gather_expand(worklist, n_active, rows, colstarts, frontier,
     )(worklist, n_active, rows, colstarts, frontier, visited, out_init,
       p_init)
     return out, parent
+
+
+# ---------------------------------------------------------------------------
+# Semiring relaxation (ISSUE 10): the same fused in-kernel gather, but
+# the per-edge update is the (min, ⊗) pair of `algorithms/semiring.py`
+# instead of the BFS bit test-and-set.  Two structural differences from
+# the bitmap kernels above:
+#
+# * the scatter is a masked **scatter-min of values** — min is
+#   commutative and associative, so the §3.3.2 word-collision race of
+#   the BFS scatter does not exist here and no restoration pass is
+#   needed.  Duplicate relaxations of the same target are benign by
+#   algebra.
+# * parents are resolved by a **second phase over the same tiles**
+#   (grid (B, 2, tiles), phase-major sequential): phase 0 folds every
+#   candidate into ``out_vals``; phase 1 re-walks the tiles and takes
+#   the minimum source id among edges whose candidate EQUALS the
+#   now-final value of an improved target.  The candidate is recomputed
+#   from identical inputs with identical ops, so the float equality is
+#   bitwise-exact, and "min u among optimal edges" makes the parent
+#   tree deterministic without any restoration machinery.
+#
+# ⊗ arrives as data (``unit`` hop cost + optional synthetic
+# ``edge_weight``), which is what lets one kernel serve sssp / cc /
+# k-source BFS — see the Semiring table in algorithms/semiring.py.
+# ---------------------------------------------------------------------------
+
+#: parent-resolve scatter-min sentinel: larger than any vertex id
+P_UNSET = jnp.iinfo(jnp.int32).max
+
+
+def _relax_edges(n_vertices: int, tile: int, n_cs: int, unit: int,
+                 weighted: bool, blk, rows_blk, colstarts, frontier,
+                 vals):
+    """Shared per-tile edge enumeration: gather owners, gate on the
+    frontier, and form each edge's semiring candidate ``vals[u] ⊗ w``.
+    Returns (u, v, mask, cand) for the phase-specific scatter."""
+    from repro.algorithms.semiring import edge_weight
+
+    e_idx = blk * tile + jnp.arange(tile, dtype=jnp.int32)
+    u = _owner_search(colstarts, e_idx, n_cs)
+    v = rows_blk
+    valid = (u < n_vertices) & (v < n_vertices)
+    uw = jnp.clip(u >> WORD_SHIFT, 0, frontier.shape[0] - 1)
+    ub = (u & WORD_MASK).astype(jnp.uint32)
+    in_front = ((frontier[uw] >> ub) & jnp.uint32(1)) != 0
+    mask = valid & in_front
+    u_val = vals[jnp.clip(u, 0, vals.shape[0] - 1)]
+    if weighted:
+        cand = u_val + edge_weight(u, v)
+    elif unit:
+        cand = u_val + jnp.asarray(unit, vals.dtype)
+    else:
+        cand = u_val
+    return u, v, mask, cand
+
+
+def _relax_scatter_vals(v_slots: int, u, v, mask, cand, out_vals):
+    """Phase 0: fold candidates into the value row (masked scatter-min;
+    out-of-mask lanes are dropped on the OOB sentinel index)."""
+    idx = jnp.where(mask, v, v_slots)
+    return out_vals.at[idx].min(cand, mode="drop")
+
+
+def _relax_scatter_parents(v_slots: int, u, v, mask, cand, vals,
+                           out_vals, p):
+    """Phase 1: deterministic parent resolve against the finalized
+    values — min source id among edges achieving the optimum, gated on
+    strict improvement over the layer-start value."""
+    v_clip = jnp.clip(v, 0, v_slots - 1)
+    cur = out_vals[v_clip]
+    win = mask & (cand == cur) & (cur < vals[v_clip])
+    idx = jnp.where(win, v, v_slots)
+    return p.at[idx].min(u, mode="drop")
+
+
+def _relax_batched_kernel(n_vertices: int, tile: int, n_cs: int,
+                          unit: int, weighted: bool, wl_ref, na_ref,
+                          rows_ref, cs_ref, frontier_ref, vals_ref,
+                          out_ref, p_ref):
+    b = pl.program_id(0)
+    ph = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when((ph == 0) & (t == 0))
+    def _init():  # value row starts at the layer-start values
+        out_ref[...] = vals_ref[...]
+        p_ref[...] = jnp.full(p_ref.shape, P_UNSET, jnp.int32)
+
+    @pl.when(t < na_ref[b])
+    def _work():
+        u, v, mask, cand = _relax_edges(
+            n_vertices, tile, n_cs, unit, weighted, wl_ref[b, t],
+            rows_ref[...], cs_ref[...], frontier_ref[0], vals_ref[0])
+        v_slots = p_ref.shape[1]
+
+        @pl.when(ph == 0)
+        def _vals():
+            out_ref[...] = _relax_scatter_vals(
+                v_slots, u, v, mask, cand, out_ref[0])[None]
+
+        @pl.when(ph == 1)
+        def _parents():
+            p_ref[...] = _relax_scatter_parents(
+                v_slots, u, v, mask, cand, vals_ref[0], out_ref[0],
+                p_ref[0])[None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices", "tile",
+                                             "unit", "weighted",
+                                             "interpret"))
+def gather_relax_batched(worklist, n_active, rows, colstarts, frontier,
+                         vals, *, n_vertices: int,
+                         tile: int = DEFAULT_TILE, unit: int = 0,
+                         weighted: bool = False,
+                         interpret: bool = True):
+    """Multi-root semiring relaxation over the active rows-blocks of
+    one layer (the (min, ⊗) generalization of `gather_expand_batched`).
+
+    Args:
+      worklist, n_active: (B, n_blocks) / (B,) — the same scalar-
+        prefetched active-tile schedule as the BFS kernel (entries past
+        ``n_active`` clamped, their DMA elided, compute skipped).
+      rows, colstarts: the shared CSR adjacency (no root axis).
+      frontier: (B, W) uint32 packed frontier bitmaps.
+      vals: (B, V_pad) layer-start value rows (int32 or float32).
+      unit, weighted: the ⊗ data — candidate along (u, v) is
+        ``vals[u] + unit (+ edge_weight(u, v) if weighted)``.
+    Returns:
+      (out_vals, p_layer): the folded value rows and the per-layer
+      parent scatter (``P_UNSET`` where no edge won; the driver merges
+      it into the persistent parent array under the improved mask).
+      No restoration pass exists or is needed — scatter-min commutes.
+    """
+    n_slots = rows.shape[0]
+    assert n_slots % tile == 0, "pad rows to the tile size at build"
+    n_blocks = n_slots // tile
+    n_batch = worklist.shape[0]
+    assert worklist.shape == (n_batch, n_blocks)
+    n_cs = colstarts.shape[0]
+    n_words = frontier.shape[1]
+    v_pad = vals.shape[1]
+
+    flat = lambda n: pl.BlockSpec((n,), lambda b, ph, t, wl, na: (0,))
+    whole = lambda n: pl.BlockSpec((1, n),
+                                   lambda b, ph, t, wl, na: (b, 0))
+    rows_spec = pl.BlockSpec((tile,),
+                             lambda b, ph, t, wl, na: (wl[b, t],))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        # phase-major sequential: every phase-0 tile of a root lands
+        # before its phase-1 tiles, so phase 1 reads finalized values
+        grid=(n_batch, 2, n_blocks),
+        in_specs=[rows_spec, flat(n_cs), whole(n_words), whole(v_pad)],
+        out_specs=[whole(v_pad), whole(v_pad)],
+    )
+    out_vals, p_layer = pl.pallas_call(
+        functools.partial(_relax_batched_kernel, n_vertices, tile,
+                          n_cs, unit, weighted),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_batch, v_pad), vals.dtype),
+                   jax.ShapeDtypeStruct((n_batch, v_pad), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary",
+                                 "arbitrary")),
+        interpret=interpret,
+        name="bfs_gather_relax_batched",
+    )(worklist, n_active, rows, colstarts, frontier, vals)
+    return out_vals, p_layer
 
 
 @functools.partial(jax.jit, static_argnames=("n_vertices", "tile",

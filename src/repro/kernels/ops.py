@@ -214,6 +214,34 @@ def gather_expand_batched(worklist, n_active, rows, colstarts, frontier,
         prefetch_depth=prefetch_depth, interpret=interpret)
 
 
+@_scoped("bfs.gather_relax_batched")
+def gather_relax_batched(worklist, n_active, rows, colstarts, frontier,
+                         vals, *, n_vertices: int,
+                         tile: int = ge.DEFAULT_TILE, unit: int = 0,
+                         weighted: bool = False,
+                         interpret: bool | None = None):
+    """Batched semiring relaxation over the active CSR tiles
+    (kernels/gather_expand.py `gather_relax_batched`): scatter-min of
+    ``vals[u] ⊗ w`` candidates plus the phase-2 deterministic parent
+    resolve.  Per-root VMEM working set: frontier words + 2 value rows
+    + the parent row + colstarts + the double-buffered rows tiles."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n_words, v_pad = frontier.shape[1], vals.shape[1]
+    budget = 4 * (n_words + 3 * v_pad + colstarts.shape[0]) \
+        + 2 * 4 * tile
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"gather_relax working set {budget/2**20:.1f} MiB exceeds "
+            f"VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py) or reduce the tile")
+    _charge_launch()
+    return ge.gather_relax_batched(
+        worklist.astype(jnp.int32), n_active.astype(jnp.int32), rows,
+        colstarts, frontier, vals, n_vertices=n_vertices, tile=tile,
+        unit=unit, weighted=weighted, interpret=interpret)
+
+
 def _pad_slabs(cols, slab_rows, n_vertices: int, step: int):
     """Pad the slab axis to a multiple of ``step`` with sentinel slabs
     (all-V neighbor ids and row ids mask out entirely in-kernel)."""
@@ -311,6 +339,34 @@ def sell_batched(cols, slab_rows, frontier, visited, out_init, p_init,
         n_vertices=n_vertices, slabs_per_step=slabs_per_step,
         bottom_up=bottom_up, prefetch_depth=prefetch_depth,
         interpret=interpret)
+
+
+@_scoped("bfs.sell_relax_batched")
+def sell_relax_batched(cols, slab_rows, worklist, n_active, frontier,
+                       vals, *, n_vertices: int, slabs_per_step: int = 1,
+                       unit: int = 0, weighted: bool = False,
+                       interpret: bool | None = None):
+    """Batched semiring SpMV sweep over the active SELL slab groups
+    (kernels/sell_expand.py `sell_relax_batched`).  Pads the slab axis
+    itself; the per-root work-list contract matches `sell_batched`."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n_words, v_pad = frontier.shape[1], vals.shape[1]
+    slab = slabs_per_step * (se.W_QUANT + 1) * se.SLICE_C * 4
+    budget = 4 * (n_words + 3 * v_pad) + 2 * slab
+    if budget > VMEM_BYTES * _VMEM_HEADROOM:
+        raise ValueError(
+            f"sell_relax working set {budget/2**20:.1f} MiB exceeds "
+            f"VMEM budget; shard the vertex range across chips "
+            f"(core/bfs_distributed.py) or reduce slabs_per_step")
+    cols, slab_rows = _pad_slabs(cols, slab_rows, n_vertices,
+                                 slabs_per_step)
+    _charge_launch()
+    return se.sell_relax_batched(
+        cols, slab_rows, worklist.astype(jnp.int32),
+        n_active.astype(jnp.int32), frontier, vals,
+        n_vertices=n_vertices, slabs_per_step=slabs_per_step, unit=unit,
+        weighted=weighted, interpret=interpret)
 
 
 @_scoped("bfs.restore")

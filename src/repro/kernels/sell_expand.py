@@ -56,7 +56,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bitmap import WORD_MASK, WORD_SHIFT
-from repro.kernels.gather_expand import _dma_pipeline
+from repro.kernels.gather_expand import (P_UNSET, _dma_pipeline,
+                                         _relax_scatter_parents,
+                                         _relax_scatter_vals)
 from repro.kernels.layer_fused import _restore_in_kernel
 from repro.kernels.pallas_compat import CompilerParams
 
@@ -655,3 +657,122 @@ def sell_layer_fused_batched(cols, slab_rows, frontier, visited,
         name="bfs_sell_layer_fused_batched",
     )(cols, slab_rows, frontier, visited, p_init)
     return out, parent, n_active
+
+
+# ---------------------------------------------------------------------------
+# Semiring relaxation over SELL slabs (ISSUE 10): the SpMV reading of
+# SlimSell taken literally — the slab sweep IS a semiring
+# matrix-vector product, and this kernel runs it over the (min, ⊗)
+# pair of `algorithms/semiring.py` instead of the BFS bit test-and-set.
+# Same two-phase shape as `gather_expand.gather_relax_batched`: grid
+# (B, 2, steps), phase 0 folds candidates into the value row with a
+# masked scatter-min (commutative — no §3.3.2 race, no restoration),
+# phase 1 re-walks the same slabs and resolves the deterministic
+# min-id parent among edges achieving the finalized optimum.
+# ---------------------------------------------------------------------------
+
+
+def _sell_relax_edges(n_vertices: int, unit: int, weighted: bool, cols,
+                      rows, frontier, vals):
+    """Per-slab edge enumeration for the semiring sweep: (src, nbr,
+    mask, cand) with ``cand = vals[src] ⊗ w(src, nbr)``."""
+    from repro.algorithms.semiring import edge_weight
+
+    nbr = cols
+    src = jnp.broadcast_to(rows[:, None, :], cols.shape)
+    valid = (src < n_vertices) & (nbr < n_vertices)
+    sw = jnp.clip(src >> WORD_SHIFT, 0, frontier.shape[0] - 1)
+    sb = (src & WORD_MASK).astype(jnp.uint32)
+    in_front = ((frontier[sw] >> sb) & jnp.uint32(1)) != 0
+    mask = valid & in_front
+    u_val = vals[jnp.clip(src, 0, vals.shape[0] - 1)]
+    if weighted:
+        cand = u_val + edge_weight(src, nbr)
+    elif unit:
+        cand = u_val + jnp.asarray(unit, vals.dtype)
+    else:
+        cand = u_val
+    return src, nbr, mask, cand
+
+
+def _sell_relax_batched_kernel(n_vertices: int, unit: int,
+                               weighted: bool, wl_ref, na_ref, cols_ref,
+                               rows_ref, frontier_ref, vals_ref,
+                               out_ref, p_ref):
+    b = pl.program_id(0)
+    ph = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when((ph == 0) & (t == 0))
+    def _init():
+        out_ref[...] = vals_ref[...]
+        p_ref[...] = jnp.full(p_ref.shape, P_UNSET, jnp.int32)
+
+    @pl.when(t < na_ref[b])
+    def _work():
+        src, nbr, mask, cand = _sell_relax_edges(
+            n_vertices, unit, weighted, cols_ref[...], rows_ref[...],
+            frontier_ref[0], vals_ref[0])
+        v_slots = p_ref.shape[1]
+
+        @pl.when(ph == 0)
+        def _vals():
+            out_ref[...] = _relax_scatter_vals(
+                v_slots, src, nbr, mask, cand, out_ref[0])[None]
+
+        @pl.when(ph == 1)
+        def _parents():
+            p_ref[...] = _relax_scatter_parents(
+                v_slots, src, nbr, mask, cand, vals_ref[0], out_ref[0],
+                p_ref[0])[None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices",
+                                             "slabs_per_step", "unit",
+                                             "weighted", "interpret"))
+def sell_relax_batched(cols, slab_rows, worklist, n_active, frontier,
+                       vals, *, n_vertices: int, slabs_per_step: int = 1,
+                       unit: int = 0, weighted: bool = False,
+                       interpret: bool = True):
+    """Multi-root semiring SpMV sweep over the active slab groups.
+
+    Same schedule contract as `sell_expand_batched` (per-root scalar-
+    prefetched work-lists, clamped tails); same return contract as
+    `gather_expand.gather_relax_batched`: ``(out_vals, p_layer)`` with
+    ``p_layer == P_UNSET`` where no edge won — the driver merges under
+    the improved mask.  No restoration (scatter-min commutes).
+    """
+    n_slabs = cols.shape[0]
+    assert n_slabs % slabs_per_step == 0, \
+        "pad the slab count to the step size"
+    n_steps = n_slabs // slabs_per_step
+    n_batch, n_words = frontier.shape
+    assert worklist.shape == (n_batch, n_steps)
+    v_pad = vals.shape[1]
+
+    whole = lambda n: pl.BlockSpec((1, n),
+                                   lambda b, ph, t, wl, na: (b, 0))
+    cols_spec = pl.BlockSpec((slabs_per_step, W_QUANT, SLICE_C),
+                             lambda b, ph, t, wl, na: (wl[b, t], 0, 0))
+    rows_spec = pl.BlockSpec((slabs_per_step, SLICE_C),
+                             lambda b, ph, t, wl, na: (wl[b, t], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        # phase-major sequential: phase 1 reads finalized values
+        grid=(n_batch, 2, n_steps),
+        in_specs=[cols_spec, rows_spec, whole(n_words), whole(v_pad)],
+        out_specs=[whole(v_pad), whole(v_pad)],
+    )
+    out_vals, p_layer = pl.pallas_call(
+        functools.partial(_sell_relax_batched_kernel, n_vertices, unit,
+                          weighted),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_batch, v_pad), vals.dtype),
+                   jax.ShapeDtypeStruct((n_batch, v_pad), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary",
+                                 "arbitrary")),
+        interpret=interpret,
+        name="bfs_sell_relax_batched",
+    )(worklist, n_active, cols, slab_rows, frontier, vals)
+    return out_vals, p_layer

@@ -53,6 +53,12 @@ STEP_SPAN = "bfs.layer_step"
 #: records ONE span of this name and recovers per-layer counters from
 #: the kernel's on-device stats buffer instead of host recomputation
 PERSISTENT_SPAN = "bfs.traversal.persistent"
+#: the semiring portfolio (ISSUE 10: sssp/cc/ksource_bfs) runs the
+#: whole traversal through the portfolio driver's fused while_loop —
+#: like the persistent pipeline there is no host layer boundary, so
+#: trace_run records ONE span of this name and recovers per-layer
+#: counters from the driver's on-device stats buffer
+SEMIRING_SPAN = "bfs.traversal.semiring"
 
 
 @dataclass
@@ -222,6 +228,37 @@ def trace_run(graph, roots, *, spec=None, tracer: SpanTracer | None = None,
     single = jnp.ndim(roots) == 0
     roots_b = jnp.atleast_1d(jnp.asarray(roots, jnp.int32))
     n_roots = int(roots_b.shape[0])
+
+    if rspec.is_semiring:
+        # ONE run, ONE span: the portfolio driver owns the
+        # value/frontier carry inside a fused while_loop, so (like
+        # the persistent pipeline) there is no per-layer host
+        # boundary; Table 1-equivalent counters come back from the
+        # driver's stats buffer and the per-layer seconds are the
+        # span amortized over the recovered layers.
+        with xla_profiler(profile_logdir), \
+             tracer.span(SEMIRING_SPAN, n_roots=n_roots,
+                         format=type(fmt).__name__,
+                         pipeline=rspec.pipeline,
+                         algorithm=rspec.algorithm,
+                         n_vertices=n_vertices) as top:
+            res = ct.run_batched(roots_b)
+            tracer.device_sync(res.state.frontier, res.state.parent,
+                               res.values, res.stats)
+            stats = _engine.layer_stats(res)
+            top.args["n_layers"] = len(stats)
+            top.args["launches"] = sum(s.launches for s in stats)
+            top.args["relaxations"] = sum(s.edges_examined
+                                          for s in stats)
+        per_layer_s = (top.dur_us / 1e6) / max(len(stats), 1)
+        layer_seconds = [per_layer_s] * len(stats)
+        state, depths_j = res.state, res.depths
+        if single:
+            state = _engine.BfsState(state.frontier[0],
+                                     state.visited[0],
+                                     state.parent[0], state.layer)
+            depths_j = depths_j[0]
+        return TraceRun(state, depths_j, stats, layer_seconds, tracer)
 
     if rspec.pipeline == "persistent":
         # ONE launch, ONE span: the layer loop runs inside the kernel

@@ -195,6 +195,18 @@ class GraphEngine:
             # autotune measurement and keeps .resolved honest about
             # the direction machinery not running here
             spec = spec.replace(policy="topdown")
+        if spec.is_semiring:
+            # the tick contract is one BFS layer per slot; the
+            # portfolio driver owns its own value/frontier carry and
+            # has no single-layer tick — route those queries through
+            # the dedicated methods instead of the resident spec
+            raise ValueError(
+                f"GraphEngine's tick spec cannot use the semiring "
+                f"algorithm {spec.algorithm!r}: the slot machinery "
+                f"advances one BFS layer per tick — use "
+                f"shortest_paths()/components()/ksource_depths() "
+                f"(run-direct portfolio queries), and keep spec."
+                f"algorithm a scalar value or 'auto'")
         self.compiled = _plan(self.fmt, spec)
         b = batch_slots
         self.n_vertices = self.fmt.n_vertices
@@ -266,6 +278,12 @@ class GraphEngine:
         self._m_circuit = self.metrics.gauge(
             "serve.circuit_state",
             "admission circuit: 0=healthy 1=degraded 2=shedding")
+        # algorithm-portfolio counters (ISSUE 10)
+        self._m_portfolio = self.metrics.counter(
+            "serve.portfolio_queries",
+            "semiring portfolio queries (shortest_paths/components/"
+            "ksource_depths) answered run-direct")
+        self._semiring_plans: dict[str, object] = {}
 
     # -- resolved-spec views (legacy attribute compatibility) -----------
     @property
@@ -494,6 +512,64 @@ class GraphEngine:
         definition one layer, so ``"persistent"`` ticks run the
         whole-layer megakernel steps instead."""
         return self.compiled.run(roots)
+
+    # -- algorithm portfolio queries (ISSUE 10) -------------------------
+    def _semiring_plan(self, algorithm: str):
+        """One lazily-built portfolio plan per algorithm, cached on
+        the engine; the executable itself is shared process-wide
+        through the plan cache (keyed by geometry + resolved spec),
+        so many engines over one graph trace each algorithm once."""
+        ct = self._semiring_plans.get(algorithm)
+        if ct is None:
+            from repro.api.plan import plan as _plan
+            from repro.api.spec import TraversalSpec
+            # a deep bucket/propagation chain (SSSP on a path graph
+            # walks one delta bucket per iteration) needs more
+            # iterations than a BFS diameter bound; the while_loop
+            # exits early, so the generous ceiling costs nothing
+            spec = TraversalSpec(
+                algorithm=algorithm, policy="topdown",
+                max_layers=max(512, self.max_layers))
+            ct = self._semiring_plans[algorithm] = _plan(self.fmt,
+                                                         spec)
+        return ct
+
+    def shortest_paths(self, roots):
+        """Single-source shortest paths (min-plus semiring, the
+        synthetic symmetric-hash edge weights in [1, 2)) from one
+        root (int) or a root batch.  Returns ``(distances, parent)``
+        host arrays over the real vertices: ``distances`` float32
+        with ``inf`` for unreached vertices, ``parent`` int32 with
+        ``-1`` for unreached (the root is its own parent)."""
+        ct = self._semiring_plan("sssp")
+        res = ct.run(roots)
+        self._m_portfolio.inc()
+        dist = np.asarray(res.values)[..., :self.n_vertices]
+        p = np.asarray(res.state.parent)[..., :self.n_vertices]
+        return dist, np.where(np.isfinite(dist), p, -1)
+
+    def components(self):
+        """Connected-component labels (min-label propagation run to
+        fixpoint).  Returns ``(labels, n_components)``: ``labels`` is
+        an int32 host array mapping every real vertex to the smallest
+        vertex id in its component."""
+        ct = self._semiring_plan("cc")
+        res = ct.run(0)       # root is irrelevant: every vertex seeds
+        self._m_portfolio.inc()
+        labels = np.asarray(res.values)[:self.n_vertices]
+        return labels, int(np.unique(labels).size)
+
+    def ksource_depths(self, roots):
+        """Batched k-source BFS: one traversal, one depth row per
+        root.  Returns the (k, n_vertices) int32 per-source depth
+        matrix with ``-1`` for unreached vertices."""
+        from repro.algorithms.semiring import INT_INF
+        ct = self._semiring_plan("ksource_bfs")
+        roots = np.atleast_1d(np.asarray(roots, np.int32))
+        res = ct.run_batched(roots)
+        self._m_portfolio.inc()
+        depths = np.asarray(res.values)[:, :self.n_vertices]
+        return np.where(depths >= INT_INF, -1, depths)
 
     def step(self):
         """One engine tick: advance every active query by one layer.

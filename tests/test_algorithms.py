@@ -1,0 +1,347 @@
+"""Oracle tests for the semiring algorithm portfolio (ISSUE 10).
+
+Every portfolio algorithm (sssp / cc / ksource_bfs) must match a
+serial numpy oracle — Dijkstra over the synthetic hash weights,
+union-find connected components, per-source BFS depths — on all four
+graph families from `test_formats`, over both streamed layouts
+(csr / sell), both frontier representations (packed / unpacked), and
+both entry shapes (single root / root batch).  Plus: BFS itself is
+bit-identical whether it runs through the classic engine or as the
+(select2nd, min) instance of the semiring machinery, the plan cache
+keeps one trace per (geometry, spec), the serve tier answers
+shortest-path / component / k-source queries, and invalid
+spec/format combinations fail with typed errors.
+"""
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.bfs as bfs
+from repro.algorithms.semiring import (INT_INF, SEMIRING_ALGORITHMS,
+                                       edge_weight, edge_weight_np)
+from repro.api.plan import clear_cache, plan
+from repro.api.spec import TraversalSpec
+from repro.core import csr as csr_mod
+from repro.core import rmat
+from repro.core.bfs_serial import bfs_serial
+from repro.core.rmat import EdgeList
+from repro.formats import registry
+from repro.serve.graph_engine import GraphEngine
+
+ALGORITHMS = SEMIRING_ALGORITHMS
+FORMATS = ("csr", "sell")
+#: SSSP walks one delta bucket per driver iteration, so the path
+#: graph needs ~max-dist/delta iterations — far past the BFS-diameter
+#: default of 64; the while_loop exits early so the ceiling is free
+MAX_LAYERS = 512
+
+
+def _csr_from_pairs(pairs, n):
+    src = jnp.asarray([a for a, b in pairs] + [b for a, b in pairs],
+                      jnp.int32)
+    dst = jnp.asarray([b for a, b in pairs] + [a for a, b in pairs],
+                      jnp.int32)
+    return csr_mod.from_edges(EdgeList(src, dst, n))
+
+
+GRAPHS = {
+    "rmat9": lambda: csr_mod.from_edges(
+        rmat.generate(jax.random.PRNGKey(3), scale=9, edgefactor=16)),
+    "star": lambda: _csr_from_pairs(
+        [(0, i) for i in range(1, 128)], 128),
+    "path": lambda: _csr_from_pairs(
+        [(i, i + 1) for i in range(63)], 64),
+    "disconnected": lambda: _csr_from_pairs(
+        [(0, i) for i in range(1, 64)]
+        + [(i, i + 1) for i in range(64, 127)], 128),
+}
+ROOTS = {"rmat9": 17, "star": 0, "path": 0, "disconnected": 0}
+BATCH_ROOTS = {"rmat9": (17, 5, 100), "star": (0, 1, 7),
+               "path": (0, 13, 63), "disconnected": (0, 64, 100)}
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {k: v() for k, v in GRAPHS.items()}
+
+
+@pytest.fixture(scope="module")
+def formats(graphs):
+    return {(gname, fname): registry.get(fname).from_graph(g)
+            for gname, g in graphs.items() for fname in FORMATS}
+
+
+# -- serial numpy oracles ------------------------------------------------
+
+def _adjacency(csr):
+    cs = np.asarray(csr.colstarts)
+    rows = np.asarray(csr.rows[: csr.n_edges])
+    return [rows[cs[u]:cs[u + 1]] for u in range(csr.n_vertices)]
+
+
+def dijkstra_np(csr, root):
+    """float32-accumulating Dijkstra over the synthetic hash weights
+    — the same dtype and per-edge sum order as the device relax, so
+    distances are comparable bit-for-bit."""
+    adj = _adjacency(csr)
+    dist = np.full(csr.n_vertices, np.inf, np.float32)
+    dist[root] = np.float32(0)
+    pq = [(0.0, int(root))]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        for v in adj[u]:
+            nd = np.float32(dist[u]
+                            + edge_weight_np(np.int32(u), np.int32(v)))
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (float(nd), int(v)))
+    return dist
+
+
+def components_np(csr):
+    """Union-find CC: every vertex -> smallest id in its component."""
+    parent = np.arange(csr.n_vertices)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    adj = _adjacency(csr)
+    for u in range(csr.n_vertices):
+        for v in adj[u]:
+            ru, rv = find(u), find(int(v))
+            if ru != rv:
+                parent[max(ru, rv)] = min(ru, rv)
+    return np.asarray([find(x) for x in range(csr.n_vertices)])
+
+
+def depths_np(csr, root):
+    """Per-source BFS depths from the serial oracle (-1 unreached)."""
+    _, depth = bfs_serial(csr.rows, csr.colstarts, csr.n_vertices,
+                          root)
+    return depth
+
+
+def _spec(algorithm, packed):
+    return TraversalSpec(algorithm=algorithm, policy="topdown",
+                         packed=packed, max_layers=MAX_LAYERS)
+
+
+def _check_sssp_tree(csr, dist, parent, root):
+    """parent is a valid shortest-path tree over the reached set."""
+    adj = _adjacency(csr)
+    reached = np.isfinite(dist)
+    assert parent[root] == root
+    for v in np.nonzero(reached)[0]:
+        if v == root:
+            continue
+        p = parent[v]
+        assert 0 <= p < csr.n_vertices and reached[p]
+        assert v in adj[p]
+        w = edge_weight_np(np.int32(p), np.int32(v))
+        assert dist[v] == np.float32(dist[p] + w)
+
+
+# -- oracle equivalence: every algorithm x family x layout x packing -----
+
+@pytest.mark.parametrize("packed", (True, False),
+                         ids=("packed", "unpacked"))
+@pytest.mark.parametrize("fmt_name", FORMATS)
+@pytest.mark.parametrize("graph_name", list(GRAPHS))
+def test_sssp_matches_dijkstra(graphs, formats, graph_name, fmt_name,
+                               packed):
+    g = graphs[graph_name]
+    fmt = formats[(graph_name, fmt_name)]
+    ct = plan(fmt, _spec("sssp", packed))
+    root = ROOTS[graph_name]
+    oracle = dijkstra_np(g, root)
+
+    res = ct.run(root)
+    dist = np.asarray(res.values)[: g.n_vertices]
+    np.testing.assert_array_equal(dist, oracle)
+    _check_sssp_tree(g, dist,
+                     np.asarray(res.state.parent)[: g.n_vertices],
+                     root)
+
+    resb = ct.run_batched(np.asarray(BATCH_ROOTS[graph_name]))
+    for i, r in enumerate(BATCH_ROOTS[graph_name]):
+        np.testing.assert_array_equal(
+            np.asarray(resb.values)[i, : g.n_vertices],
+            dijkstra_np(g, r))
+
+
+@pytest.mark.parametrize("packed", (True, False),
+                         ids=("packed", "unpacked"))
+@pytest.mark.parametrize("fmt_name", FORMATS)
+@pytest.mark.parametrize("graph_name", list(GRAPHS))
+def test_cc_matches_union_find(graphs, formats, graph_name, fmt_name,
+                               packed):
+    g = graphs[graph_name]
+    fmt = formats[(graph_name, fmt_name)]
+    ct = plan(fmt, _spec("cc", packed))
+    oracle = components_np(g)
+
+    # the root seeds nothing (every vertex starts in the frontier):
+    # any root gives the same fixpoint, batching just repeats it
+    res = ct.run(ROOTS[graph_name])
+    np.testing.assert_array_equal(
+        np.asarray(res.values)[: g.n_vertices], oracle)
+
+    resb = ct.run_batched(np.asarray(BATCH_ROOTS[graph_name]))
+    for i in range(len(BATCH_ROOTS[graph_name])):
+        np.testing.assert_array_equal(
+            np.asarray(resb.values)[i, : g.n_vertices], oracle)
+
+
+@pytest.mark.parametrize("packed", (True, False),
+                         ids=("packed", "unpacked"))
+@pytest.mark.parametrize("fmt_name", FORMATS)
+@pytest.mark.parametrize("graph_name", list(GRAPHS))
+def test_ksource_matches_serial_depths(graphs, formats, graph_name,
+                                       fmt_name, packed):
+    g = graphs[graph_name]
+    fmt = formats[(graph_name, fmt_name)]
+    ct = plan(fmt, _spec("ksource_bfs", packed))
+    root = ROOTS[graph_name]
+
+    res = ct.run(root)
+    got = np.asarray(res.values)[: g.n_vertices]
+    np.testing.assert_array_equal(np.where(got >= INT_INF, -1, got),
+                                  depths_np(g, root))
+
+    # the k-source contract: ONE traversal, a (k, V) depth matrix
+    roots = np.asarray(BATCH_ROOTS[graph_name])
+    resb = ct.run_batched(roots)
+    depths = np.asarray(resb.values)[:, : g.n_vertices]
+    assert depths.shape == (len(roots), g.n_vertices)
+    for i, r in enumerate(roots):
+        np.testing.assert_array_equal(
+            np.where(depths[i] >= INT_INF, -1, depths[i]),
+            depths_np(g, int(r)))
+
+
+# -- BFS unchanged: bit-parity regression --------------------------------
+
+@pytest.mark.parametrize("fmt_name", FORMATS)
+def test_bfs_bit_parity_with_ksource_instance(graphs, formats,
+                                              fmt_name):
+    """BFS as the (select2nd, min) semiring instance discovers the
+    exact same reach set and depths as the classic engine — and the
+    classic engine's own results still validate against the serial
+    oracle (the default path is untouched by the refactor)."""
+    g = graphs["rmat9"]
+    fmt = formats[("rmat9", fmt_name)]
+    root = ROOTS["rmat9"]
+    eng_res = plan(fmt, TraversalSpec(policy="topdown")).run(root)
+    parent = np.asarray(eng_res.state.parent)[: g.n_vertices]
+    oracle_depth = depths_np(g, root)
+    assert ((parent < g.n_vertices) == (oracle_depth >= 0)).all()
+
+    sem = plan(fmt, _spec("ksource_bfs", True)).run(root)
+    got = np.asarray(sem.values)[: g.n_vertices]
+    np.testing.assert_array_equal(
+        np.where(got >= INT_INF, -1, got), oracle_depth)
+    # identical packed visited words: same reach set, bit for bit
+    np.testing.assert_array_equal(np.asarray(sem.state.visited),
+                                  np.asarray(eng_res.state.visited))
+
+
+def test_edge_weight_jnp_numpy_parity():
+    """The device and oracle weight functions are the same hash."""
+    u = jnp.arange(512, dtype=jnp.int32)
+    v = jnp.arange(512, dtype=jnp.int32)[::-1]
+    dev = np.asarray(edge_weight(u, v))
+    host = edge_weight_np(np.arange(512, dtype=np.int32),
+                          np.arange(512, dtype=np.int32)[::-1])
+    np.testing.assert_array_equal(dev, host)
+    assert (dev >= 1.0).all() and (dev < 2.0).all()
+    # symmetric: weight(u, v) == weight(v, u)
+    np.testing.assert_array_equal(dev, np.asarray(edge_weight(v, u)))
+
+
+# -- plan cache: <= 1 trace per (geometry, spec) -------------------------
+
+def test_one_trace_per_geometry_and_spec(graphs):
+    clear_cache()
+    fmt = registry.get("csr").from_graph(graphs["rmat9"])
+    spec = _spec("sssp", True)
+    ct = plan(fmt, spec)
+    for r in (17, 5, 100):
+        ct.run(r)
+    ct.run_batched(np.asarray([17, 5, 100]))
+    ct2 = plan(fmt, spec)
+    ct2.run(3)
+    assert ct2.executable is ct.executable
+    # one trace for the exact-width batch=1 shape, one for batch=3
+    assert ct.executable.traces <= 2
+
+
+# -- spec/format validation ----------------------------------------------
+
+def test_semiring_values_accepted_and_resolved(graphs):
+    fmt = registry.get("csr").from_graph(graphs["path"])
+    for alg in ALGORITHMS:
+        resolved = _spec(alg, True).resolve(fmt)
+        assert resolved.algorithm == alg
+        assert resolved.pipeline == "fused_gather"
+        assert resolved.prefetch_depth == 0
+
+
+def test_semiring_rejects_unsupported_combos(graphs):
+    fmt = registry.get("csr").from_graph(graphs["path"])
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        TraversalSpec(algorithm="bellman_ford").validate()
+    with pytest.raises(ValueError, match="fused_gather"):
+        TraversalSpec(algorithm="sssp",
+                      pipeline="megakernel").validate()
+    with pytest.raises(ValueError, match="fused_gather"):
+        TraversalSpec(algorithm="cc",
+                      pipeline="persistent").validate()
+    with pytest.raises(ValueError, match="prefetch"):
+        TraversalSpec(algorithm="sssp", prefetch_depth=2).validate()
+    bmp = registry.get("bitmap").from_graph(graphs["path"])
+    with pytest.raises(ValueError, match="supported_semirings"):
+        _spec("sssp", True).validate(bmp)
+    with pytest.raises(NotImplementedError, match="single-layer"):
+        ct = plan(fmt, _spec("sssp", True))
+        st = bfs.traverse(graphs["path"], 0).state
+        ct.layer_step(st)
+
+
+# -- serve tier: portfolio queries ---------------------------------------
+
+def test_graph_engine_portfolio_queries(graphs):
+    g = graphs["disconnected"]
+    eng = GraphEngine(g, batch_slots=2)
+    dist, parent = eng.shortest_paths(0)
+    oracle = dijkstra_np(g, 0)
+    np.testing.assert_array_equal(dist, oracle)
+    assert (parent[np.isinf(oracle)] == -1).all()
+
+    labels, n_comp = eng.components()
+    np.testing.assert_array_equal(labels, components_np(g))
+    assert n_comp == 2
+
+    depths = eng.ksource_depths([0, 64])
+    np.testing.assert_array_equal(depths[0], depths_np(g, 0))
+    np.testing.assert_array_equal(depths[1], depths_np(g, 64))
+
+    with pytest.raises(ValueError, match="shortest_paths"):
+        GraphEngine(g, spec=TraversalSpec(algorithm="sssp"))
+
+
+def test_trace_run_semiring_span(graphs):
+    from repro.obs.trace import SEMIRING_SPAN, trace_run
+    fmt = registry.get("csr").from_graph(graphs["star"])
+    tr = trace_run(fmt, 0, spec=_spec("sssp", True))
+    names = [s.name for s in tr.tracer.spans]
+    assert SEMIRING_SPAN in names
+    assert len(tr.stats) == len(tr.layer_seconds) >= 1
+    assert sum(s.edges_examined for s in tr.stats) > 0
